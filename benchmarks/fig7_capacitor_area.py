@@ -1,0 +1,30 @@
+"""Fig. 7(a): capacitor network total capacitance vs quantization bit width.
+
+Paper claims: for one 8b CAAT-L the hybrid binary-C-2C network needs 96C vs
+1032C fully-binary (10.8x).  The binary curve grows exponentially with bit
+width; the hybrid curve grows linearly.
+"""
+from __future__ import annotations
+
+from repro.core import caat, energy
+from benchmarks.common import emit
+
+
+def main() -> None:
+    curve = energy.capacitor_area_curve(bit_widths=(4, 5, 6, 7, 8, 9, 10))
+    for bits, b_c, h_c in zip(curve["bits"], curve["binary_C"],
+                              curve["hybrid_C"]):
+        emit(f"fig7a_capacitance_{bits}b", 0.0,
+             f"binary={b_c:.0f}C hybrid={h_c:.0f}C ratio={b_c/h_c:.1f}x")
+    b8 = caat.capacitor_total_binary(8)
+    h8 = caat.capacitor_total_hybrid(8)
+    ratio = b8 / h8
+    ok = abs(h8 - 96) < 1.5 and 10.0 <= ratio <= 11.5
+    emit("fig7a_8b_claim", 0.0,
+         f"hybrid={h8:.0f}C (paper 96C) ratio={ratio:.1f}x (paper 10.8x) "
+         f"pass={ok}")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

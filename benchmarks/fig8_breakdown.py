@@ -1,0 +1,37 @@
+"""Fig. 8: energy / area / latency breakdowns of the macro.
+
+Paper claims: ADC is only 3% of area and 8% of energy; 51.2 GOPS at 1 GHz.
+"""
+from __future__ import annotations
+
+from repro.core import energy
+from benchmarks.common import emit
+
+
+def main() -> None:
+    rep = energy.breakdown(v_dd=1.0, f_main_hz=1e9)
+    total = rep.total_per_conversion_j
+    for k, v in rep.components_j.items():
+        emit(f"fig8_energy_{k}", 0.0, f"{v*1e12:.1f}pJ share={v/total:.2%}")
+    adc_share = rep.components_j["adc"] / total
+    emit("fig8_adc_energy_share", 0.0,
+         f"{adc_share:.1%} (paper 8%) pass={abs(adc_share-0.08)<0.01}")
+    assert abs(adc_share - 0.08) < 0.01
+
+    area = energy.area_breakdown_mm2(1.0)
+    emit("fig8_adc_area_share", 0.0,
+         f"{area['adc']:.1%} (paper 3%) pass={abs(area['adc']-0.03)<0.005}")
+    assert abs(area["adc"] - 0.03) < 0.005
+
+    lat = energy.latency_breakdown_ns(1e9)
+    tot_ns = sum(lat.values())
+    for k, v in lat.items():
+        emit(f"fig8_latency_{k}", 0.0, f"{v:.1f}ns share={v/tot_ns:.1%}")
+    gops = energy.throughput_ops(1e9) / 1e9
+    emit("fig8_throughput_1GHz", 0.0,
+         f"{gops:.1f} GOPS (paper 51.2) pass={abs(gops-51.2)<0.5}")
+    assert abs(gops - 51.2) < 0.5
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Single-pass fused W8A8 kernel vs the 8-pass bit-serial baseline.
+
+The paper's architectural claim in kernel form: one conversion per MAC
+(fused epilogue, one pass over the data) vs one conversion per activation
+bit (8 passes + shift-add).  On CPU both run in interpret mode, so absolute
+microseconds are meaningless — the *structural* costs are reported: passes
+over the activation matrix, accumulator conversions per output, and bytes
+moved per output.  On TPU hardware the same wrappers dispatch the compiled
+Pallas kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import quant
+from repro.kernels.bitserial_matmul import bitserial_matmul
+from repro.kernels.cim_matmul import cim_matmul
+
+
+def main() -> None:
+    m, k, n = 128, 512, 128
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.randint(k1, (m, k), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(k2, (k, n), -128, 128, jnp.int32).astype(jnp.int8)
+    ws = jnp.ones((n,))
+    a_s = jnp.float32(1.0)
+
+    t_fused = time_call(
+        lambda: cim_matmul(a, w, a_s, ws, relu=True, bm=64, bn=64, bk=256),
+        iters=5)
+    t_serial = time_call(
+        lambda: bitserial_matmul(a, w, a_s, ws, relu=True, bm=64, bn=64,
+                                 bk=256),
+        iters=5)
+    emit("kernel_fused_w8a8", t_fused,
+         "passes=1 conversions_per_output=1")
+    emit("kernel_bitserial", t_serial,
+         f"passes=8 conversions_per_output=8 slowdown={t_serial/t_fused:.2f}x")
+
+    # Structural byte accounting (per output element, int8 in / f32 out):
+    bytes_fused = k * 2 / n + 4          # read a,w rows once + 1 write
+    bytes_serial = 8 * (k * 2 / n + 4)   # 8 plane passes + 8 partial writes
+    emit("kernel_bytes_per_output", 0.0,
+         f"fused={bytes_fused:.0f}B bitserial={bytes_serial:.0f}B "
+         f"ratio={bytes_serial/bytes_fused:.1f}x (paper: 8x conversions)")
+
+    # XLA (non-Pallas) reference path for scale
+    t_xla = time_call(
+        lambda: quant.w8a8_matmul(a, w, a_s, ws, relu=True), iters=5)
+    emit("kernel_xla_w8a8", t_xla, "jnp int8 dot path")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines and asserts the paper's
+quantitative claims (tolerances documented per module).
+
+  fig7_capacitor_area   Fig. 7(a)  capacitor area vs bit width (1032C->96C)
+  fig7_energy           Fig. 7(b)  8x ADC, ~2x ReLU early-stop, 1.6x macro
+  fig8_breakdown        Fig. 8     ADC 8% energy / 3% area; 51.2 GOPS
+  table1_metrics        Table I    GOPS + TOPS/W operating points
+  fig9_nonlinearity     Fig. 9     CAAT >=7b in ~70% chips; ADC INL 1.2 LSB
+  fig10_accuracy        Fig. 10    fine-tune accuracy recovery (synthetic)
+  kernel_throughput     §II.B      single-pass vs bit-serial kernels
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig7_capacitor_area, fig7_energy, fig8_breakdown,
+                            fig9_nonlinearity, fig10_accuracy,
+                            kernel_throughput, table1_metrics)
+    modules = [
+        ("fig7_capacitor_area", fig7_capacitor_area.main),
+        ("fig7_energy", fig7_energy.main),
+        ("fig8_breakdown", fig8_breakdown.main),
+        ("table1_metrics", table1_metrics.main),
+        ("fig9_nonlinearity", fig9_nonlinearity.main),
+        ("fig10_accuracy", fig10_accuracy.main),
+        ("kernel_throughput", kernel_throughput.main),
+    ]
+    failures = []
+    for name, fn in modules:
+        print(f"# --- {name} ---")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} OK in {time.time()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print("# FAILURES:", failures)
+        sys.exit(1)
+    print("# all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: CD-CiM — a JAX/TPU framework built around the single-conversion
+W8A8 datapath of Yin et al. 2022 (65nm charge-domain SRAM CiM macro)."""
+
+__version__ = "1.0.0"

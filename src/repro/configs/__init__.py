@@ -1,0 +1,123 @@
+"""Config registry: --arch <id> resolution + reduced smoke variants +
+dry-run input specs for every (arch x shape) cell."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (SHAPES, ModelConfig, MoEConfig, ShapeConfig,
+                                SSMConfig, TrainConfig)
+
+ARCH_IDS = (
+    "moonshot-v1-16b-a3b",
+    "granite-moe-1b-a400m",
+    "stablelm-12b",
+    "qwen3-8b",
+    "h2o-danube-3-4b",
+    "deepseek-7b",
+    "whisper-large-v3",
+    "qwen2-vl-72b",
+    "mamba2-1.3b",
+    "zamba2-2.7b",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    cfg = mod.config()
+    assert cfg.name == arch_id
+    return cfg
+
+
+def reduced_config(arch_id: str, *, n_layers: int = 2, d_model: int = 64,
+                   vocab: int = 256) -> ModelConfig:
+    """Small same-family config for CPU smoke tests."""
+    cfg = get_config(arch_id)
+    kw = dict(
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=4,
+        n_kv_heads=(4 if cfg.n_kv_heads == cfg.n_heads else 2),
+        d_ff=4 * d_model if cfg.d_ff else 0,
+        vocab=vocab,
+        head_dim=16,
+        dtype="float32",
+    )
+    if cfg.moe is not None:
+        kw["moe"] = MoEConfig(
+            n_experts=8, top_k=min(cfg.moe.top_k, 4), d_ff_expert=32,
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1),
+            capacity_factor=cfg.moe.capacity_factor)
+    if cfg.ssm is not None:
+        kw["ssm"] = SSMConfig(d_state=16, conv_k=cfg.ssm.conv_k, expand=2,
+                              headdim=16, chunk=8)
+    if cfg.hybrid_attn_interval:
+        kw["hybrid_attn_interval"] = 2
+    if cfg.n_enc_layers:
+        kw["n_enc_layers"] = n_layers
+    if cfg.sliding_window is not None:
+        kw["sliding_window"] = 8
+    if cfg.mrope_sections is not None:
+        kw["mrope_sections"] = (4, 2, 2)   # head_dim/2 = 8 in reduced form
+    return dataclasses.replace(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins; zero allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runnable?, reason).  long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skip: pure full-attention arch at 524288 context "
+                       "(quadratic prefill / unbounded KV) — see DESIGN.md §5")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct batch for train/prefill steps (weak-type-correct,
+    shardable, no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    batch: dict = {}
+    if cfg.frontend == "vision_stub":
+        batch["embeds"] = _sds((b, s, cfg.d_model), bf16)
+        batch["positions"] = _sds((3, b, s), i32)
+    else:
+        batch["tokens"] = _sds((b, s), i32)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = _sds((b, s, cfg.d_model), bf16)
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, s), i32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct (batch, caches) for one serve_step at a KV length of
+    shape.seq_len."""
+    from repro.models import transformer
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    batch: dict = {"tokens": _sds((b, 1), i32)}
+    if cfg.frontend == "vision_stub":
+        batch["positions"] = _sds((3, b, 1), i32)
+    enc_out_arr = None
+    if cfg.arch_type == "encdec":
+        enc_out_arr = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)
+    caches = jax.eval_shape(
+        lambda: transformer.init_caches(
+            cfg, b, s, bf16,
+            enc_out=(jnp.zeros(enc_out_arr.shape, bf16)
+                     if enc_out_arr is not None else None)))
+    return {"batch": batch, "caches": caches}

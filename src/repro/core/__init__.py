@@ -1,0 +1,18 @@
+"""Core CD-CiM library: the paper's contribution as composable JAX modules.
+
+Layers (bottom-up):
+  numerics     Eq.(1) +/-1-bit codec and integer oracles
+  caat         charge-domain analog adder tree (mismatch, parasitics, INL)
+  adc          ReLU-optimized single 8b SAR ADC
+  macro        full-matmul macro simulation (row tiling, digital accumulation)
+  calibration  output-based fine-tune compensation
+  quant        W8A8 static quantization + QAT + idealized datapaths
+  executor     LinearExecutor: exact | qat | w8a8 | w8a8_kernel | bitserial | cim
+  energy       analytic energy/area/latency model (Table I, Fig. 7/8)
+"""
+from repro.core import adc, caat, calibration, energy, executor, macro, numerics, quant
+
+__all__ = [
+    "adc", "caat", "calibration", "energy", "executor", "macro", "numerics",
+    "quant",
+]

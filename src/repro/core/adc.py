@@ -1,0 +1,114 @@
+"""ReLU-optimized 8b SAR ADC behavioral model.
+
+One ADC digitizes the CAAT-R voltage for the whole array — one conversion per
+8b x 8b MAC (prior bit-serial designs burn one conversion per activation bit).
+The SAR resolves MSB (sign) first; when the macro output feeds a ReLU, a
+negative sign bit lets the ADC *early-stop to zero*, skipping the remaining
+7 bit-cycles (~2x average ADC energy saving, Fig. 7b).
+
+Non-ideality: an INL profile (deterministic smooth bow + random DNL walk,
+sampled once per chip) with max |INL| configurable — the measured chip shows
+max 1.2 LSB (Fig. 9b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AdcConfig:
+    n_bits: int = 8
+    max_inl_lsb: float = 0.0      # peak INL magnitude, in LSB
+    bow_fraction: float = 0.6     # share of INL in the smooth (bow) component
+    relu: bool = True             # fuse ReLU via MSB early-stop
+    sar_cycles: int = 10          # bit-cycles per full conversion (8b + margin)
+
+    @property
+    def n_codes(self) -> int:
+        return 1 << self.n_bits
+
+    @property
+    def code_min(self) -> int:
+        return -(1 << (self.n_bits - 1))
+
+    @property
+    def code_max(self) -> int:
+        return (1 << (self.n_bits - 1)) - 1
+
+
+AdcSample = dict[str, Any]
+
+
+def sample_adc(key: jax.Array, cfg: AdcConfig) -> AdcSample:
+    """Draw one chip's INL profile as a per-code offset LUT (in LSB)."""
+    n = cfg.n_codes
+    k_bow, k_walk, k_phase = jax.random.split(key, 3)
+    x = jnp.linspace(-1.0, 1.0, n)
+    phase = jax.random.uniform(k_phase, (), minval=-0.3, maxval=0.3)
+    bow = jnp.sin(jnp.pi * (x + phase)) + 0.35 * x**3
+    bow = bow / jnp.max(jnp.abs(bow))
+    walk = jnp.cumsum(jax.random.normal(k_walk, (n,)))
+    walk = walk - jnp.linspace(walk[0], walk[-1], n)  # endpoint-corrected
+    denom = jnp.maximum(jnp.max(jnp.abs(walk)), 1e-9)
+    walk = walk / denom
+    inl = cfg.max_inl_lsb * (cfg.bow_fraction * bow + (1.0 - cfg.bow_fraction) * walk)
+    # re-normalize to hit max_inl exactly
+    peak = jnp.maximum(jnp.max(jnp.abs(inl)), 1e-9)
+    inl = jnp.where(cfg.max_inl_lsb > 0, inl * (cfg.max_inl_lsb / peak), inl * 0.0)
+    return {"inl_lut": inl.astype(jnp.float32)}
+
+
+def ideal_adc(cfg: AdcConfig) -> AdcSample:
+    return {"inl_lut": jnp.zeros((cfg.n_codes,), jnp.float32)}
+
+
+def convert(
+    v: jax.Array, sample: AdcSample, cfg: AdcConfig, *, relu: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Digitize v in [-1, 1] (fraction of full scale) to signed codes.
+
+    Returns (codes int32, negative_fraction_stats).  `negative_fraction` is the
+    per-call fraction of early-stopped (negative) conversions — the statistic
+    the energy model consumes for the ReLU saving.
+    """
+    relu = cfg.relu if relu is None else relu
+    half = 1 << (cfg.n_bits - 1)
+    ideal = v * half
+    # INL perturbs the transfer curve: look up by the (clipped) ideal code.
+    idx = jnp.clip(jnp.round(ideal), cfg.code_min, cfg.code_max).astype(jnp.int32)
+    inl = sample["inl_lut"][idx - cfg.code_min]
+    code = jnp.clip(jnp.round(ideal + inl), cfg.code_min, cfg.code_max).astype(
+        jnp.int32
+    )
+    negative = (code < 0).astype(jnp.float32)
+    neg_frac = jnp.mean(negative)
+    if relu:
+        code = jnp.maximum(code, 0)
+    return code, neg_frac
+
+
+def adc_inl(sample: AdcSample, cfg: AdcConfig) -> np.ndarray:
+    """Measured-style INL sweep (LSB), endpoint corrected (Fig. 9b)."""
+    inl = np.asarray(sample["inl_lut"], np.float64)
+    x = np.arange(inl.size, dtype=np.float64)
+    line = inl[0] + (inl[-1] - inl[0]) / (x[-1] - x[0]) * x
+    return inl - line
+
+
+def average_conversion_cycles(neg_fraction: jax.Array, cfg: AdcConfig) -> jax.Array:
+    """Average SAR bit-cycles per conversion with ReLU early-stop.
+
+    Negative results stop after the sign bit (1 cycle); positive results run
+    all cycles.  With ~55% negative pre-activations this is the paper's ~2x
+    ADC energy saving.
+    """
+    full = float(cfg.sar_cycles)
+    stopped = 1.0  # sign-bit cycle only
+    if not cfg.relu:
+        return jnp.asarray(full)
+    return neg_fraction * stopped + (1.0 - neg_fraction) * full

@@ -1,0 +1,228 @@
+"""Charge-domain analog adder tree (CAAT) behavioral model.
+
+The CAAT combines the 81 in-column charge-sharing results of one macro:
+
+  - **in-column** (S1): the M active rows of column (bank k, weight-bit i)
+    couple charge onto the source line with equal load caps, producing the
+    *average* V_col[k, i] = (1/M) sum_j a_j[k] * w_j[i], each term in {-1,+1}.
+  - **in-bank** (S2): the 9 column outputs of bank k are merged through the
+    hybrid binary/C-2C capacitor ladder, computing a capacitance-weighted
+    average with nominal weights equal to the weight-bit ladder
+    (64, 32, 16, 8 binary-weighted; 4, 2, 1, 0.5, 0.5 via C-2C).
+  - **in-array** (S3, CAAT-R): the 9 bank outputs are merged with nominal
+    weights equal to the activation-bit ladder.
+
+Charge redistribution computes *weighted averages* (sum c_i v_i / sum c_i), so
+the ideal root voltage is A.W / (M * W_SUM * A_SUM) — a pure rescale of the
+exact MAC.  Non-idealities modeled per fabricated "chip sample":
+
+  * capacitor random mismatch: each effective ladder weight w gets a relative
+    error eps ~ N(0, sigma_unit / sqrt(w / w_min)) (Pelgrom: larger caps match
+    better);
+  * C-2C parasitics: every C-2C stage between a tap and the bank output
+    attenuates by (1 - gamma) per stage and leaks a small signal-independent
+    offset; the binary section has depth 0 (this is why the paper keeps the
+    top 4 bits binary — C-2C alone only matches 5-6 bits [7]);
+  * a small global gain error and input-referred offset per bank / root.
+
+`sample_caat` draws one chip; `caat_combine` applies the (possibly non-ideal)
+two-level weighted average; `caat_inl` sweeps the static transfer curve and
+reports INL in LSB@8b, reproducing the Fig. 9(a) histogram experiment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import numerics
+
+
+@dataclasses.dataclass(frozen=True)
+class CaatConfig:
+    """Static description of the adder tree."""
+
+    n_act_bits: int = 9            # banks (one per activation bit)
+    n_w_bits: int = 9              # columns per bank (one per weight bit)
+    n_binary_msbs: int = 4         # top bits implemented with binary-weighted caps
+    sigma_unit: float = 0.0        # relative mismatch of a unit (1C) capacitor
+    c2c_stage_gamma: float = 0.0   # per-C-2C-stage parasitic attenuation
+    gain_sigma: float = 0.0        # global gain error std (per bank / root)
+    offset_sigma: float = 0.0      # additive offset std, in fractions of FS
+
+    @property
+    def act_weights(self) -> np.ndarray:
+        return numerics.bit_weights(self.n_act_bits - 1)
+
+    @property
+    def w_weights(self) -> np.ndarray:
+        return numerics.bit_weights(self.n_w_bits - 1)
+
+
+# A "chip sample": effective (mismatched) weights + offsets, as a pytree.
+CaatSample = dict[str, Any]
+
+
+def _mismatched_weights(key, nominal: np.ndarray, cfg: CaatConfig) -> jax.Array:
+    """Apply Pelgrom mismatch + C-2C stage attenuation to one ladder."""
+    nominal = jnp.asarray(nominal, jnp.float32)
+    w_min = float(np.min(nominal))
+    sigma = cfg.sigma_unit / jnp.sqrt(nominal / w_min)
+    eps = jax.random.normal(key, nominal.shape, jnp.float32) * sigma
+    # C-2C depth: 0 for the binary MSB section; growing with position after it.
+    n = nominal.shape[-1]
+    depth = jnp.maximum(jnp.arange(n) - (cfg.n_binary_msbs - 1), 0).astype(jnp.float32)
+    atten = (1.0 - cfg.c2c_stage_gamma) ** depth
+    return nominal * (1.0 + eps) * atten
+
+
+def sample_caat(key: jax.Array, cfg: CaatConfig) -> CaatSample:
+    """Draw one fabricated chip's CAAT (all effective weights and offsets)."""
+    k_bank, k_root, k_gain_b, k_gain_r, k_off_b, k_off_r = jax.random.split(key, 6)
+    bank_keys = jax.random.split(k_bank, cfg.n_act_bits)
+    # Per-bank column ladders [n_act_bits, n_w_bits].
+    bank_w = jax.vmap(lambda k: _mismatched_weights(k, cfg.w_weights, cfg))(bank_keys)
+    # Root ladder [n_act_bits] (activation-bit weights; same hybrid structure).
+    root_w = _mismatched_weights(k_root, cfg.act_weights, cfg)
+    bank_gain = 1.0 + cfg.gain_sigma * jax.random.normal(
+        k_gain_b, (cfg.n_act_bits,), jnp.float32
+    )
+    root_gain = 1.0 + cfg.gain_sigma * jax.random.normal(k_gain_r, (), jnp.float32)
+    bank_off = cfg.offset_sigma * jax.random.normal(
+        k_off_b, (cfg.n_act_bits,), jnp.float32
+    )
+    root_off = cfg.offset_sigma * jax.random.normal(k_off_r, (), jnp.float32)
+    return {
+        "bank_w": bank_w,
+        "root_w": root_w,
+        "bank_gain": bank_gain,
+        "root_gain": root_gain,
+        "bank_off": bank_off,
+        "root_off": root_off,
+    }
+
+
+def ideal_caat(cfg: CaatConfig) -> CaatSample:
+    """The mismatch-free chip (useful as an oracle)."""
+    return {
+        "bank_w": jnp.tile(jnp.asarray(cfg.w_weights), (cfg.n_act_bits, 1)),
+        "root_w": jnp.asarray(cfg.act_weights),
+        "bank_gain": jnp.ones((cfg.n_act_bits,), jnp.float32),
+        "root_gain": jnp.ones((), jnp.float32),
+        "bank_off": jnp.zeros((cfg.n_act_bits,), jnp.float32),
+        "root_off": jnp.zeros((), jnp.float32),
+    }
+
+
+@jax.jit
+def caat_combine(v_col: jax.Array, sample: CaatSample) -> jax.Array:
+    """Two-level charge-redistribution combine.
+
+    v_col: [..., n_act_bits, n_w_bits] in-column averages (each in [-1, 1]).
+    Returns the CAAT-R voltage [...], normalized so the ideal value is
+    A.W / (M * A_SUM * W_SUM) — i.e. |v_root| <= 1 always.
+    """
+    bank_w = sample["bank_w"]                       # [K, I]
+    # In-bank: per-bank capacitance-weighted average over weight bits.
+    v_bank = jnp.einsum("...ki,ki->...k", v_col, bank_w) / jnp.sum(bank_w, -1)
+    v_bank = v_bank * sample["bank_gain"] + sample["bank_off"]
+    # In-array: root capacitance-weighted average over activation bits.
+    root_w = sample["root_w"]
+    v_root = jnp.einsum("...k,k->...", v_bank, root_w) / jnp.sum(root_w)
+    return v_root * sample["root_gain"] + sample["root_off"]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def caat_transfer(codes: jax.Array, sample: CaatSample, cfg: CaatConfig) -> jax.Array:
+    """Static transfer curve: drive the tree with the bit pattern of each code.
+
+    codes: int array of target MAC codes in [-128, 127] (single-row drive:
+    activation = code, weight = +1 -> v_col[k, i] = a_k * w_i).  Returns the
+    root voltage for each code (ideal: code / (A_SUM * W_SUM) scaled to code
+    LSBs).  Used for INL extraction.
+    """
+    a_bits = numerics.encode_pm1(codes, cfg.n_act_bits - 1).astype(jnp.float32)
+    w_bits = numerics.encode_pm1(
+        jnp.ones_like(codes) * 1, cfg.n_w_bits - 1
+    ).astype(jnp.float32)
+    v_col = a_bits[..., :, None] * w_bits[..., None, :]
+    return caat_combine(v_col, sample)
+
+
+def caat_inl(sample: CaatSample, cfg: CaatConfig) -> np.ndarray:
+    """INL of the static transfer curve, in LSB at 8b, endpoint-corrected."""
+    codes = jnp.arange(-128, 128)
+    v = np.asarray(caat_transfer(codes, sample, cfg), np.float64)
+    # Endpoint-fit line (standard INL definition).
+    x = np.arange(v.size, dtype=np.float64)
+    slope = (v[-1] - v[0]) / (x[-1] - x[0])
+    line = v[0] + slope * x
+    full_scale = v[-1] - v[0]
+    lsb = full_scale / (v.size - 1)
+    return (v - line) / lsb
+
+
+def caat_effective_bits(sample: CaatSample, cfg: CaatConfig) -> float:
+    """Summation accuracy in bits: 8 - log2(2 * max|INL|) (paper's Fig. 9a metric)."""
+    inl = caat_inl(sample, cfg)
+    max_inl = float(np.max(np.abs(inl)))
+    if max_inl <= 0.5:
+        return 8.0
+    return 8.0 - float(np.log2(2.0 * max_inl))
+
+
+def effective_linear_weights(sample: CaatSample) -> tuple[jax.Array, jax.Array]:
+    """Collapse the two-level tree into one linear map over the 81 planes.
+
+    caat_combine is linear in v_col, so there exist W_eff [K, I] and a scalar
+    offset with  v_root = sum_{k,i} W_eff[k,i] * v_col[..., k, i] + offset.
+    This enables the 81-plane bit-serial reduction to be computed as NINE
+    weighted-plane matmuls (fold W_eff into the activation bits first):
+    a 9x FLOP reduction for the behavioral kernel — a beyond-paper
+    optimization licensed by the paper's own linear-distortion observation.
+    """
+    bank_w = sample["bank_w"]
+    root_w = sample["root_w"]
+    bank_coeff = bank_w / jnp.sum(bank_w, axis=-1, keepdims=True)   # [K, I]
+    root_coeff = root_w / jnp.sum(root_w)                           # [K]
+    w_eff = (
+        root_coeff[:, None] * sample["bank_gain"][:, None] * bank_coeff
+    ) * sample["root_gain"]
+    offset = (
+        jnp.sum(root_coeff * sample["bank_off"]) * sample["root_gain"]
+        + sample["root_off"]
+    )
+    return w_eff.astype(jnp.float32), offset.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Area model (Fig. 7a): total capacitance of one CAAT-L, binary vs hybrid.
+# ---------------------------------------------------------------------------
+
+def capacitor_total_binary(n_bits: int) -> float:
+    """Fully binary-weighted summing network for one (n_bits+1)-column leaf.
+
+    Column weights (2^{n-2}..1, 0.5, 0.5) are realized directly as ratioed
+    caps; scaling so the smallest is 4C (matching floor) gives the paper's
+    ~1032C for 8b.
+    """
+    w = numerics.bit_weights(n_bits)
+    scale = 4.0 / float(np.min(w))  # smallest cap 4C for matching
+    return float(np.sum(w) * scale) + 2.0  # + dummy/edge caps
+
+def capacitor_total_hybrid(n_bits: int, n_binary_msbs: int = 4) -> float:
+    """Hybrid binary + C-2C CAAT-L (the paper's design).
+
+    Every source line carries an equal 9C load (MSB 16C split into 2x8C so the
+    max per-line cap is 8C + 1C); the C-2C section adds ~2C per low bit plus
+    bridge caps.  Reproduces the paper's 96C for 8b (10.8x smaller).
+    """
+    n_cols = n_bits + 1
+    per_line_load = 9.0 * n_cols  # 9C per ScL
+    n_c2c = max(n_cols - n_binary_msbs, 0)
+    c2c_caps = 3.0 * n_c2c  # 2C series + 1C shunt per stage
+    return per_line_load + c2c_caps

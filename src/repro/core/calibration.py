@@ -1,0 +1,66 @@
+"""Output-based fine-tune compensation (paper §II.C, Fig. 5b).
+
+The dominant non-idealities (capacitor mismatch, parasitics, ADC INL) distort
+the layer output in a way that is well modeled as a *linear* map.  Instead of
+retraining weights per chip, the paper measures the first two moments of the
+chip output y1 vs the ideal software output y0 on a calibration set run
+**once** after tape-out, then corrects every subsequent output with
+
+    y_hat = (sigma0 / sigma1) * y1 + (mu0 - (sigma0 / sigma1) * mu1)
+
+We support `per_tensor` (the paper's scheme) and `per_channel` granularity
+(the natural generalization when column-to-column mismatch dominates), and a
+`fold` helper that absorbs the affine into downstream requantization scales so
+the runtime cost is zero — the TPU-native version of "minor extra hardware".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FineTuneParams:
+    gain: jax.Array    # sigma0 / sigma1              (scalar or [N])
+    offset: jax.Array  # mu0 - gain * mu1             (scalar or [N])
+
+    def apply(self, y: jax.Array) -> jax.Array:
+        return y * self.gain + self.offset
+
+    def fold_into(self, scale: jax.Array, bias: jax.Array):
+        """Fold into an existing epilogue y = scale*acc + bias, so that
+        apply(scale*acc + bias) == folded_scale*acc + folded_bias."""
+        return self.gain * scale, self.gain * bias + self.offset
+
+
+def fit_finetune(
+    ideal: jax.Array,
+    measured: jax.Array,
+    granularity: str = "per_tensor",
+    eps: float = 1e-6,
+) -> FineTuneParams:
+    """Fit the affine correction from one calibration pass.
+
+    ideal, measured: [..., N] arrays of layer outputs (same units).
+    granularity: 'per_tensor' (paper) or 'per_channel' (stats over all axes
+    except the last).
+    """
+    if granularity == "per_tensor":
+        axes = None
+    elif granularity == "per_channel":
+        axes = tuple(range(ideal.ndim - 1))
+    else:
+        raise ValueError(f"unknown granularity: {granularity!r}")
+    mu0 = jnp.mean(ideal, axis=axes)
+    mu1 = jnp.mean(measured, axis=axes)
+    s0 = jnp.std(ideal, axis=axes)
+    s1 = jnp.std(measured, axis=axes)
+    gain = s0 / jnp.maximum(s1, eps)
+    offset = mu0 - gain * mu1
+    return FineTuneParams(gain=gain, offset=offset)
+
+
+def identity_finetune() -> FineTuneParams:
+    return FineTuneParams(gain=jnp.asarray(1.0), offset=jnp.asarray(0.0))

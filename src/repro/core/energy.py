@@ -1,0 +1,204 @@
+"""Analytic energy / area / latency model of the macro (Fig. 7, Fig. 8, Table I).
+
+The model has two layers:
+
+1. **Operating-point model** — throughput and power as functions of supply
+   voltage and clock.  Table I gives three measured points; we fit
+   ``P(V, f_adc) = c_dyn * V^p * f_adc + c_leak * V^3`` to them (grid over p,
+   non-negative least squares for the linear coefficients).  Throughput is
+   structural: the ADC is the pipeline bottleneck at
+   ``conversions/s = f_adc / sar_cycles`` with ``ops_per_conversion`` 8b
+   ops finished per conversion (Table I implies 1024 = 2 x 512 active rows
+   at the measured operating points, with f_adc = f_main / 2,
+   sar_cycles = 10 — these constants reproduce 51.2 GOPS @1 GHz and
+   35.8 GOPS @700 MHz exactly).
+
+2. **Component decomposition** — per-conversion energy split into
+   {array, caat, adc, digital, periph}.  The ADC share (8%) and area share
+   (3%) are stated in the paper; the remaining split is inferred (pie charts
+   are not machine-readable) and chosen so that the paper's comparative
+   claims all hold simultaneously:
+     * one conversion per MAC vs 8 -> ADC energy ratio 8x (Fig. 7b),
+     * ReLU early-stop ~2x on top (for single-tile reductions),
+     * macro-level efficiency vs the parallel-activation-input baseline 1.6x,
+     * CAAT-L capacitance 1032C -> 96C (10.8x) drives the area curve (Fig 7a).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import caat as caat_lib
+
+# ---------------------------------------------------------------------------
+# Structural throughput constants (fit notes in the module docstring)
+# ---------------------------------------------------------------------------
+SAR_CYCLES = 10
+OPS_PER_CONVERSION = 1024          # 2 ops x 512 active rows per conversion
+ADC_CLOCK_DIVIDER = 2              # f_adc = f_main / 2 (1 GHz -> 500 MHz)
+
+# Measured operating points from Table I: (v_dd, f_main_hz, tops_per_w)
+TABLE1_POINTS = (
+    (1.00, 1.00e9, 3.53),   # 51.2 GOPS @ 1.0 V / 1 GHz (ADC 500 MHz)
+    (0.80, 0.70e9, 10.1),   # 35.8 GOPS @ 0.8 V / 700 MHz (ADC 350 MHz)
+    (0.76, 0.24e9, 10.3),   # highest efficiency @ 240 MHz (min supply)
+)
+
+# Per-conversion energy shares at the 1.0 V / 1 GHz point (ADC share is the
+# paper's 8%; others inferred, see docstring).  Sums to 1.
+ENERGY_SHARES = {
+    "array": 0.55,
+    "caat": 0.12,
+    "adc": 0.08,      # measured WITH ReLU early-stop (random +/- activations)
+    "digital": 0.17,
+    "periph": 0.08,
+}
+
+# Area shares; ADC 3% is the paper's number.  Total macro area in 65 nm.
+AREA_SHARES = {
+    "sram_array": 0.58,
+    "caat": 0.12,
+    "adc": 0.03,
+    "digital": 0.15,
+    "periph": 0.12,
+}
+
+# Baseline (parallel-activation-input, Fig. 1b) component multipliers
+# relative to our per-conversion energy components.
+BASELINE_FACTORS = {
+    "array": 1.0,      # same cells, same row activation
+    "caat": 1.35,      # exponential binary-weighted network switches more C
+    "adc": 8.0,        # 8 conversions per 8b MAC (one per activation bit)
+    "digital": 1.30,   # + digital shift-and-add of the per-bank outputs
+    "periph": 1.0,
+}
+
+
+def throughput_ops(f_main_hz: float) -> float:
+    """8b-op/s at a main clock (ADC-limited pipeline)."""
+    f_adc = f_main_hz / ADC_CLOCK_DIVIDER
+    return f_adc / SAR_CYCLES * OPS_PER_CONVERSION
+
+
+@functools.lru_cache(maxsize=1)
+def _power_fit() -> tuple[float, float, float]:
+    """Fit P = c_dyn * V^p * f_adc + c_leak * V^3 to the Table I points."""
+    pts = []
+    for v, f_main, tops_w in TABLE1_POINTS:
+        ops = throughput_ops(f_main)
+        p_watt = ops / (tops_w * 1e12)
+        pts.append((v, f_main / ADC_CLOCK_DIVIDER, p_watt))
+    best = None
+    for p in np.linspace(2.0, 7.0, 101):
+        a = np.array([[v**p * f, v**3] for v, f, _ in pts])
+        b = np.array([pw for _, _, pw in pts])
+        coef, *_ = np.linalg.lstsq(a, b, rcond=None)
+        coef = np.maximum(coef, 0.0)
+        pred = a @ coef
+        err = float(np.sum((np.log(pred + 1e-15) - np.log(b)) ** 2))
+        if best is None or err < best[0]:
+            best = (err, p, float(coef[0]), float(coef[1]))
+    _, p, c_dyn, c_leak = best
+    return p, c_dyn, c_leak
+
+
+def power_watts(v_dd: float, f_main_hz: float) -> float:
+    p, c_dyn, c_leak = _power_fit()
+    f_adc = f_main_hz / ADC_CLOCK_DIVIDER
+    return c_dyn * v_dd**p * f_adc + c_leak * v_dd**3
+
+
+def tops_per_watt(v_dd: float, f_main_hz: float) -> float:
+    return throughput_ops(f_main_hz) / power_watts(v_dd, f_main_hz) / 1e12
+
+
+def energy_per_conversion_joules(v_dd: float = 1.0, f_main_hz: float = 1e9) -> float:
+    f_adc = f_main_hz / ADC_CLOCK_DIVIDER
+    return power_watts(v_dd, f_main_hz) / (f_adc / SAR_CYCLES)
+
+
+# ---------------------------------------------------------------------------
+# Component breakdown + comparative claims
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MacroEnergyReport:
+    total_per_conversion_j: float
+    components_j: dict
+    baseline_components_j: dict
+    adc_ratio: float               # baseline ADC energy / ours       (~8x)
+    relu_early_stop_factor: float  # ADC energy saved by early-stop   (~2x)
+    macro_efficiency_ratio: float  # baseline total / ours            (~1.6x)
+
+
+def breakdown(
+    v_dd: float = 1.0,
+    f_main_hz: float = 1e9,
+    neg_fraction: float = 0.55,
+) -> MacroEnergyReport:
+    e_conv = energy_per_conversion_joules(v_dd, f_main_hz)
+    comps = {k: s * e_conv for k, s in ENERGY_SHARES.items()}
+    # Early-stop factor: measured ADC share already includes it at the stated
+    # neg_fraction; the no-ReLU ADC energy is larger by this factor.
+    avg_cycles = neg_fraction * 1.0 + (1.0 - neg_fraction) * SAR_CYCLES
+    relu_factor = SAR_CYCLES / avg_cycles
+    base = {k: comps[k] * BASELINE_FACTORS[k] for k in comps}
+    ours_total = sum(comps.values())
+    base_total = sum(base.values())
+    return MacroEnergyReport(
+        total_per_conversion_j=ours_total,
+        components_j=comps,
+        baseline_components_j=base,
+        adc_ratio=base["adc"] / comps["adc"],
+        relu_early_stop_factor=relu_factor,
+        macro_efficiency_ratio=base_total / ours_total,
+    )
+
+
+def latency_breakdown_ns(f_main_hz: float = 1e9) -> dict:
+    """One-MAC latency through the pipeline (Fig. 8 right)."""
+    t_main = 1e9 / f_main_hz
+    t_adc_cycle = t_main * ADC_CLOCK_DIVIDER
+    return {
+        "in_column_ns": 1.0 * t_main,
+        "in_bank_ns": 1.0 * t_main,
+        "in_array_ns": 1.0 * t_main,
+        "adc_ns": SAR_CYCLES * t_adc_cycle,
+        "digital_ns": 2.0 * t_main,
+    }
+
+
+def area_breakdown_mm2(total_mm2: float = 1.0) -> dict:
+    return {k: s * total_mm2 for k, s in AREA_SHARES.items()}
+
+
+def capacitor_area_curve(bit_widths=(4, 5, 6, 7, 8, 9, 10)) -> dict:
+    """Fig. 7(a): total CAAT-L capacitance, binary baseline vs hybrid."""
+    return {
+        "bits": list(bit_widths),
+        "binary_C": [caat_lib.capacitor_total_binary(b) for b in bit_widths],
+        "hybrid_C": [caat_lib.capacitor_total_hybrid(b) for b in bit_widths],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Workload-level estimator (consumes stats from macro.cim_matmul_sim)
+# ---------------------------------------------------------------------------
+
+def workload_energy_joules(
+    n_conversions: float,
+    neg_fraction: float = 0.55,
+    relu_fused: bool = True,
+    v_dd: float = 1.0,
+    f_main_hz: float = 1e9,
+) -> float:
+    """Energy for a layer/network given its conversion count and ReLU stats."""
+    e_conv = energy_per_conversion_joules(v_dd, f_main_hz)
+    comps = {k: s * e_conv for k, s in ENERGY_SHARES.items()}
+    if not relu_fused:
+        # no early-stop credit: scale ADC back up to full conversions
+        avg_cycles = neg_fraction * 1.0 + (1.0 - neg_fraction) * SAR_CYCLES
+        comps["adc"] = comps["adc"] * (SAR_CYCLES / avg_cycles)
+    return float(n_conversions * sum(comps.values()))

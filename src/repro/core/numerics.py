@@ -1,0 +1,97 @@
+"""Eq.(1) +/-1-bit signed numeric representation from the paper.
+
+An N-bit signed integer x is represented with N+1 bits, each valued in
+{-1, +1}:
+
+    x = sum_{i=1}^{N-1} n_i * 2^{i-1} + (n_{0+} + n_{0-}) * 2^{-1}
+
+For N = 8 this uses 9 bits with ladder weights
+
+    BIT_WEIGHTS_8B = (64, 32, 16, 8, 4, 2, 1, 0.5, 0.5)
+
+(MSB first; the last two entries are the paired half-weight LSBs n0+/n0-).
+Every int8 in [-128, 127] is exactly representable, and the representation is
+*multiplicative*: for a, w int8 with bit vectors a_k, w_i,
+
+    a * w = sum_k sum_i alpha_k * beta_i * (a_k * w_i)
+
+where each 1b x 1b product a_k * w_i is in {-1, +1} — the XNOR the 10T1C cell
+computes in charge domain.  This module is the digital oracle for that codec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# MSB-first ladder weights for the 9-bit representation of an 8b number.
+BIT_WEIGHTS_8B: tuple[float, ...] = (64.0, 32.0, 16.0, 8.0, 4.0, 2.0, 1.0, 0.5, 0.5)
+N_BITS_8B = len(BIT_WEIGHTS_8B)  # 9
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def bit_weights(nbits: int = 8) -> np.ndarray:
+    """Ladder weights for the (nbits+1)-bit +/-1 representation, MSB first."""
+    if nbits < 2:
+        raise ValueError(f"nbits must be >= 2, got {nbits}")
+    powers = [2.0 ** i for i in range(nbits - 2, -1, -1)]  # 2^{N-2} .. 2^0
+    return np.asarray(powers + [0.5, 0.5], dtype=np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def encode_pm1(x: jax.Array, nbits: int = 8) -> jax.Array:
+    """Encode signed integers into +/-1 bit vectors (appended trailing axis).
+
+    x: integer array with values in [-2^{nbits-1}, 2^{nbits-1} - 1].
+    Returns int8 array of shape x.shape + (nbits + 1,) with entries in {-1, +1}
+    such that (bits * bit_weights).sum(-1) == x.
+    """
+    half = 2 ** (nbits - 1)
+    x = jnp.asarray(x, jnp.int32)
+    u = x + half                     # in [0, 2^nbits - 1]
+    integer = u >> 1                 # top nbits-1 binary bits
+    frac = u & 1                     # the 0.5-weight bit
+    shifts = jnp.arange(nbits - 2, -1, -1, dtype=jnp.int32)
+    tbits = (integer[..., None] >> shifts) & 1              # MSB-first binary of `integer`
+    t = jnp.concatenate(
+        [tbits, frac[..., None], jnp.zeros_like(frac[..., None])], axis=-1
+    )
+    return (2 * t - 1).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def decode_pm1(bits: jax.Array, nbits: int = 8) -> jax.Array:
+    """Inverse of :func:`encode_pm1` (sums the weighted +/-1 bits)."""
+    w = jnp.asarray(bit_weights(nbits))
+    val = jnp.sum(bits.astype(jnp.float32) * w, axis=-1)
+    return jnp.round(val).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def encode_twos_complement_planes(x: jax.Array, nbits: int = 8) -> jax.Array:
+    """Two's-complement {0,1} bit-planes, LSB first (bit-serial baseline codec).
+
+    x = -b_{N-1} 2^{N-1} + sum_{k<N-1} b_k 2^k.  Returns x.shape + (nbits,).
+    """
+    x = jnp.asarray(x, jnp.int32)
+    u = jnp.where(x < 0, x + (1 << nbits), x)  # unsigned reinterpretation
+    shifts = jnp.arange(nbits, dtype=jnp.int32)
+    return ((u[..., None] >> shifts) & 1).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def decode_twos_complement_planes(planes: jax.Array, nbits: int = 8) -> jax.Array:
+    weights = (2 ** jnp.arange(nbits, dtype=jnp.int32)).at[nbits - 1].multiply(-1)
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=-1)
+
+
+def exact_int_matmul(a_int: jax.Array, w_int: jax.Array) -> jax.Array:
+    """int32-accurate integer matmul oracle: (..., K) x (K, N) -> (..., N)."""
+    return jax.lax.dot_general(
+        a_int.astype(jnp.int8),
+        w_int.astype(jnp.int8),
+        (((a_int.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )

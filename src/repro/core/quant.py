@@ -1,0 +1,173 @@
+"""W8A8 quantization utilities shared by the CiM paths and the fast kernels.
+
+The macro requires *static* quantization: weights live in SRAM as int8 and the
+analog full scale is fixed, so activation scales must be calibrated offline
+(absmax / quantile over a calibration set).  The same scales drive:
+
+  * `cim` mode   — the behavioral macro sim (core/macro.py);
+  * `w8a8` mode  — the idealized datapath: int8 x int8 -> int32 with ONE
+                   dequant+bias+ReLU+requant epilogue ("one conversion per
+                   output element"), either via XLA (`w8a8_matmul`) or the
+                   fused Pallas kernel (kernels/cim_matmul);
+  * QAT          — fake-quant with straight-through estimators so models can
+                   be trained for CiM deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+# ---------------------------------------------------------------------------
+# Scale computation
+# ---------------------------------------------------------------------------
+
+def absmax_scale(x: jax.Array, axis=None, qmax: int = INT8_MAX) -> jax.Array:
+    """scale s.t. x / scale fits int8; axis=None -> per-tensor."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantile_scale(x: jax.Array, q: float = 0.9995, qmax: int = INT8_MAX) -> jax.Array:
+    """Clipping scale from a high quantile of |x| (robust to outliers)."""
+    amax = jnp.quantile(jnp.abs(x).reshape(-1), q)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 quantization."""
+    return jnp.clip(jnp.round(x / scale), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Idealized W8A8 matmul (the oracle the Pallas kernel must match bit-exactly)
+# ---------------------------------------------------------------------------
+
+def int8_matmul_int32(a_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """(..., K) int8 x (K, N) int8 -> int32 accumulators (MXU-native on TPU)."""
+    return jax.lax.dot_general(
+        a_q, w_q, (((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def w8a8_matmul(
+    a_q: jax.Array,            # [..., K] int8
+    w_q: jax.Array,            # [K, N] int8
+    a_scale: jax.Array,        # scalar
+    w_scale: jax.Array,        # scalar or [N] (per-channel)
+    bias: jax.Array | None = None,   # [N] float32 or None
+    relu: bool = False,
+    out_scale: jax.Array | None = None,  # if set: requantize to int8 with this scale
+) -> jax.Array:
+    """The single-pass fused W8A8 linear: ONE epilogue over the accumulator.
+
+    This is the paper's single-ADC insight in TPU form: the int32 accumulator
+    is converted (scaled / biased / ReLU'd / requantized) exactly once, in one
+    pass, instead of once per activation bit (bit-serial baseline).
+    """
+    acc = int8_matmul_int32(a_q, w_q)
+    y = acc.astype(jnp.float32) * (a_scale * w_scale)
+    if bias is not None:
+        y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if out_scale is not None:
+        return quantize(y, out_scale)
+    return y
+
+
+def bitserial_matmul(
+    a_q: jax.Array,            # [..., K] int8
+    w_q: jax.Array,            # [K, N] int8
+    a_scale: jax.Array,
+    w_scale: jax.Array,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    plane_adc_bits: int | None = None,
+    nbits: int = 8,
+) -> jax.Array:
+    """Bit-serial-activation baseline (prior works [1][2]): 8 passes.
+
+    Activation two's-complement planes are multiplied against the full int8
+    weights one bit at a time; each plane's partial sum goes through its own
+    "conversion" (optionally quantized to `plane_adc_bits` — the per-plane 8b
+    ADC of real bit-serial macros) and is shift-added digitally.
+
+    With plane_adc_bits=None this is exact (equals w8a8_matmul) but costs
+    nbits passes over the data — the throughput bottleneck the paper removes.
+    """
+    from repro.core import numerics  # local import to avoid cycle
+
+    planes = numerics.encode_twos_complement_planes(a_q, nbits)  # [..., K, nbits]
+    acc = jnp.zeros((*a_q.shape[:-1], w_q.shape[1]), jnp.float32)
+    for k in range(nbits):
+        p = planes[..., k]                       # {0,1} int8
+        psum = jax.lax.dot_general(
+            p, w_q, (((p.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+        if plane_adc_bits is not None:
+            # per-plane conversion: quantize partial sum to the ADC range
+            fs = jnp.maximum(jnp.max(jnp.abs(psum)), 1e-6)
+            lsb = fs / (2 ** (plane_adc_bits - 1))
+            psum = jnp.round(psum / lsb) * lsb
+        weight = -(2.0 ** (nbits - 1)) if k == nbits - 1 else 2.0 ** k
+        acc = acc + weight * psum
+    y = acc * (a_scale * w_scale)
+    if bias is not None:
+        y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# QAT: fake quantization with straight-through gradients
+# ---------------------------------------------------------------------------
+
+def fake_quant(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize-dequantize with STE (bit-exact forward, identity-ish grad)."""
+    q = dequantize(quantize(x, scale), scale)
+    return x + jax.lax.stop_gradient(q - x)
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def qat_linear(x: jax.Array, w: jax.Array, a_scale, w_scale,
+               bias=None, relu: bool = False) -> jax.Array:
+    """Training-time view of a CiM-deployed linear (fake-quant both sides)."""
+    xq = fake_quant(x, a_scale)
+    wq = fake_quant(w, w_scale)
+    y = xq @ wq
+    if bias is not None:
+        y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Static calibration records (per layer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ActObserver:
+    """Running absmax/moment collector for static activation scales."""
+    amax: float = 0.0
+    count: int = 0
+
+    def update(self, x: jax.Array) -> None:
+        self.amax = max(self.amax, float(jnp.max(jnp.abs(x))))
+        self.count += 1
+
+    def scale(self, qmax: int = INT8_MAX) -> float:
+        return max(self.amax, 1e-8) / qmax

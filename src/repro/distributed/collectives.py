@@ -1,0 +1,74 @@
+"""Explicit shard_map collectives for the patterns SPMD must get right.
+
+`seq_parallel_decode_attention` is the flash-decode combine: the KV cache is
+sharded on the *sequence* axis across `axis_name`; each shard computes its
+partial (max, sum, weighted-V) and the shards are merged with logsumexp
+algebra — wire bytes per layer are O(B * H * D), independent of context
+length.  This is the hand-written reference for what models/attention.py's
+attend_decode should lower to under pjit; tests assert both paths agree with
+single-device attention, and the dry-run HLO is checked for the absence of
+KV-cache-sized all-gathers (roofline/analysis.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _partial_decode(q, k_shard, v_shard, valid_mask):
+    """Per-shard partials.  q: [B,1,H,D]; k/v: [B,S_shard,KVH,D].
+    Returns (m [B,KVH,G], l [B,KVH,G], o [B,KVH,G,D])."""
+    b, _, h, d = q.shape
+    kvh = k_shard.shape[2]
+    g = h // kvh
+    qh = q[:, 0].reshape(b, kvh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qh,
+                        k_shard.astype(jnp.float32)) / np.sqrt(d)
+    scores = jnp.where(valid_mask[:, None, None, :], scores, -1e30)
+    m = scores.max(-1)
+    p = jnp.exp(scores - m[..., None])
+    l = p.sum(-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_shard.astype(jnp.float32))
+    return m, l, o
+
+
+def _combine(m, l, o, axis_name):
+    """Merge shard partials with logsumexp weighting via tiny collectives."""
+    m_max = jax.lax.pmax(m, axis_name)                 # [B,KVH,G]
+    corr = jnp.exp(m - m_max)
+    l_sum = jax.lax.psum(l * corr, axis_name)
+    o_sum = jax.lax.psum(o * corr[..., None], axis_name)
+    return o_sum / jnp.maximum(l_sum, 1e-30)[..., None]
+
+
+def seq_parallel_decode_attention(mesh: Mesh, q, k_cache, v_cache, n_valid,
+                                  axis_name: str = "model"):
+    """q [B,1,H,D] replicated over `axis_name`; k/v [B,S,KVH,D] sharded on S.
+
+    n_valid: scalar count of valid cache entries (global).
+    Returns [B,1,H,D] replicated over axis_name.
+    """
+    b, _, h, d = q.shape
+    s = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    n_shards = mesh.shape[axis_name]
+    s_local = s // n_shards
+
+    def body(q, k, v, n_valid):
+        idx = jax.lax.axis_index(axis_name)
+        local_pos = idx * s_local + jnp.arange(s_local)
+        valid = jnp.broadcast_to(local_pos[None, :] < n_valid, (b, s_local))
+        m, l, o = _partial_decode(q, k, v, valid)
+        out = _combine(m, l, o, axis_name)
+        return out.reshape(b, 1, h, d).astype(q.dtype)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(None, axis_name, None, None),
+                  P(None, axis_name, None, None), P()),
+        out_specs=P(),
+    )(q, k_cache, v_cache, n_valid)

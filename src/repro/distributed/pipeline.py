@@ -1,0 +1,84 @@
+"""GPipe-style pipeline parallelism over the 'pod' axis (experiment).
+
+Default multi-pod policy is DP over 'pod' (only gradient all-reduce crosses
+the ICI-poor pod boundary, overlapped with backward).  This module provides
+the alternative: split the layer stack into `n_stages` contiguous stages,
+one per pod, and stream `n_micro` microbatches through with
+collective-permute boundaries (shard_map).
+
+The schedule is the classic fill-drain GPipe loop: at tick t, stage s works
+on microbatch (t - s) when 0 <= t - s < n_micro; activations hop stage s ->
+s+1 via jax.lax.ppermute.  Bubble fraction = (S-1)/(T+S-1).
+
+Used by tests/test_pipeline.py (correctness vs single-device forward) and by
+EXPERIMENTS.md §Perf as the PP-vs-DP comparison point for the pod axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(mesh: Mesh, stage_fn, stacked_params, x_micro,
+                     axis_name: str = "pod"):
+    """Run microbatches through pipeline stages laid out on `axis_name`.
+
+    stage_fn(params_stage, x) -> x   per-stage transform
+    stacked_params: pytree with leading dim == n_stages (sharded on axis)
+    x_micro: [n_micro, micro_batch, ...] microbatched input (replicated)
+    Returns [n_micro, micro_batch, ...] outputs (replicated).
+    """
+    n_stages = mesh.shape[axis_name]
+    n_micro = x_micro.shape[0]
+
+    def body(params_stage, x_micro):
+        # shard_map delivers this stage's slice with a leading dim of 1
+        params_stage = jax.tree.map(lambda a: a[0], params_stage)
+        stage = jax.lax.axis_index(axis_name)
+        n_ticks = n_micro + n_stages - 1
+        # carries become pod-varying inside the loop; mark the zeros so the
+        # fori_loop carry types match (jax >= 0.8 shard_map VMA tracking)
+        buf = jax.lax.pcast(jnp.zeros_like(x_micro[0]), axis_name,
+                            to="varying")
+        outs = jax.lax.pcast(jnp.zeros_like(x_micro), axis_name, to="varying")
+
+        def tick(t, carry):
+            buf, outs = carry
+            mb = t - stage                      # microbatch this stage sees
+            # stage 0 ingests a fresh microbatch; others use the handoff
+            x_in = jnp.where(
+                stage == 0,
+                x_micro[jnp.clip(mb, 0, n_micro - 1)],
+                buf,
+            )
+            active = (mb >= 0) & (mb < n_micro)
+            y = stage_fn(params_stage, x_in)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # hand activations to the next stage
+            handoff = jax.lax.ppermute(
+                y, axis_name,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            # last stage emits its finished microbatch
+            emit_idx = jnp.clip(mb, 0, n_micro - 1)
+            outs = jnp.where(
+                (stage == n_stages - 1) & active,
+                outs.at[emit_idx].set(y),
+                outs,
+            )
+            return handoff, outs
+
+        buf, outs = jax.lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # gather the last stage's outputs to every pod (replicated result)
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)),
+            axis_name)
+        return outs
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=P(),
+    )(stacked_params, x_micro)

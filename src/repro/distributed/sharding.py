@@ -1,0 +1,185 @@
+"""Logical-axis sharding rules -> concrete NamedSharding trees.
+
+The model code annotates parameters with *logical* axis names (tuples per
+array dim); this module maps them onto the production mesh:
+
+  single-pod mesh: (data=16, model=16)
+  multi-pod mesh:  (pod=2, data=16, model=16)   -- 'pod' extends data-parallel
+
+Default rules (FSDP x TP hybrid — ZeRO-ish param/state sharding over 'data',
+Megatron-ish over 'model'):
+
+  vocab         -> model      (LM head columns)
+  embed         -> data       (FSDP: layer weights' d_model dim)
+  embed_sharded -> model      (embedding table's d_model: gather-local lookup)
+  mlp           -> model      (FFN hidden)
+  q_heads       -> model      (attention head columns, flattened)
+  kv_heads      -> model
+  experts       -> model      (MoE expert-parallelism)
+  ssm_inner     -> model      (Mamba d_inner)
+  layers        -> None       (scan axis, never sharded)
+
+Activation/batch specs live in `act_rules`: batch -> ('pod','data') so the
+pod axis is pure data-parallel (only gradient all-reduce crosses pods, the
+ICI-poorest link), sequence sharding for long-context decode -> 'model'.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PARAM_RULES = {
+    "vocab": "model",
+    "embed": "data",
+    "embed_sharded": "model",
+    "mlp": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "layers": None,
+    None: None,
+}
+
+
+def _mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def resolve_param_specs(pspec_tree, mesh: Mesh, rules=None):
+    """Logical tuples -> NamedSharding tree for the given mesh."""
+    rules = dict(PARAM_RULES, **(rules or {}))
+    axes = _mesh_axes(mesh)
+
+    def leaf_to_sharding(leaf):
+        assert isinstance(leaf, tuple), f"bad pspec leaf: {leaf!r}"
+        phys = []
+        for name in leaf:
+            ax = rules.get(name, None)
+            phys.append(ax if (ax in axes) else None)
+        return NamedSharding(mesh, P(*phys))
+
+    return jax.tree.map(leaf_to_sharding, pspec_tree,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Physical axes for the global-batch dim on this mesh."""
+    return ("pod", "data") if "pod" in _mesh_axes(mesh) else ("data",)
+
+
+def data_specs(mesh: Mesh, batch_shape_tree):
+    """NamedSharding tree for an input batch: shard dim 0 (batch) over
+    data(+pod); special-cases 'positions' ([.., B, S]) and batch=1 long-
+    context inputs (replicated batch)."""
+    baxes = batch_axes(mesh)
+
+    def spec_for(name, ndim, batch_size):
+        b_ax = baxes if batch_size % _prod_axis(mesh, baxes) == 0 else None
+        if name == "positions" and ndim == 3:          # [3, B, S]
+            return NamedSharding(mesh, P(None, b_ax, None))
+        rest = (None,) * (ndim - 1)
+        return NamedSharding(mesh, P(b_ax, *rest))
+
+    return {
+        k: spec_for(k, v.ndim, v.shape[1] if k == "positions" and v.ndim == 3
+                    else v.shape[0])
+        for k, v in batch_shape_tree.items()
+    }
+
+
+def _prod_axis(mesh: Mesh, names) -> int:
+    n = 1
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name in names:
+        n *= shape.get(name, 1)
+    return n
+
+
+def cache_specs(mesh: Mesh, caches_shape_tree, cfg, batch: int,
+                seq_shard: bool = True):
+    """KV/SSM cache shardings for decode.
+
+    * batch over data(+pod) when divisible, else replicated;
+    * KV sequence axis over 'model' (sequence-parallel decode) when the
+      cached length divides; SSM states shard their head axis over 'model'.
+    """
+    baxes = batch_axes(mesh)
+    b_ok = batch % _prod_axis(mesh, baxes) == 0
+    b_ax = baxes if b_ok else None
+    model_n = _prod_axis(mesh, ("model",))
+
+    def leaf_spec(path, leaf):
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        nd = leaf.ndim
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if "ssm" in name and nd >= 4:
+            # [L, B, H, P, N]: shard heads over model when divisible.
+            h = leaf.shape[2]
+            h_ax = "model" if (seq_shard and h % model_n == 0) else None
+            return NamedSharding(mesh, P(None, b_ax, h_ax,
+                                         *(None,) * (nd - 3)))
+        if ("cross_k" in name or "cross_v" in name or name.endswith("k")
+                or name.endswith("v")) and nd == 5:
+            # [L, B, S, KVH, HD]: shard the KV sequence over model.
+            s = leaf.shape[2]
+            s_ax = "model" if (seq_shard and s % model_n == 0) else None
+            return NamedSharding(mesh, P(None, b_ax, s_ax, None, None))
+        if "scale" in name and nd == 4:
+            # int8-KV scales [L, B, S, KVH]: follow the cache's seq sharding.
+            s = leaf.shape[2]
+            s_ax = "model" if (seq_shard and s % model_n == 0) else None
+            return NamedSharding(mesh, P(None, b_ax, s_ax, None))
+        if "conv" in name and nd == 4:
+            # [L, B, K-1, C]: shard channels over model.
+            c = leaf.shape[3]
+            c_ax = "model" if c % model_n == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, None, c_ax))
+        if nd == 1:   # per-layer 'len'
+            return NamedSharding(mesh, P(None))
+        return NamedSharding(mesh, P(None, b_ax, *(None,) * (nd - 2)))
+
+    import jax.tree_util as jtu
+    return jtu.tree_map_with_path(leaf_spec, caches_shape_tree)
+
+
+def constrain(x, dim_axes: dict[int, str | tuple | None]):
+    """Mesh-aware sharding constraint usable from model code.
+
+    dim_axes maps dim index -> logical mesh axis name(s) ('data'/'model'/
+    'batch') or None to FORCE replication of that dim.  'batch' resolves to
+    ('pod','data') when a pod axis exists.  Dims not listed stay
+    UNCONSTRAINED (SPMD keeps its choice).  No-op when called outside a
+    `jax.sharding.set_mesh` context (smoke tests) or when a dim doesn't
+    divide.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+    shape = dict(mesh.shape)
+    spec = [P.UNCONSTRAINED] * x.ndim
+    for dim, ax in dim_axes.items():
+        if ax is None:
+            spec[dim] = None       # force replicated
+            continue
+        if ax == "batch":
+            ax = ("pod", "data") if "pod" in names else ("data",)
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        if not all(a in names for a in axes):
+            continue
+        n = 1
+        for a in axes:
+            n *= shape[a]
+        if x.shape[dim] % n != 0:
+            continue
+        spec[dim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def logits_spec(mesh: Mesh, batch: int):
+    baxes = batch_axes(mesh)
+    b_ax = baxes if batch % _prod_axis(mesh, baxes) == 0 else None
+    return NamedSharding(mesh, P(b_ax, None, "model"))

@@ -1,0 +1,2 @@
+from repro.kernels.bitserial_matmul.ops import bitserial_matmul
+from repro.kernels.bitserial_matmul.ref import bitserial_matmul_ref

@@ -1,0 +1,75 @@
+"""Bit-serial-activation baseline kernel (prior works [1][2] of the paper).
+
+One Pallas pass per activation bit-plane: the {0,1} plane (extracted from the
+int8 activations *inside* the kernel) is multiplied against the full int8
+weights, and each plane's partial sum is written back out — one "conversion"
+(output pass) per activation bit.  The host-side wrapper (ops.py) launches
+8 such passes and shift-adds them digitally, faithfully reproducing the
+datapath whose ADC/interface cost the paper's single-conversion design
+removes.  Used as the perf/energy baseline in benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _plane_kernel(a_ref, w_ref, out_ref, acc_ref, *, n_k: int, plane: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Extract activation bit-plane `plane` (two's complement) in-kernel.
+    a_u = a_ref[...].astype(jnp.uint8)
+    bits = ((a_u >> plane) & 1).astype(jnp.int8)
+    acc_ref[...] += jax.lax.dot_general(
+        bits, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _write():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plane", "bm", "bn", "bk", "interpret")
+)
+def bitplane_matmul_kernel(
+    a_q: jax.Array,   # [M, K] int8
+    w_q: jax.Array,   # [K, N] int8
+    *,
+    plane: int,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = a_q.shape
+    _, n = w_q.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n_k = k // bk
+    kernel = functools.partial(_plane_kernel, n_k=n_k, plane=plane)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name=f"bitserial_plane{plane}",
+    )(a_q, w_q)

@@ -1,0 +1,65 @@
+"""8-pass bit-serial baseline: one kernel launch per activation bit + digital
+shift-and-add.  Matches quant.bitserial_matmul / the cim_matmul kernel exactly
+(when no per-plane ADC quantization is modeled)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitserial_matmul.kernel import bitplane_matmul_kernel
+
+
+def _pad_to(x, axis, multiple):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "nbits", "bm", "bn", "bk", "interpret")
+)
+def bitserial_matmul(
+    a_q: jax.Array,            # [..., K] int8
+    w_q: jax.Array,            # [K, N] int8
+    a_scale: jax.Array,
+    w_scale: jax.Array,        # [N]
+    bias: jax.Array | None = None,
+    *,
+    relu: bool = False,
+    nbits: int = 8,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    k, n = w_q.shape
+    lead = a_q.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    a2 = a_q.reshape(m, k)
+    bm_, bn_, bk_ = min(bm, max(8, m)), min(bn, n), min(bk, k)
+    a2 = _pad_to(_pad_to(a2, 0, bm_), 1, bk_)
+    w2 = _pad_to(_pad_to(w_q, 0, bk_), 1, bn_)
+
+    acc = jnp.zeros((a2.shape[0], w2.shape[1]), jnp.float32)
+    for plane in range(nbits):  # 8 separate passes over the data
+        psum = bitplane_matmul_kernel(
+            a2, w2, plane=plane, bm=bm_, bn=bn_, bk=bk_, interpret=interpret
+        ).astype(jnp.float32)
+        weight = -(2.0 ** (nbits - 1)) if plane == nbits - 1 else 2.0 ** plane
+        acc = acc + weight * psum
+
+    y = acc[:m, :n] * (a_scale * w_scale[None, :])
+    if bias is not None:
+        y = y + bias[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.reshape(*lead, n)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the bit-serial baseline (exact int path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitplane_matmul_ref(a_q: jax.Array, w_q: jax.Array, plane: int) -> jax.Array:
+    a_u = a_q.astype(jnp.uint8)
+    bits = ((a_u >> plane) & 1).astype(jnp.int8)
+    return jax.lax.dot_general(
+        bits, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def bitserial_matmul_ref(
+    a_q: jax.Array, w_q: jax.Array, a_scale, w_scale,
+    bias=None, relu: bool = False, nbits: int = 8,
+) -> jax.Array:
+    acc = jnp.zeros((a_q.shape[0], w_q.shape[1]), jnp.float32)
+    for k in range(nbits):
+        psum = bitplane_matmul_ref(a_q, w_q, k).astype(jnp.float32)
+        weight = -(2.0 ** (nbits - 1)) if k == nbits - 1 else 2.0 ** k
+        acc = acc + weight * psum
+    y = acc * (a_scale * w_scale[None, :])
+    if bias is not None:
+        y = y + bias[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

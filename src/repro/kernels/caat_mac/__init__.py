@@ -1,0 +1,2 @@
+from repro.kernels.caat_mac.ops import cim_macro_matmul
+from repro.kernels.caat_mac.ref import caat_mac_ref

@@ -1,0 +1,98 @@
+"""Behavioral CAAT macro kernel: the analog MAC, TPU-tiled.
+
+Simulates one macro row-tile (M <= 1152 rows) for a batch of activations and
+a panel of output columns, *including* the chip's sampled capacitor mismatch,
+with the single (ideal-quantizer) ADC conversion and fused ReLU.
+
+Algorithmic note: the naive simulation is 81 bit-plane matmuls
+(9 activation bits x 9 weight bits).  Because the CAAT is linear we fold the
+effective tree weights W_eff into the activation bit planes on the host
+(a_fold[..., i] = sum_k a_bits[..., k] * W_eff[k, i]) and the kernel runs
+only NINE plane matmuls, accumulated over a grid dimension — a 9x FLOP
+reduction with bit-identical results (tests/test_kernels_caat.py proves it
+against the 81-plane pure-jnp oracle).
+
+Grid: (M_out/bm, N/bn, 9 planes); the plane axis is sequential ("arbitrary")
+and accumulates into a VMEM f32 scratch.  VMEM at bm=128, bn=128, rows=1152:
+a_fold block 128x1152 f32 = 576 KiB, w_bits block 1152x128 int8 = 144 KiB,
+acc 128x128 f32 = 64 KiB — well under VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    a_ref,       # [1, bm, M] f32  (plane i of folded activation bits)
+    w_ref,       # [1, M, bn] int8 (plane i of weight bits, in {-1, +1})
+    scal_ref,    # [1, 4] f32: (inv_m, tree_offset, fs_ratio, relu_flag)
+    out_ref,     # [bm, bn] int32 codes
+    acc_ref,     # [bm, bn] f32 VMEM scratch
+    *,
+    n_planes: int,
+):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[0],
+        w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == n_planes - 1)
+    def _convert():
+        inv_m = scal_ref[0, 0]
+        off = scal_ref[0, 1]
+        fs_ratio = scal_ref[0, 2]      # (M * ASUM * WSUM) / v_fs_mac
+        relu = scal_ref[0, 3]
+        v_root = acc_ref[...] * inv_m + off
+        v = v_root * fs_ratio          # in ADC-code units after *128
+        code = jnp.clip(jnp.round(v * 128.0), -128, 127)
+        code = jnp.where(relu > 0, jnp.maximum(code, 0.0), code)
+        out_ref[...] = code.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "interpret")
+)
+def caat_mac_kernel(
+    a_fold: jax.Array,   # [9, B, M] f32 — W_eff-folded activation planes
+    w_bits: jax.Array,   # [9, M, N] int8 in {-1, +1}
+    scalars: jax.Array,  # [1, 4] f32
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n_planes, b, m = a_fold.shape
+    _, _, n = w_bits.shape
+    bm, bn = min(bm, b), min(bn, n)
+    assert b % bm == 0 and n % bn == 0, (b, n, bm, bn)
+    kernel = functools.partial(_kernel, n_planes=n_planes)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bm, n // bn, n_planes),
+        in_specs=[
+            pl.BlockSpec((1, bm, m), lambda ib, jn, ip: (ip, ib, 0)),
+            pl.BlockSpec((1, m, bn), lambda ib, jn, ip: (ip, 0, jn)),
+            pl.BlockSpec((1, 4), lambda ib, jn, ip: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda ib, jn, ip: (ib, jn)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="caat_mac",
+    )(a_fold, w_bits, scalars)

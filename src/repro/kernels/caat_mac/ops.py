@@ -1,0 +1,89 @@
+"""Jit'd wrapper: full CiM matmul on the CAAT kernel (fast behavioral sim).
+
+Mirrors core.macro.cim_matmul_sim (row tiling + digital accumulation) but
+runs each tile on the 9-plane Pallas kernel.  ADC INL is not modeled on this
+fast path (kernel uses the ideal quantizer); use the pure sim when INL
+matters — accuracy experiments show INL is second-order vs CAAT mismatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import caat as caat_lib
+from repro.core import macro as macro_lib
+from repro.core import numerics
+from repro.kernels.caat_mac.kernel import caat_mac_kernel
+
+
+def _pad_to(x, axis, multiple):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "relu", "bm", "bn", "interpret")
+)
+def cim_macro_matmul(
+    a_int8: jax.Array,    # [B, K] int8
+    w_int8: jax.Array,    # [K, N] int8
+    chip: macro_lib.MacroSample,
+    v_fs_mac: jax.Array,
+    cfg: macro_lib.MacroConfig,
+    *,
+    relu: bool = True,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, k = a_int8.shape
+    _, n = w_int8.shape
+    rows = cfg.rows
+    n_tiles = -(-k // rows)
+    pad_k = n_tiles * rows - k
+
+    w_eff, tree_off = caat_lib.effective_linear_weights(chip["caat"])
+
+    a_p = jnp.pad(a_int8.astype(jnp.int32), ((0, 0), (0, pad_k)))
+    w_p = jnp.pad(w_int8.astype(jnp.int32), ((0, pad_k), (0, 0)))
+
+    a_bits = numerics.encode_pm1(a_p).astype(jnp.float32)       # [B, K', 9]
+    a_fold = jnp.einsum("bmk,ki->bmi", a_bits, w_eff)           # fold W_eff
+    w_bits = numerics.encode_pm1(w_p).astype(jnp.int8)          # [K', N, 9]
+
+    a_t = a_fold.reshape(b, n_tiles, rows, 9)
+    w_t = w_bits.reshape(n_tiles, rows, n, 9)
+
+    fused_relu = relu and (n_tiles == 1)
+    fs_ratio = (rows * cfg.act_sum * cfg.w_sum) / v_fs_mac
+    scalars = jnp.stack(
+        [
+            jnp.asarray(1.0 / rows, jnp.float32),
+            tree_off,
+            jnp.asarray(fs_ratio, jnp.float32),
+            jnp.asarray(1.0 if fused_relu else 0.0, jnp.float32),
+        ]
+    ).reshape(1, 4)
+
+    bm_ = min(bm, max(8, b))
+    bn_ = min(bn, n)
+
+    acc = jnp.zeros((b, n), jnp.int32)
+    for t in range(n_tiles):
+        a_planes = _pad_to(a_t[:, t].transpose(2, 0, 1), 1, bm_)   # [9, B', rows]
+        w_planes = _pad_to(w_t[t].transpose(2, 0, 1), 2, bn_)      # [9, rows, N']
+        codes = caat_mac_kernel(
+            a_planes, w_planes, scalars, bm=bm_, bn=bn_, interpret=interpret
+        )
+        acc = acc + codes[:b, :n]
+    if relu and not fused_relu:
+        acc = jnp.maximum(acc, 0)
+    return acc

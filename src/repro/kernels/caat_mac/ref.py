@@ -1,0 +1,35 @@
+"""Pure-jnp 81-plane oracle for the CAAT macro kernel.
+
+Deliberately does NOT use the 9-plane algebraic collapse the kernel uses —
+it evaluates the full in-column / in-bank / in-array pipeline via
+core.caat.caat_combine, so kernel tests also validate the collapse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import caat as caat_lib
+from repro.core import numerics
+
+
+def caat_mac_ref(
+    a_int8: jax.Array,    # [B, M] int8 (one row tile)
+    w_int8: jax.Array,    # [M, N] int8
+    caat_sample: caat_lib.CaatSample,
+    v_fs_mac: jax.Array,
+    *,
+    act_sum: float = 128.0,
+    w_sum: float = 128.0,
+    relu: bool = True,
+) -> jax.Array:
+    m = a_int8.shape[-1]
+    a_bits = numerics.encode_pm1(a_int8.astype(jnp.int32)).astype(jnp.float32)
+    w_bits = numerics.encode_pm1(w_int8.astype(jnp.int32)).astype(jnp.float32)
+    v_col = jnp.einsum("bmk,mni->bnki", a_bits, w_bits) / m
+    v_root = caat_lib.caat_combine(v_col, caat_sample)
+    fs_ratio = (m * act_sum * w_sum) / v_fs_mac
+    code = jnp.clip(jnp.round(v_root * fs_ratio * 128.0), -128, 127)
+    if relu:
+        code = jnp.maximum(code, 0)
+    return code.astype(jnp.int32)

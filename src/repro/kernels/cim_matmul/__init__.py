@@ -1,0 +1,2 @@
+from repro.kernels.cim_matmul.ops import cim_matmul
+from repro.kernels.cim_matmul.ref import cim_matmul_ref

@@ -1,0 +1,127 @@
+"""Fused single-conversion W8A8 matmul Pallas TPU kernel.
+
+TPU-native form of the paper's single-ADC architecture: the int8 x int8
+matmul accumulates in int32 on the MXU, and the accumulator is *converted*
+(dequant-scale -> bias -> ReLU -> optional requant-to-int8) exactly ONCE, in
+the kernel epilogue, with no HBM round-trip of the int32 partials.  The
+bit-serial prior-work baseline (kernels/bitserial_matmul) converts once per
+activation bit — 8 passes over the same data.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost ("arbitrary" = sequential);
+int32 accumulator lives in a VMEM scratch block [bm, bn].  Block shapes are
+MXU-aligned (multiples of 128 on the matmul dims; int8 native tile is
+(32, 128) so bk is kept a multiple of 128 as well).
+
+VMEM budget at defaults (bm=bn=256, bk=512):
+  a block 256x512 int8 = 128 KiB, w block 512x256 int8 = 128 KiB,
+  acc 256x256 int32 = 256 KiB, out 256x256 f32 = 256 KiB  -> < 1 MiB total,
+comfortably inside the ~16 MiB v5e VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    a_ref,        # [bm, bk] int8
+    w_ref,        # [bk, bn] int8
+    a_scale_ref,  # [1, 1]  f32
+    w_scale_ref,  # [1, bn] f32
+    bias_ref,     # [1, bn] f32
+    out_scale_ref,  # [1, 1] f32 (requant scale; 1.0 when unused)
+    out_ref,      # [bm, bn] out dtype
+    acc_ref,      # [bm, bn] int32 VMEM scratch
+    *,
+    n_k: int,
+    relu: bool,
+    requant: bool,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        # THE single conversion: one pass over the int32 accumulator.
+        y = acc_ref[...].astype(jnp.float32)
+        y = y * (a_scale_ref[0, 0] * w_scale_ref[0, :][None, :])
+        y = y + bias_ref[0, :][None, :]
+        if relu:
+            y = jnp.maximum(y, 0.0)  # ReLU at conversion time (ADC early-stop)
+        if requant:
+            q = jnp.round(y / out_scale_ref[0, 0])
+            out_ref[...] = jnp.clip(q, -128, 127).astype(out_ref.dtype)
+        else:
+            out_ref[...] = y.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("relu", "requant", "bm", "bn", "bk", "interpret", "out_dtype"),
+)
+def cim_matmul_kernel(
+    a_q: jax.Array,       # [M, K] int8
+    w_q: jax.Array,       # [K, N] int8
+    a_scale: jax.Array,   # scalar f32
+    w_scale: jax.Array,   # [N] f32
+    bias: jax.Array,      # [N] f32
+    out_scale: jax.Array,  # scalar f32
+    *,
+    relu: bool = False,
+    requant: bool = False,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = a_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (k, k2)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    a_scale2 = a_scale.reshape(1, 1).astype(jnp.float32)
+    w_scale2 = w_scale.reshape(1, n).astype(jnp.float32)
+    bias2 = bias.reshape(1, n).astype(jnp.float32)
+    out_scale2 = out_scale.reshape(1, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_kernel, n_k=n_k, relu=relu, requant=requant)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="cim_w8a8_matmul",
+    )(a_q, w_q, a_scale2, w_scale2, bias2, out_scale2)

@@ -1,0 +1,74 @@
+"""Jit'd public wrapper for the fused W8A8 "single-conversion" matmul.
+
+Handles leading batch dims, non-aligned shapes (pad to block multiples),
+backend selection (Pallas-compiled on TPU, interpret-mode on CPU), and the
+optional requantization epilogue.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cim_matmul.kernel import cim_matmul_kernel
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "requant", "bm", "bn", "bk", "interpret")
+)
+def cim_matmul(
+    a_q: jax.Array,            # [..., K] int8
+    w_q: jax.Array,            # [K, N] int8
+    a_scale: jax.Array,
+    w_scale: jax.Array,        # [N]
+    bias: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+    *,
+    relu: bool = False,
+    requant: bool | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused W8A8 linear: y = epilogue(a_q @ w_q).  Returns f32 or int8."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if requant is None:
+        requant = out_scale is not None
+    k, n = w_q.shape
+    lead = a_q.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    a2 = a_q.reshape(m, k)
+
+    # Pick block shapes that divide (after padding).
+    bm_ = min(bm, max(8, m))
+    bn_ = min(bn, n)
+    bk_ = min(bk, k)
+    a2 = _pad_to(_pad_to(a2, 0, bm_), 1, bk_)
+    w2 = _pad_to(_pad_to(w_q, 0, bk_), 1, bn_)
+    ws = _pad_to(w_scale.reshape(-1), 0, bn_)
+    b = bias if bias is not None else jnp.zeros((n,), jnp.float32)
+    b = _pad_to(b.reshape(-1).astype(jnp.float32), 0, bn_)
+    os = out_scale if out_scale is not None else jnp.asarray(1.0, jnp.float32)
+
+    out = cim_matmul_kernel(
+        a2, w2, jnp.asarray(a_scale, jnp.float32), ws, b, jnp.asarray(os, jnp.float32),
+        relu=relu, requant=requant, bm=bm_, bn=bn_, bk=bk_,
+        out_dtype=jnp.int8 if requant else jnp.float32,
+        interpret=interpret,
+    )
+    return out[:m, :n].reshape(*lead, n)

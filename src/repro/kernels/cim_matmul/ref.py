@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused W8A8 matmul kernel (bit-exact semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cim_matmul_ref(
+    a_q: jax.Array,       # [M, K] int8
+    w_q: jax.Array,       # [K, N] int8
+    a_scale: jax.Array,   # scalar
+    w_scale: jax.Array,   # [N]
+    bias: jax.Array,      # [N]
+    out_scale: jax.Array,  # scalar
+    *,
+    relu: bool = False,
+    requant: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    acc = jax.lax.dot_general(
+        a_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    y = acc.astype(jnp.float32) * (a_scale * w_scale[None, :])
+    y = y + bias[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if requant:
+        return jnp.clip(jnp.round(y / out_scale), -128, 127).astype(out_dtype)
+    return y.astype(out_dtype)

@@ -1,0 +1,1 @@
+from repro.models import attention, layers, mamba2, model, moe, transformer, vgg

@@ -1,0 +1,224 @@
+"""Shared model layers: norms, rotary (incl. M-RoPE), MLPs, embeddings.
+
+Conventions
+-----------
+* Pure functional: ``init_*`` returns a params pytree; ``*_apply`` consumes it.
+* Every ``init_*`` has a twin ``*_pspec`` returning the same tree with
+  *logical axis name tuples* as leaves (resolved to PartitionSpec by
+  distributed/sharding.py).  Logical names used here:
+    'vocab', 'embed', 'mlp', 'q_heads', 'kv_heads', 'experts', 'ssm_inner',
+    'ssm_state', 'conv_k', None (replicated)
+* Every weight-stationary linear goes through :func:`dense`, which routes to
+  the CiM executor modes — this is how the paper's datapath becomes a
+  framework-wide feature.  Frozen (int8) params are dicts with 'w_q'.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+
+DType = Any
+
+
+# ---------------------------------------------------------------------------
+# The CiM-aware linear
+# ---------------------------------------------------------------------------
+
+def init_dense(key, in_dim: int, out_dim: int, dtype=jnp.bfloat16,
+               scale: float | None = None) -> dict:
+    if scale is None:
+        scale = in_dim ** -0.5
+    w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def dense_pspec(in_axis: str | None, out_axis: str | None, frozen: bool = False):
+    if frozen:
+        return {
+            "w_q": (in_axis, out_axis),
+            "w_scale": (out_axis,),
+            "a_scale": (),
+        }
+    return {"w": (in_axis, out_axis)}
+
+
+def freeze_dense(p: dict, a_scale: float = 1.0) -> dict:
+    """Master float linear -> deployed W8A8 form (static scales)."""
+    w = p["w"].astype(jnp.float32)
+    w_scale = quant.absmax_scale(w, axis=0)
+    return {
+        "w_q": quant.quantize(w, w_scale),
+        "w_scale": w_scale.reshape(-1),
+        "a_scale": jnp.asarray(a_scale, jnp.float32),
+    }
+
+
+def dense(p: dict, x: jax.Array, mode: str = "exact", relu: bool = False,
+          dtype=None) -> jax.Array:
+    """CiM-aware linear.  Frozen params (w_q) => int8 datapath.
+    dtype=None -> compute in x.dtype."""
+    if dtype is None:
+        dtype = x.dtype
+    if "w_q" in p:
+        xq = quant.quantize(x.astype(jnp.float32), p["a_scale"])
+        y = quant.w8a8_matmul(xq, p["w_q"], p["a_scale"], p["w_scale"], relu=relu)
+        return y.astype(dtype)
+    if mode == "qat":
+        a_s = quant.absmax_scale(x)
+        w = p["w"].astype(jnp.float32)
+        w_s = quant.absmax_scale(w, axis=0)
+        y = quant.qat_linear(x.astype(jnp.float32), w, a_s, w_s, relu=relu)
+        return y.astype(dtype)
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * p["scale"]).astype(dt)
+
+
+def init_layernorm(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                sections: Sequence[int] | None = None) -> jax.Array:
+    """Angles [.., S, head_dim/2].
+
+    positions: [B, S] (standard) or [3, B, S] (M-RoPE: t/h/w position ids).
+    sections: per-modality frequency-band split (sums to head_dim/2).
+    """
+    freqs = _rope_freqs(head_dim, theta)                    # [hd/2]
+    if sections is None:
+        return positions[..., None].astype(jnp.float32) * freqs
+    assert positions.ndim == 3 and positions.shape[0] == len(sections)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        f = freqs[start:start + sec]
+        parts.append(positions[i][..., None].astype(jnp.float32) * f)
+        start += sec
+    assert start == freqs.shape[0], "M-RoPE sections must sum to head_dim/2"
+    return jnp.concatenate(parts, axis=-1)                  # [B, S, hd/2]
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; angles: [B, S, D/2] -> rotated x (pairwise halves)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "silu",
+             dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu":  # gated (SwiGLU)
+        return {
+            "gate": init_dense(k1, d_model, d_ff, dtype),
+            "up": init_dense(k2, d_model, d_ff, dtype),
+            "down": init_dense(k3, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+        }
+    return {
+        "in": init_dense(k1, d_model, d_ff, dtype),
+        "out": init_dense(k2, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def mlp_pspec(act: str = "silu", frozen: bool = False) -> dict:
+    if act == "silu":
+        return {
+            "gate": dense_pspec("embed", "mlp", frozen),
+            "up": dense_pspec("embed", "mlp", frozen),
+            "down": dense_pspec("mlp", "embed", frozen),
+        }
+    return {
+        "in": dense_pspec("embed", "mlp", frozen),
+        "out": dense_pspec("mlp", "embed", frozen),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu", mode: str = "exact",
+        dtype=None) -> jax.Array:
+    if dtype is None:
+        dtype = x.dtype
+    if act == "silu":
+        g = dense(p["gate"], x, mode, dtype=dtype)
+        u = dense(p["up"], x, mode, dtype=dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+        return dense(p["down"], h, mode, dtype=dtype)
+    h = dense(p["in"], x, mode, dtype=dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dtype)
+    return dense(p["out"], h, mode, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    e = jax.random.normal(key, (vocab, d_model), jnp.float32) * (d_model ** -0.5)
+    return {"table": e.astype(dtype)}
+
+
+def embedding_pspec() -> dict:
+    # Shard the embed dim over 'model' => token gather is shard-local.
+    return {"table": (None, "embed_sharded")}
+
+
+def embed(p: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype=jnp.bfloat16) -> dict:
+    return init_dense(key, d_model, vocab, dtype)
+
+
+def lm_head_pspec(frozen: bool = False) -> dict:
+    return dense_pspec("embed", "vocab", frozen)

@@ -1,0 +1,220 @@
+"""Mamba-2 block (state-space duality / SSD, arXiv:2405.21060).
+
+Implements the chunked SSD algorithm:
+
+  y = SSD(x, dt, A, B, C):  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;
+                            y_t = C_t^T h_t + D x_t
+
+* Training/prefill uses the chunked dual form: intra-chunk "attention-like"
+  term (C B^T masked by the decay kernel L) + inter-chunk state recurrence
+  (a lax.scan over chunk states — O(S) work, constant memory per chunk).
+* Decode keeps the constant-size recurrent state [H, P, N] per layer: the
+  entire "KV cache" of an SSM — which is why mamba2/zamba2 run `long_500k`.
+* The in/out projections and conv are weight-stationary => CiM-offloadable;
+  the SSD inner products are activation x activation and stay bf16.
+
+Sharding: heads are sharded on 'ssm_inner' (-> 'model'); B/C groups are
+small and replicated; the state carries (B, H/shard, P, N) per device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+def init_mamba2(key, d_model: int, cfg_ssm, dtype=jnp.bfloat16) -> dict:
+    di = cfg_ssm.d_inner(d_model)
+    nh = cfg_ssm.n_heads(d_model)
+    n = cfg_ssm.d_state
+    g = 1  # B/C groups
+    ks = jax.random.split(key, 6)
+    # Fused input projection: [z (gate), x, B, C, dt] like the reference impl.
+    zxbcdt = di + di + 2 * g * n + nh
+    p = {
+        "in_proj": layers.init_dense(ks[0], d_model, zxbcdt, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg_ssm.conv_k, di + 2 * g * n),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * g * n,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), minval=np.log(1e-3),
+                                       maxval=np.log(1e-1))))).astype(jnp.float32),
+        "norm": layers.init_rmsnorm(di),
+        "out_proj": layers.init_dense(ks[3], di, d_model, dtype,
+                                      scale=di ** -0.5),
+    }
+    return p
+
+
+def mamba2_pspec() -> dict:
+    return {
+        "in_proj": layers.dense_pspec("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": ("ssm_inner",)},
+        "out_proj": layers.dense_pspec("ssm_inner", "embed"),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Lower-tri cumulative sums: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H]; a: [H] (negative decay rates);
+    b, c: [B, S, G, N] with G == 1.
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # Reshape into chunks.
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = b.reshape(bsz, nc, chunk, n)      # G=1 squeezed
+    cr = c.reshape(bsz, nc, chunk, n)
+
+    da = dtr * a[None, None, None, :]      # [B, nc, L, H]  (negative)
+    da_cum = jnp.cumsum(da, axis=2)        # within-chunk cumulative decay
+
+    # 1) intra-chunk (dual / attention-like) term
+    l_kernel = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))   # [B,nc,H,L,L]
+    scores = jnp.einsum("bcln,bcmn->bclm", cr, br)          # [B,nc,L,L]
+    y_diag = jnp.einsum("bchlm,bclm,bcmh,bcmhp->bclhp",
+                        l_kernel, scores, dtr, xr)
+
+    # 2) chunk states: state contribution of each chunk
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)   # [B,nc,L,H]
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        br, dtr * decay_to_end, xr)         # [B,nc,H,P,N]
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))              # [B,nc,H]
+
+    def step(h_prev, inp):
+        st, dec = inp                                        # [B,H,P,N],[B,H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev                                 # emit state BEFORE chunk
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, h_before = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)            # [B,nc,H,P,N]
+
+    # 4) inter-chunk output: y_off = C_t . (decay_in * h_before)
+    decay_in = jnp.exp(da_cum)                               # [B,nc,L,H]
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                       cr, decay_in, h_before.astype(cr.dtype))
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, a, b, c):
+    """One-token recurrence.  state: [B,H,P,N]; x: [B,H,P]; dt: [B,H];
+    b, c: [B,N].  Returns (y [B,H,P], new_state)."""
+    decay = jnp.exp(dt * a[None, :])                         # [B,H]
+    dbx = jnp.einsum("bn,bh,bhp->bhpn", b, dt, x)
+    new_state = state * decay[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c)
+    return y, new_state
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 conv_state: jax.Array | None = None):
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [K, C].
+
+    Returns (y [B, S, C], new_conv_state [B, K-1, C]).
+    """
+    k = w.shape[0]
+    if conv_state is None:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(
+        x_pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_state = x_pad[:, -(k - 1):, :] if k > 1 else None
+    return y + bias.astype(y.dtype), new_state
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg, *, state: dict | None = None,
+                 mode: str | None = None,
+                 return_final_state: bool = False) -> tuple[jax.Array, dict | None]:
+    """x: [B, S, d_model].  state (decode): {'ssm': [B,H,P,N], 'conv': [B,K-1,C]}.
+
+    return_final_state (prefill): also return the post-sequence recurrent
+    state so decode can continue from it."""
+    cfg_ssm = cfg.ssm
+    mode = mode or cfg.linear_mode
+    bsz, s, _ = x.shape
+    d = x.shape[-1]
+    di = cfg_ssm.d_inner(d)
+    nh = cfg_ssm.n_heads(d)
+    n = cfg_ssm.d_state
+    pdim = cfg_ssm.headdim
+
+    from repro.distributed.sharding import constrain
+    zxbcdt = layers.dense(p["in_proj"], x, mode)
+    zxbcdt = constrain(zxbcdt, {0: "batch"})
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, di + di + 2 * n], axis=-1)
+    conv_in = xbc
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        None if state is None else state["conv"],
+    )
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    dt = constrain(dt, {0: "batch", 2: "model"})
+    a = -jnp.exp(p["a_log"])                                         # [H] < 0
+
+    xh = constrain(xs.reshape(bsz, s, nh, pdim), {0: "batch", 2: "model"})
+    new_state = None
+    if state is None:
+        y, final = ssd_chunked(xh.astype(jnp.float32), dt, a,
+                               b.astype(jnp.float32), c.astype(jnp.float32),
+                               min(cfg_ssm.chunk, s))
+        if return_final_state:
+            new_state = {"ssm": final, "conv": new_conv}
+    else:
+        y1, new_ssm = ssd_decode_step(
+            state["ssm"], xh[:, 0].astype(jnp.float32), dt[:, 0], a,
+            b[:, 0].astype(jnp.float32), c[:, 0].astype(jnp.float32),
+        )
+        y = y1[:, None]
+        new_state = {"ssm": new_ssm, "conv": new_conv}
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)       # gate
+    y = layers.rmsnorm(p["norm"], y, cfg.norm_eps)
+    return layers.dense(p["out_proj"], y, mode), new_state
+
+
+def init_mamba_state(batch: int, d_model: int, cfg_ssm, dtype=jnp.float32) -> dict:
+    nh = cfg_ssm.n_heads(d_model)
+    di = cfg_ssm.d_inner(d_model)
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg_ssm.headdim, cfg_ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg_ssm.conv_k - 1, di + 2 * cfg_ssm.d_state),
+                          dtype),
+    }

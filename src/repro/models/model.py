@@ -1,0 +1,393 @@
+"""LM model wrapper: embeddings -> stack -> final norm -> head (+ loss).
+
+Entry points (all pure, jit/pjit-ready):
+
+  init(key, cfg)                          -> params
+  pspec(cfg)                              -> logical-axes tree for params
+  forward(params, batch, cfg, train=...)  -> (hidden, aux)
+  loss_fn(params, batch, cfg)             -> (scalar loss, metrics)   [chunked CE]
+  prefill(params, batch, cfg, max_len)    -> (last_logits, caches)
+  decode_step(params, batch, caches, cfg) -> (logits, caches)
+
+Batch layout (keys present depend on arch/frontend):
+  tokens    [B, S] int32          labels [B, S] int32
+  embeds    [B, S, d] (vision_stub: pre-merged token+patch embeddings)
+  frames    [B, S, d] (audio_stub: encoder frame embeddings)
+  positions [B, S] or [3, B, S] (M-RoPE) int32, optional
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init(key, cfg) -> dict:
+    dt = _dtype(cfg)
+    k_e, k_s, k_h = jax.random.split(key, 3)
+    p = {
+        "embed": layers.init_embedding(k_e, cfg.padded_vocab, cfg.d_model, dt),
+        "stack": transformer.init_stack(k_s, cfg, dt),
+        "final_norm": layers.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.init_lm_head(k_h, cfg.d_model, cfg.padded_vocab,
+                                           dt)
+    if cfg.arch_type == "encdec":
+        p["enc_final_norm"] = layers.init_rmsnorm(cfg.d_model)
+    return p
+
+
+def pspec(cfg, frozen: bool = False) -> dict:
+    p = {
+        "embed": layers.embedding_pspec(),
+        "stack": transformer.stack_pspec(cfg, frozen),
+        "final_norm": {"scale": (None,)},
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.lm_head_pspec(frozen)
+    if cfg.arch_type == "encdec":
+        p["enc_final_norm"] = {"scale": (None,)}
+    return p
+
+
+FREEZE_SKIP = {"router"}  # routing quality is precision-sensitive; stays f32
+
+
+def freeze_params(params, a_scale: float = 1.0):
+    """Deploy transform: every weight-stationary linear (incl. stacked-layer
+    and MoE expert banks) -> int8 with static per-channel scales.  Embedding
+    gathers, norms, depthwise conv, and the router stay in float (DESIGN.md
+    §5: the CiM macro holds matmul weights; those are what quantize)."""
+    from repro.core import quant
+
+    def freeze_w(w, n_mat_dims: int = 2):
+        w = w.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        # a_scale carries the stacked (layer) leading dims so lax.scan over
+        # frozen layer stacks can slice it like every other leaf.
+        lead = w.shape[:-n_mat_dims]
+        return {
+            "w_q": jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8),
+            "w_scale": jnp.squeeze(scale, -2),
+            "a_scale": jnp.full(lead, a_scale, jnp.float32),
+        }
+
+    def walk(name, node):
+        if isinstance(node, dict):
+            if "w" in node and not isinstance(node["w"], dict):
+                if name in FREEZE_SKIP:
+                    return node
+                out = freeze_w(node["w"])
+                if "b" in node:
+                    out["b"] = node["b"]
+                return out
+            if {"gate", "up", "down"} <= set(node.keys()) \
+                    and not isinstance(node["gate"], dict):
+                # MoE expert banks [.., E, d, ff]
+                out = {}
+                for k in ("gate", "up", "down"):
+                    f = freeze_w(node[k], n_mat_dims=3)
+                    out[f"{k}_q"] = f["w_q"]
+                    out[f"{k}_scale"] = f["w_scale"]
+                out["a_scale"] = jnp.full(node["gate"].shape[:-3], a_scale,
+                                          jnp.float32)
+                for k, v in node.items():
+                    if k not in ("gate", "up", "down"):
+                        out[k] = walk(k, v)
+                return out
+            return {k: walk(k, v) for k, v in node.items()}
+        return node
+
+    return walk("", params)
+
+
+def freeze_pspec(pspec_tree):
+    """Logical-axes tree matching freeze_params' output structure."""
+    def walk(name, node):
+        if isinstance(node, dict):
+            if "w" in node and isinstance(node["w"], tuple):
+                if name in FREEZE_SKIP:
+                    return node
+                spec = node["w"]
+                out = {"w_q": spec, "w_scale": spec[:-2] + (spec[-1],),
+                       "a_scale": spec[:-2]}
+                if "b" in node:
+                    out["b"] = node["b"]
+                return out
+            if {"gate", "up", "down"} <= set(node.keys()) \
+                    and isinstance(node["gate"], tuple):
+                out = {}
+                for k in ("gate", "up", "down"):
+                    spec = node[k]
+                    out[f"{k}_q"] = spec
+                    out[f"{k}_scale"] = spec[:-2] + (spec[-1],)
+                out["a_scale"] = node["gate"][:-3]
+                for k, v in node.items():
+                    if k not in ("gate", "up", "down"):
+                        out[k] = walk(k, v)
+                return out
+            return {k: walk(k, v) for k, v in node.items()}
+        return node
+
+    return walk("", pspec_tree)
+
+
+def _embed_inputs(params, batch, cfg):
+    if "embeds" in batch:                       # vision_stub: pre-merged
+        return batch["embeds"].astype(_dtype(cfg))
+    return layers.embed(params["embed"], batch["tokens"])
+
+
+def _encoder_out(params, batch, cfg, remat=False, mode=None):
+    frames = batch["frames"].astype(_dtype(cfg))
+    h = transformer.apply_encoder(params["stack"], frames, cfg, remat=remat,
+                                  mode=mode)
+    return layers.rmsnorm(params["enc_final_norm"], h, cfg.norm_eps)
+
+
+def forward(params, batch, cfg, *, train: bool = False,
+            remat: bool | None = None, remat_policy: str = "nothing",
+            mode: str | None = None):
+    """Full-sequence forward to final hidden states.  Returns (h, aux_loss)."""
+    remat = train if remat is None else remat
+    x = _embed_inputs(params, batch, cfg)
+    positions = batch.get("positions")
+    enc_out = None
+    if cfg.arch_type == "encdec":
+        enc_out = _encoder_out(params, batch, cfg, remat=remat, mode=mode)
+    h, aux = transformer.apply_stack(
+        params["stack"], x, cfg, positions=positions, remat=remat,
+        remat_policy=remat_policy, mode=mode, enc_out=enc_out)
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux
+
+
+def _head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return {"w": params["embed"]["table"].T}
+    return params["lm_head"]
+
+
+def logits_fn(params, h, cfg, mode=None):
+    logits = layers.dense(_head_weight(params, cfg), h, mode or "exact",
+                          dtype=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        # Mask the padding columns (kept in-shape so vocab stays shardable).
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def loss_fn(params, batch, cfg, *, loss_chunk: int = 256,
+            remat_policy: str = "nothing", mode: str | None = None,
+            aux_weight: float = 0.01):
+    """Chunked-softmax LM loss: logits are materialized [B, chunk, V] at a
+    time (a scan over the sequence), never [B, S, V] — mandatory for 150k+
+    vocabs at S=4k."""
+    h, aux = forward(params, batch, cfg, train=True, remat_policy=remat_policy,
+                     mode=mode)
+    labels = batch["labels"]
+    b, s = labels.shape
+    chunk = min(loss_chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+    head = _head_weight(params, cfg)
+
+    h_r = h.reshape(b, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+    l_r = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    pad_mask = (jnp.arange(cfg.padded_vocab) >= cfg.vocab
+                if cfg.padded_vocab != cfg.vocab else None)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc = xs
+        logits = layers.dense(head, hc, "exact", dtype=jnp.float32)
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask, -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = (logz - gold) * valid
+        return (tot + nll.sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (h_r, l_r))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch, cfg, *, max_len: int, mode: str | None = None):
+    """Process the prompt, build caches, return last-position logits.
+
+    For attention archs the per-layer K/V caches are rebuilt from a full
+    forward (projections recomputed per layer inside a scan so the HLO stays
+    compact); SSM/hybrid carry their recurrent states.
+    """
+    dt = _dtype(cfg)
+    at = cfg.arch_type
+    x = _embed_inputs(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = batch.get("positions")
+
+    enc_out = None
+    if at == "encdec":
+        enc_out = _encoder_out(params, batch, cfg, mode=mode)
+
+    caches = transformer.init_caches(cfg, b, max_len, dt, enc_out=enc_out)
+
+    if at == "encdec":
+        ck, cv = transformer.precompute_cross_kv(params["stack"], enc_out, cfg,
+                                                 mode=mode)
+        caches["cross_k"], caches["cross_v"] = ck, cv
+
+    # Run the full-sequence forward while filling the caches layer by layer.
+    h, caches = _prefill_stack(params["stack"], x, cfg, caches,
+                               positions=positions, mode=mode, enc_out=enc_out)
+    h = layers.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits = logits_fn(params, h, cfg, mode)
+    return logits, caches
+
+
+def _prefill_stack(params, x, cfg, caches, *, positions, mode, enc_out):
+    """Forward + cache fill.  Mirrors transformer.apply_stack but emits the
+    K/V (or SSM state) of every layer."""
+    at = cfg.arch_type
+    dt = x.dtype
+    b, s = x.shape[:2]
+    hd = cfg.resolved_head_dim
+
+    if at in ("dense", "moe"):
+        def body(h, xs):
+            blk_p, cache = xs
+            # Fill the cache with this layer's K/V by running the block in
+            # "prefill-as-decode" form: full-sequence attention, cache update.
+            from repro.models import attention as attn_lib
+            xin = layers.rmsnorm(blk_p["attn_norm"], h, cfg.norm_eps)
+            hh, nc = attn_lib.attention(
+                blk_p["attn"], xin, cfg, positions=positions, causal=True,
+                kv_cache=cache, mode=mode)
+            h = h + hh
+            if at == "dense":
+                h = h + layers.mlp(
+                    blk_p["mlp"],
+                    layers.rmsnorm(blk_p["mlp_norm"], h, cfg.norm_eps),
+                    cfg.act, mode or cfg.linear_mode)
+            else:
+                from repro.models import moe as moe_lib
+                y, _ = moe_lib.moe(
+                    blk_p["moe"],
+                    layers.rmsnorm(blk_p["moe_norm"], h, cfg.norm_eps),
+                    cfg.moe, mode or cfg.linear_mode)
+                h = h + y
+            return h, nc
+
+        h, new_kv = jax.lax.scan(body, x, (params["blocks"], caches["kv"]))
+        caches = dict(caches, kv=new_kv)
+        return h, caches
+
+    if at == "ssm":
+        def body(h, xs):
+            blk_p, st = xs
+            from repro.models import mamba2
+            xin = layers.rmsnorm(blk_p["norm"], h, cfg.norm_eps)
+            y, new_st = mamba2.mamba2_block(blk_p["mamba"], xin, cfg, mode=mode,
+                                            return_final_state=True)
+            return h + y, new_st
+
+        h, new_states = jax.lax.scan(body, x, (params["blocks"], caches["ssm"]))
+        return h, dict(caches, ssm=new_states)
+
+    if at == "hybrid":
+        interval = cfg.hybrid_attn_interval
+        n_groups = cfg.n_layers // interval
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_groups, interval, *a.shape[1:]),
+            params["blocks"])
+        grouped_ssm = jax.tree.map(
+            lambda a: a.reshape(n_groups, interval, *a.shape[1:]),
+            caches["ssm"])
+        shared = params["shared_attn"]
+
+        from repro.models import attention as attn_lib, mamba2
+
+        def group_body(h, xs):
+            grp_p, grp_ssm, kv = xs
+            xin = layers.rmsnorm(shared["attn_norm"], h, cfg.norm_eps)
+            hh, new_kv = attn_lib.attention(
+                shared["attn"], xin, cfg, positions=positions, causal=True,
+                kv_cache=kv, mode=mode)
+            h = h + hh
+            h = h + layers.mlp(
+                shared["mlp"],
+                layers.rmsnorm(shared["mlp_norm"], h, cfg.norm_eps),
+                cfg.act, mode or cfg.linear_mode)
+
+            def inner(hh2, ys):
+                blk_p, st = ys
+                xin2 = layers.rmsnorm(blk_p["norm"], hh2, cfg.norm_eps)
+                y, new_st = mamba2.mamba2_block(blk_p["mamba"], xin2, cfg,
+                                                mode=mode,
+                                                return_final_state=True)
+                return hh2 + y, new_st
+
+            h, new_ssm = jax.lax.scan(inner, h, (grp_p, grp_ssm))
+            return h, (new_ssm, new_kv)
+
+        h, (new_ssm, new_kv) = jax.lax.scan(
+            group_body, x, (grouped, grouped_ssm, caches["kv"]))
+        new_ssm = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_ssm)
+        return h, dict(caches, ssm=new_ssm, kv=new_kv)
+
+    if at == "encdec":
+        from repro.models import attention as attn_lib
+
+        def body(h, xs):
+            blk_p, kv, xk, xv = xs
+            xin = layers.rmsnorm(blk_p["attn_norm"], h, cfg.norm_eps)
+            hh, nc = attn_lib.attention(
+                blk_p["attn"], xin, cfg, positions=positions, causal=True,
+                kv_cache=kv, mode=mode)
+            h = h + hh
+            hx, _ = attn_lib.attention(
+                blk_p["xattn"],
+                layers.rmsnorm(blk_p["xattn_norm"], h, cfg.norm_eps), cfg,
+                xattn_cache={"k": xk, "v": xv}, mode=mode)
+            h = h + hx
+            h = h + layers.mlp(
+                blk_p["mlp"], layers.rmsnorm(blk_p["mlp_norm"], h, cfg.norm_eps),
+                cfg.act, mode or cfg.linear_mode)
+            return h, nc
+
+        h, new_kv = jax.lax.scan(
+            body, x,
+            (params["decoder"], caches["kv"], caches["cross_k"],
+             caches["cross_v"]))
+        return h, dict(caches, kv=new_kv)
+
+    raise ValueError(at)
+
+
+def decode_step(params, batch, caches, cfg, *, mode: str | None = None):
+    """One token for every sequence in the batch.  Returns (logits, caches)."""
+    x = _embed_inputs(params, batch, cfg)
+    positions = batch.get("positions")
+    h, caches = transformer.decode_stack(
+        params["stack"], x, cfg, caches, positions=positions, mode=mode)
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return logits_fn(params, h, cfg, mode), caches

@@ -1,0 +1,217 @@
+"""VGG-8 (the paper's CIFAR-10/100 model) with CiM-offloaded conv layers.
+
+Six 3x3 conv layers (128,128 | 256,256 | 512,512 with 2x2 maxpools) + two FC
+layers — the standard VGG-8 used by the paper's reference [2].  Convolutions
+are lowered to im2col + matmul so every layer runs on the LinearExecutor:
+
+  * 'exact'  — float training/reference
+  * 'qat'    — fake-quant training for W8A8 deployment
+  * 'w8a8'   — idealized chip datapath (int8, single conversion, fused ReLU)
+  * 'cim'    — full behavioral macro sim (CAAT mismatch + ADC INL +
+               per-row-tile conversions) with optional fine-tune compensation
+
+Note the resonance with the hardware: conv2 (3x3 x 128ch) has K = 1152 —
+exactly the macro's row count; deeper convs split into 2/4 row-tiles, which
+is why the paper's accuracy experiments *must* model per-tile requantization
+(we do; see core/macro.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as cal_lib
+from repro.core import executor, macro, quant
+
+VGG8_CHANNELS = (128, 128, 256, 256, 512, 512)
+POOL_AFTER = (False, True, False, True, False, True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Vgg8Config:
+    n_classes: int = 10
+    image_size: int = 32
+    fc_dim: int = 1024
+    mode: str = "exact"
+    macro_rows: int = 1152
+
+    def layer_specs(self) -> list[executor.LinearSpec]:
+        mcfg = macro.nominal_config(rows=self.macro_rows)
+        specs = []
+        cin = 3
+        for cout in VGG8_CHANNELS:
+            specs.append(executor.LinearSpec(
+                in_dim=9 * cin, out_dim=cout, use_bias=True, relu=True,
+                mode=self.mode, macro=mcfg))
+            cin = cout
+        flat = (self.image_size // 8) ** 2 * VGG8_CHANNELS[-1]
+        specs.append(executor.LinearSpec(
+            in_dim=flat, out_dim=self.fc_dim, use_bias=True, relu=True,
+            mode=self.mode, macro=mcfg))
+        specs.append(executor.LinearSpec(
+            in_dim=self.fc_dim, out_dim=self.n_classes, use_bias=True,
+            relu=False, mode=self.mode, macro=mcfg))
+        return specs
+
+
+def init_vgg8(key, cfg: Vgg8Config) -> list[dict]:
+    keys = jax.random.split(key, 8)
+    return [executor.init(k, s) for k, s in zip(keys, cfg.layer_specs())]
+
+
+def _im2col(x: jax.Array) -> jax.Array:
+    """[B, H, W, C] -> [B, H, W, 9C] patches (3x3, SAME padding)."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [xp[:, i:i + h, j:j + w, :] for i in range(3) for j in range(3)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def vgg8_forward(
+    params: list[dict],
+    images: jax.Array,           # [B, 32, 32, 3] float in [0, 1]-ish
+    cfg: Vgg8Config,
+    *,
+    mode: str | None = None,
+    a_scales: list | None = None,     # static activation scales (frozen modes)
+    chips: list | None = None,        # per-layer MacroSample for 'cim'
+) -> jax.Array:
+    """Returns logits [B, n_classes]."""
+    specs = cfg.layer_specs()
+    if mode is not None:
+        specs = [dataclasses.replace(s, mode=mode) for s in specs]
+    x = images
+    li = 0
+    for conv_i, cout in enumerate(VGG8_CHANNELS):
+        patches = _im2col(x)                          # [B, H, W, 9*Cin]
+        b, h, w, pdim = patches.shape
+        flat = patches.reshape(b * h * w, pdim)
+        a_s = None if a_scales is None else a_scales[li]
+        chip = None if chips is None else chips[li]
+        y = executor.apply(params[li], flat, specs[li], a_scale=a_s, chip=chip)
+        x = y.reshape(b, h, w, cout).astype(jnp.float32)
+        if POOL_AFTER[conv_i]:
+            x = _maxpool2(x)
+        li += 1
+    b = x.shape[0]
+    x = x.reshape(b, -1)
+    a_s = None if a_scales is None else a_scales[li]
+    chip = None if chips is None else chips[li]
+    x = executor.apply(params[li], x, specs[li], a_scale=a_s, chip=chip)
+    x = x.astype(jnp.float32)
+    li += 1
+    a_s = None if a_scales is None else a_scales[li]
+    chip = None if chips is None else chips[li]
+    logits = executor.apply(params[li], x, specs[li], a_scale=a_s, chip=chip)
+    return logits.astype(jnp.float32)
+
+
+def collect_activation_scales(params, images, cfg) -> list[jax.Array]:
+    """One calibration pass in exact mode; returns static per-layer a_scales."""
+    specs = cfg.layer_specs()
+    scales = []
+    x = images
+    li = 0
+    for conv_i, cout in enumerate(VGG8_CHANNELS):
+        patches = _im2col(x)
+        b, h, w, pdim = patches.shape
+        flat = patches.reshape(b * h * w, pdim)
+        scales.append(quant.absmax_scale(flat))
+        spec = dataclasses.replace(specs[li], mode="exact")
+        y = executor.apply(params[li], flat, spec)
+        x = y.reshape(b, h, w, cout).astype(jnp.float32)
+        if POOL_AFTER[conv_i]:
+            x = _maxpool2(x)
+        li += 1
+    x = x.reshape(x.shape[0], -1)
+    scales.append(quant.absmax_scale(x))
+    spec = dataclasses.replace(specs[li], mode="exact")
+    x = executor.apply(params[li], x, spec).astype(jnp.float32)
+    scales.append(quant.absmax_scale(x))
+    return scales
+
+
+def calibrate_v_fs(params, cfg: Vgg8Config, a_scales, images,
+                   q: float = 0.999, margin: float = 1.15) -> list[float]:
+    """Per-layer analog full-scale from measured per-TILE partial-sum MACs.
+
+    The fixed-utilization heuristic (0.35 x worst case) badly mismatches
+    trained-network MAC distributions (EXPERIMENTS.md fig10 note); the chip
+    deployment flow calibrates the analog FS from data — this is that pass:
+    quantize the calibration activations/weights, compute the int32 partial
+    sums of every row-tile, take a high quantile x margin.
+    """
+    specs = cfg.layer_specs()
+    v_fs = []
+    x = images
+    li = 0
+
+    def layer_vfs(flat, p, spec):
+        a_q = quant.quantize(flat.astype(jnp.float32), a_scales[li])
+        w = p["w"].astype(jnp.float32)
+        w_q = quant.quantize(w, quant.absmax_scale(w, axis=0))
+        rows = spec.macro.rows
+        k = w_q.shape[0]
+        n_tiles = -(-k // rows)
+        pad = n_tiles * rows - k
+        a_p = jnp.pad(a_q.astype(jnp.int32), ((0, 0), (0, pad)))
+        w_p = jnp.pad(w_q.astype(jnp.int32), ((0, pad), (0, 0)))
+        parts = jnp.einsum(
+            "btr,trn->tbn",
+            a_p.reshape(a_p.shape[0], n_tiles, rows).transpose(0, 1, 2),
+            w_p.reshape(n_tiles, rows, -1))
+        return float(jnp.quantile(jnp.abs(parts).astype(jnp.float32)
+                                  .reshape(-1), q)) * margin
+
+    for conv_i, cout in enumerate(VGG8_CHANNELS):
+        patches = _im2col(x)
+        b, h, w2, pdim = patches.shape
+        flat = patches.reshape(b * h * w2, pdim)
+        v_fs.append(layer_vfs(flat, params[li], specs[li]))
+        spec_e = dataclasses.replace(specs[li], mode="exact")
+        y = executor.apply(params[li], flat, spec_e)
+        x = y.reshape(b, h, w2, cout).astype(jnp.float32)
+        if POOL_AFTER[conv_i]:
+            x = _maxpool2(x)
+        li += 1
+    x = x.reshape(x.shape[0], -1)
+    v_fs.append(layer_vfs(x, params[li], specs[li]))
+    spec_e = dataclasses.replace(specs[li], mode="exact")
+    x = executor.apply(params[li], x, spec_e).astype(jnp.float32)
+    li += 1
+    v_fs.append(layer_vfs(x, params[li], specs[li]))
+    return v_fs
+
+
+def freeze_vgg8(
+    params, cfg: Vgg8Config, a_scales, *, chips=None, finetunes=None,
+    mode: str = "w8a8", v_fs_list=None,
+) -> list[dict]:
+    """Deploy: convert every layer to its frozen int8 / cim form.
+
+    For 'cim' mode pass v_fs_list from :func:`calibrate_v_fs`; the fallback
+    fixed-utilization heuristic is known-poor on trained networks."""
+    specs = [dataclasses.replace(s, mode=mode) for s in cfg.layer_specs()]
+    frozen = []
+    for i, (p, s) in enumerate(zip(params, specs)):
+        chip = None if chips is None else chips[i]
+        ft = None if finetunes is None else finetunes[i]
+        v_fs = None
+        if mode == "cim":
+            if v_fs_list is not None:
+                v_fs = v_fs_list[i]
+            else:
+                tile_k = min(s.in_dim, s.macro.rows)
+                v_fs = 0.35 * 127.0 * 127.0 * tile_k
+        frozen.append(executor.freeze(p, s, a_scales[i], chip=chip,
+                                      finetune=ft, v_fs_mac=v_fs))
+    return frozen

@@ -1,0 +1,158 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute_term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory_term     = HLO_bytes / (chips * HBM_bw)
+  collective_term = collective_wire_bytes / (chips * link_bw)
+
+`cost_analysis()` provides FLOPs / bytes-accessed.  Collective bytes are NOT
+in cost_analysis: we parse the optimized HLO text, summing the shaped bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighted by the wire factor implied by each op's replica
+group size g:
+
+  all-reduce       2 (g-1)/g      (ring: reduce-scatter + all-gather)
+  all-gather       (g-1)/g        (per-device output bytes crossing links)
+  reduce-scatter   (g-1)/g        (input bytes leaving, 1/g staying)
+  all-to-all       (g-1)/g
+  collective-permute  1.0         (full payload crosses one link)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  "bf16[2,16,512]{2,1,0}"  or "(f32[8,128]{1,0}, f32[8,128]{1,0})"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_SHAPE_RE.search(line)
+    if m:   # iota/v2 format replica_groups=[ngroups,group_size]<=[...]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        members = [x for x in first.split(",") if x.strip() != ""]
+        return max(len(members), 1)
+    m = _PAIRS_RE.search(line)
+    if m:
+        return 2
+    return 1
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-kind {'count', 'payload_bytes', 'wire_bytes'} across the module.
+
+    payload bytes = per-shard op OUTPUT shape bytes (post-SPMD HLO shapes are
+    already per-device) x number of participating shards (total data), and
+    wire bytes apply the ring factor.
+    """
+    out = {k: {"count": 0, "payload_bytes": 0.0, "wire_bytes": 0.0}
+           for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # HLO: "%name = <shape> <opcode>(...)", match opcode occurrence
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(\S+)\(", s)
+        if not m:
+            continue
+        opcode = m.group(2)
+        kind = None
+        for k in _COLL_KINDS:
+            if opcode == k or opcode.startswith(k + "-start") or \
+                    opcode.startswith(k + "."):
+                kind = k
+                break
+        if kind is None:
+            continue
+        shape_txt = m.group(1)
+        per_shard = _shape_bytes(shape_txt)
+        g = _group_size(s)
+        if kind == "all-reduce":
+            factor = 2.0 * (g - 1) / g
+        elif kind == "collective-permute":
+            factor = 1.0
+        else:
+            factor = (g - 1) / g
+        total_payload = per_shard * g
+        out[kind]["count"] += 1
+        out[kind]["payload_bytes"] += float(total_payload)
+        out[kind]["wire_bytes"] += float(per_shard * g * factor)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(result: dict, *, model_flops: float,
+                   int8: bool = False) -> RooflineTerms:
+    """result: one dry-run cell dict (launch/dryrun.py).
+
+    flops/traffic are PER-DEVICE (post-SPMD HLO, loop-aware); collective
+    wire bytes are whole-mesh totals, so the collective term divides by the
+    aggregate link bandwidth.
+    """
+    chips = result["n_chips"]
+    peak = hw.PEAK_FLOPS_INT8 if int8 else hw.PEAK_FLOPS_BF16
+    flops_dev = float(result["flops_per_device"])
+    traffic_dev = float(result["traffic_bytes_per_device"])
+    wire = sum(c["wire_bytes"] for c in result["collectives"].values())
+    compute_s = flops_dev / peak
+    memory_s = traffic_dev / hw.HBM_BW
+    collective_s = wire / (chips * hw.ICI_BW_PER_LINK)
+    flops = flops_dev * chips  # global, for the useful-ratio metric
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, hlo_flops=flops,
+        useful_ratio=model_flops / flops if flops else 0.0,
+    )
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """6*N*D (train), 2*N*D (prefill), 2*N*B (decode); N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch

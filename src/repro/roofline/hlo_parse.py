@@ -1,0 +1,295 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE, but our layer stacks are lax.scan loops — an 80-layer model would be
+undercounted 80x, and per-layer collectives likewise.  This parser builds
+the computation call graph, multiplies ``while`` bodies by their
+``known_trip_count`` (emitted by XLA for counted loops), and aggregates:
+
+  * flops          — 2 * prod(out_dims) * prod(contracting_dims) per dot
+                     (matmul-dominated workloads; elementwise flops are
+                     intentionally ignored, they are free on the MXU roofline)
+  * traffic_bytes  — sum of (operands + output) bytes over materializing ops
+                     (fusion, dot, copy, reduce, (dynamic-)slice/update,
+                     gather/scatter, concatenate, collectives).  This
+                     approximates TPU HBM traffic at fusion boundaries.
+  * collectives    — per-kind counts / payload / wire bytes with ring
+                     factors from replica group sizes (see analysis.py),
+                     loop-aware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|\S+))\s+([\w\-]+)\(")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"(\d+)"')
+_CALLED_RE = {
+    "body": re.compile(r"body=%?([\w\.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w\.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w\.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w\.\-]+)"),
+}
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Ops that materialize buffers on TPU (fusion boundaries).  Elementwise ops
+# (add/mul/select/convert/...) are NOT counted: XLA TPU fuses them into their
+# producers, so charging their operands would double-count HBM traffic.
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "copy", "reduce", "reduce-window",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "concatenate", "sort", "transpose", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute", "select-and-scatter",
+    "all-gather-start", "all-reduce-start", "pad", "rng", "custom-call",
+}
+
+
+def _shape_bits(shape_txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(shape_txt: str) -> list[int] | None:
+    m = _SHAPE_RE.search(shape_txt)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: {k: {"count": 0.0, "payload_bytes": 0.0,
+                                     "wire_bytes": 0.0}
+                                 for k in _COLL_KINDS})
+    calls: list = dataclasses.field(default_factory=list)  # (name, mult)
+    unknown_trips: int = 0
+    items: list = dataclasses.field(default_factory=list)
+    # items: (kind, value, tag) — per-instruction diagnostics for hillclimbs:
+    #   ('dot', flops, 'shape @ op_name') / (coll_kind, wire_bytes, 'shape gN')
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_SHAPE_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        members = [x for x in first.split(",") if x.strip() != ""]
+        return max(len(members), 1)
+    if _PAIRS_RE.search(line):
+        return 2
+    return 1
+
+
+def parse_module(hlo_text: str) -> dict[str, CompCost]:
+    comps: dict[str, CompCost] = {}
+    entry: str | None = None
+    cur: str | None = None
+    symtab: dict[str, str] = {}
+
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and "=" not in \
+                stripped.split("->")[0].split("(")[0]:
+            ms = _COMP_START_RE.match(stripped)
+            if ms:
+                cur = ms.group(2)
+                comps[cur] = CompCost()
+                symtab = {}
+                if ms.group(1):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        name, rest = md.groups()
+        mo = _OPCODE_RE.match(rest)
+        if not mo:
+            continue
+        shape_txt, opcode = mo.groups()
+        symtab[name] = shape_txt
+        cost = comps[cur]
+
+        # --- call edges ---
+        mult = 1.0
+        if opcode == "while":
+            mt = _TRIP_RE.search(line)
+            trips = float(mt.group(1)) if mt else 1.0
+            if not mt:
+                cost.unknown_trips += 1
+            for key in ("body", "condition"):
+                mc = _CALLED_RE[key].search(line)
+                if mc:
+                    cost.calls.append((mc.group(1), trips))
+        else:
+            for key in ("to_apply", "calls"):
+                mc = _CALLED_RE[key].search(line)
+                if mc:
+                    cost.calls.append((mc.group(1), 1.0))
+            mb = _BRANCHES_RE.search(line)
+            if mb:
+                for b in _OPERAND_RE.findall(mb.group(1)):
+                    cost.calls.append((b, 1.0))
+
+        # --- flops (dot) ---
+        if opcode == "dot":
+            out_dims = _first_shape_dims(shape_txt) or []
+            out_n = 1
+            for d in out_dims:
+                out_n *= d
+            # operand shapes: inline or via symtab
+            paren = rest[rest.index("("):]
+            operands = _OPERAND_RE.findall(paren.split(")")[0])
+            lhs_shape_txt = None
+            inline = _SHAPE_RE.findall(paren.split(")")[0])
+            if inline:
+                lhs_shape_txt = f"{inline[0][0]}[{inline[0][1]}]"
+            elif operands and operands[0] in symtab:
+                lhs_shape_txt = symtab[operands[0]]
+            contract = 1
+            mc = _LHS_CONTRACT_RE.search(line)
+            if lhs_shape_txt and mc:
+                lhs_dims = _first_shape_dims(lhs_shape_txt) or []
+                for idx in (int(i) for i in mc.group(1).split(",") if i):
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+            cost.flops += 2.0 * out_n * contract
+            mm = re.search(r'op_name="([^"]*)"', line)
+            cost.items.append(
+                ("dot", 2.0 * out_n * contract,
+                 f"{shape_txt.split('{')[0]} @ {mm.group(1)[-80:] if mm else name}"))
+
+        # --- collectives ---
+        for k in _COLL_KINDS:
+            if opcode == k or opcode.startswith(k + "-start"):
+                per_shard = _shape_bits(shape_txt)
+                g = _group_size(line)
+                if k == "all-reduce":
+                    factor = 2.0 * (g - 1) / g
+                elif k == "collective-permute":
+                    factor = 1.0
+                else:
+                    factor = (g - 1) / g
+                cost.coll[k]["count"] += 1
+                cost.coll[k]["payload_bytes"] += float(per_shard * g)
+                cost.coll[k]["wire_bytes"] += float(per_shard * g * factor)
+                mm = re.search(r'op_name="([^"]*)"', line)
+                cost.items.append(
+                    (k, float(per_shard * g * factor),
+                     f"{shape_txt.split('{')[0]} g={g} @ "
+                     f"{mm.group(1)[-70:] if mm else name}"))
+                break
+
+        # --- traffic (HBM-byte proxy; see module docstring) ---
+        if opcode in _TRAFFIC_OPS:
+            out_b = _shape_bits(shape_txt)
+            paren = rest[rest.index("("):] if "(" in rest else ""
+            arglist = paren.split(")")[0]
+            opnds = [
+                _shape_bits(symtab[op])
+                for op in _OPERAND_RE.findall(arglist) if op in symtab
+            ]
+            if opcode in ("dynamic-slice", "gather", "slice"):
+                # windowed read: the actual read volume is the output
+                traffic = 2.0 * out_b
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                # read+write of the update slice (operand 1)
+                upd = opnds[1] if len(opnds) > 1 else out_b
+                traffic = 2.0 * min(upd, out_b)
+            elif opcode == "copy":
+                # loop-carry copies mostly alias on TPU; charge the write
+                traffic = float(out_b)
+            elif opcode == "dot":
+                traffic = float(out_b + sum(opnds))
+            else:
+                # fusions etc: operands capped at 4x output — a fused
+                # dynamic-slice of a big stacked buffer reads a window, not
+                # the whole stack.
+                traffic = float(out_b + sum(min(o, 4 * out_b) for o in opnds))
+            cost.traffic += float(traffic)
+
+    comps["__entry__"] = comps.get(entry, CompCost()) if entry else CompCost()
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def aggregate(hlo_text: str) -> dict:
+    comps = parse_module(hlo_text)
+    entry = comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 64:
+            return (0.0, 0.0, {k: {"count": 0.0, "payload_bytes": 0.0,
+                                   "wire_bytes": 0.0} for k in _COLL_KINDS},
+                    0, [])
+        fl, tr = c.flops, c.traffic
+        coll = {k: dict(v) for k, v in c.coll.items()}
+        unk = c.unknown_trips
+        items = [(k, v, t, 1.0) for (k, v, t) in c.items]
+        for callee, mult in c.calls:
+            cf, ct, cc, cu, ci = total(callee, depth + 1)
+            fl += mult * cf
+            tr += mult * ct
+            unk += cu
+            for k in _COLL_KINDS:
+                for f in ("count", "payload_bytes", "wire_bytes"):
+                    coll[k][f] += mult * cc[k][f]
+            items.extend((k, v, t, m * mult) for (k, v, t, m) in ci)
+        # cap per-computation diagnostics at the 60 heaviest (value * mult)
+        items.sort(key=lambda it: -(it[1] * it[3]))
+        memo[name] = (fl, tr, coll, unk, items[:60])
+        return memo[name]
+
+    fl, tr, coll, unk, items = (total(entry) if entry
+                                else (0.0, 0.0, None, 0, []))
+    top = [{"kind": k, "total": v * m, "mult": m, "tag": t}
+           for (k, v, t, m) in items]
+    top.sort(key=lambda d: -d["total"])
+    return {
+        "flops": fl,
+        "traffic_bytes": tr,
+        "collectives": coll,
+        "unknown_trip_loops": unk,
+        "top_ops": top[:40],
+    }

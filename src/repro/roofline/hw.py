@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the dry-run target)."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip
+PEAK_FLOPS_INT8 = 394e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW_PER_LINK = 50e9         # bytes/s per link (spec'd effective)
+HBM_PER_CHIP = 16 * 2**30      # bytes
+VMEM_PER_CHIP = 128 * 2**20    # bytes (v5e ~128 MiB across cores)

@@ -1,0 +1,92 @@
+"""Roofline report generator: results/dryrun/*.json -> markdown tables.
+
+Usage:  PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro import configs as cfg_lib
+from repro.configs.base import SHAPES
+from repro.roofline import analysis, hw
+
+
+def load_cells(directory: str) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        # older skip records carry identity only in the filename
+        parts = os.path.basename(path)[:-5].split("__")
+        if len(parts) == 4:
+            c.setdefault("arch", parts[0])
+            c.setdefault("shape", parts[1])
+            c.setdefault("mesh", parts[2])
+            c.setdefault("quant", parts[3])
+        cells.append(c)
+    return cells
+
+
+def cell_row(c: dict) -> dict | None:
+    if c.get("status") != "ok":
+        return None
+    cfg = cfg_lib.get_config(c["arch"])
+    shape = SHAPES[c["shape"]]
+    mf = analysis.model_flops_for_cell(cfg, shape)
+    terms = analysis.roofline_terms(c, model_flops=mf,
+                                    int8=(c.get("quant") == "w8a8"))
+    wall = max(terms.compute_s, terms.memory_s, terms.collective_s)
+    hbm_gib = (c["memory"]["temp_bytes"] + c["memory"]["argument_bytes"]) / 2**30
+    return {
+        "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+        "quant": c.get("quant", "none"),
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s, "dominant": terms.dominant,
+        "useful_ratio": terms.useful_ratio,
+        "roofline_fraction": terms.compute_s / wall if wall else 0.0,
+        "hbm_gib": hbm_gib,
+        "fits": hbm_gib <= hw.HBM_PER_CHIP / 2**30,
+        "compile_s": c.get("compile_s", 0.0),
+    }
+
+
+def render(cells: list[dict], mesh: str = "single",
+           quant: str = "none") -> str:
+    rows = [r for r in (cell_row(c) for c in cells)
+            if r and r["mesh"] == mesh and r["quant"] == quant]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO | roofline frac | GiB/chip | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['hbm_gib']:.1f} | "
+            f"{'Y' if r['fits'] else 'N'} |")
+    skips = [c for c in cells
+             if c.get("status") == "skipped" and c["mesh"] == mesh]
+    for c in skips:
+        out.append(f"| {c['arch']} | {c['shape']} | — | — | — | skipped | — |"
+                   f" — | — | — |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--quant", default="none")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print(render(cells, args.mesh, args.quant))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Serving engine: batched prefill + decode with KV caches.
+
+The engine wraps model.prefill / model.decode_step into a request-batched
+greedy/temperature sampler.  Both steps are jit'd once per (batch, seq)
+bucket; production decode shapes are what launch/dryrun.py lowers for the
+roofline (serve_step == decode_step by construction — the dry-run proves the
+full engine step, not a toy)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: Any           # [B, T_new]
+    logprobs: Any         # [B, T_new]
+    steps: int
+
+
+class Engine:
+    def __init__(self, params, cfg, *, max_len: int = 512, mode=None):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.mode = mode
+        self._prefill = jax.jit(
+            functools.partial(model_lib.prefill, cfg=cfg, max_len=max_len,
+                              mode=mode))
+        self._decode = jax.jit(
+            functools.partial(model_lib.decode_step, cfg=cfg, mode=mode))
+
+    def generate(self, batch: dict, *, max_new_tokens: int = 32,
+                 temperature: float = 0.0, key=None) -> GenerationResult:
+        logits, caches = self._prefill(self.params, batch)
+        toks, lps = [], []
+        tok = self._sample(logits[:, -1], temperature, key, 0)
+        for t in range(max_new_tokens):
+            toks.append(tok)
+            step_batch = {"tokens": tok[:, None]}
+            logits, caches = self._decode(self.params, step_batch, caches)
+            lp = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32))
+            lps.append(jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0])
+            tok = self._sample(logits[:, -1], temperature, key, t + 1)
+        return GenerationResult(
+            tokens=jnp.stack(toks, axis=1),
+            logprobs=jnp.stack(lps, axis=1),
+            steps=max_new_tokens,
+        )
+
+    @staticmethod
+    def _sample(logits, temperature, key, t):
+        if temperature <= 0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, t)
+        return jax.random.categorical(
+            k, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)

@@ -1,0 +1,134 @@
+"""Training loop: jit'd step builder, grad accumulation, fault tolerance.
+
+make_train_step(cfg, tcfg) builds a pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function:
+
+  * gradient accumulation over `tcfg.microbatches` via lax.scan (the batch's
+    leading dim is reshaped to [micro, B/micro, ...]);
+  * per-layer remat policy from tcfg.remat;
+  * AdamW + cosine + clipping from train/optimizer.py (state sharded like
+    params => ZeRO-1 x TP).
+
+`run` drives the loop with auto-resume: on start it restores the latest
+valid checkpoint (params, optimizer, step) and regenerates the data stream
+from that step (deterministic per-step seeding), so a killed job continues
+bit-identically.  A step-time watchdog flags stragglers; anomalous steps are
+logged with their wall time (on real fleets this feeds the scheduler;
+here it is surfaced in metrics).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import synthetic
+from repro.models import model as model_lib
+from repro.train import optimizer as opt_lib
+
+
+def make_train_step(cfg, tcfg) -> Callable:
+    def loss_of(params, batch):
+        return model_lib.loss_fn(
+            params, batch, cfg,
+            remat_policy=getattr(tcfg, "remat_policy", "nothing"),
+            mode="qat" if cfg.linear_mode == "qat" else None,
+        )
+
+    def _micro_split(batch, m):
+        """[B, ...] -> [m, B/m, ...] with microbatches INTERLEAVED across the
+        batch (strided), so every data shard contributes rows to every
+        microbatch; 'positions' ([3, B, S]) splits along axis 1."""
+        def split(k, x):
+            axis = 1 if (k == "positions" and x.ndim == 3) else 0
+            b = x.shape[axis]
+            x = jnp.moveaxis(x, axis, 0)
+            x = x.reshape(b // m, m, *x.shape[1:]).swapaxes(0, 1)
+            if axis == 1:  # [m, B/m, 3, S] -> [m, 3, B/m, S]
+                x = x.swapaxes(1, 2)
+            return x
+        return {k: split(k, v) for k, v in batch.items()}
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                g_acc, l_acc, m_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss, m_acc + metrics["ce"]), None
+
+            mb_batch = _micro_split(batch, tcfg.microbatches)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, ce), _ = jax.lax.scan(
+                micro, (zeros, 0.0, 0.0), mb_batch)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = loss / tcfg.microbatches
+            ce = ce / tcfg.microbatches
+        else:
+            (loss, mets), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            ce = mets["ce"]
+        new_params, new_opt, opt_metrics = opt_lib.adamw_update(
+            grads, opt_state, params, tcfg)
+        metrics = {"loss": loss, "ce": ce, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def run(cfg, tcfg, *, ckpt_dir: str, steps: int | None = None,
+        log_every: int = 10, straggler_factor: float = 3.0,
+        callback=None) -> dict:
+    """Single-host training driver with auto-resume (used by examples and
+    the fault-tolerance tests; the multi-pod path lowers the same train_step
+    under pjit in launch/train.py)."""
+    steps = steps or tcfg.total_steps
+    stream = synthetic.TokenStreamConfig(
+        vocab=cfg.vocab, seq_len=256 if cfg.vocab > 1000 else 128,
+        global_batch=8, seed=tcfg.seed)
+
+    mgr = CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints)
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = model_lib.init(key, cfg)
+    opt_state = opt_lib.init_opt_state(params)
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        restored = mgr.restore(latest, {"params": params, "opt": opt_state})
+        params, opt_state = restored["params"], restored["opt"]
+        start = latest
+    # No donation here: with f32 compute dtype, params is master.astype(f32)
+    # == an ALIAS of opt_state['master'], and donating both trips XLA's
+    # double-donation check.  (The production path in launch/ donates — its
+    # params are bf16, a real copy of the f32 master.)
+    train_step = jax.jit(make_train_step(cfg, tcfg))
+
+    times = []
+    history = []
+    for step in range(start, steps):
+        batch = synthetic.lm_batch(stream, step)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        metrics = jax.tree.map(float, jax.device_get(metrics))
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        med = sorted(times[-50:])[len(times[-50:]) // 2]
+        metrics["step_time_s"] = dt
+        metrics["straggler"] = bool(len(times) > 5 and dt > straggler_factor * med)
+        history.append({"step": step, **metrics})
+        if callback:
+            callback(step, params, metrics)
+        if (step + 1) % tcfg.checkpoint_every == 0 or step + 1 == steps:
+            mgr.save_async(step + 1, {"params": params, "opt": opt_state})
+        if step % log_every == 0:
+            print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                  f"ce {metrics['ce']:.4f} lr {metrics['lr']:.2e} "
+                  f"gnorm {metrics['grad_norm']:.2f} {dt*1e3:.0f}ms"
+                  + (" STRAGGLER" if metrics["straggler"] else ""))
+    mgr.wait()
+    return {"params": params, "opt_state": opt_state, "history": history}

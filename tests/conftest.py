@@ -1,0 +1,18 @@
+"""Shared test fixtures.  NOTE: XLA_FLAGS / host-device-count is deliberately
+NOT set here — smoke tests and benchmarks must see the single real CPU
+device.  Distributed tests that need multiple devices spawn subprocesses
+(see tests/test_distributed.py)."""
+import os
+
+# Keep CPU compiles light and deterministic for the test suite.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

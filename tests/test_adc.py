@@ -1,0 +1,53 @@
+"""ADC model: ideal transfer, INL bounds, ReLU early-stop accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc
+
+
+def test_ideal_adc_is_exact_quantizer():
+    cfg = adc.AdcConfig(relu=False)
+    s = adc.ideal_adc(cfg)
+    v = jnp.linspace(-1.0, 127 / 128, 256)
+    codes, _ = adc.convert(v, s, cfg)
+    np.testing.assert_array_equal(np.asarray(codes), np.arange(-128, 128))
+
+
+def test_relu_early_stop_zeros_negatives():
+    cfg = adc.AdcConfig(relu=True)
+    s = adc.ideal_adc(cfg)
+    v = jnp.array([-0.5, -0.01, 0.0, 0.01, 0.5])
+    codes, neg = adc.convert(v, s, cfg)
+    assert np.all(np.asarray(codes) >= 0)
+    assert float(neg) == pytest.approx(2 / 5)
+
+
+def test_sampled_inl_hits_spec():
+    cfg = adc.AdcConfig(max_inl_lsb=1.2)
+    for i in range(5):
+        s = adc.sample_adc(jax.random.PRNGKey(i), cfg)
+        inl = np.asarray(s["inl_lut"])
+        assert np.max(np.abs(inl)) == pytest.approx(1.2, rel=1e-3)
+
+
+def test_inl_perturbs_but_keeps_monotone_scale():
+    cfg = adc.AdcConfig(max_inl_lsb=1.2, relu=False)
+    s = adc.sample_adc(jax.random.PRNGKey(0), cfg)
+    v = jnp.linspace(-1.0, 127 / 128, 256)
+    codes, _ = adc.convert(v, s, cfg)
+    codes = np.asarray(codes)
+    ideal = np.arange(-128, 128)
+    assert np.max(np.abs(codes - ideal)) <= 2   # INL <= 1.2 LSB + rounding
+    # Codes never decrease by more than the INL bound allows.
+    assert np.all(np.diff(codes) >= -2)
+
+
+def test_average_cycles_relu_saving():
+    cfg = adc.AdcConfig(relu=True, sar_cycles=10)
+    # ~55% negative => ~2x saving (paper's claim).
+    avg = float(adc.average_conversion_cycles(jnp.asarray(0.55), cfg))
+    assert 10.0 / avg == pytest.approx(1.98, rel=0.05)
+    cfg_off = adc.AdcConfig(relu=False)
+    assert float(adc.average_conversion_cycles(jnp.asarray(0.55), cfg_off)) == 10.0

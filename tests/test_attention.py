@@ -1,0 +1,65 @@
+"""Attention equivalences: chunked==full, SWA banding, GQA, decode algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+def _qkv(key, b=2, s=64, h=4, kvh=2, d=16, sk=None):
+    ks = jax.random.split(key, 3)
+    sk = sk or s
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sk, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sk, kvh, d), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("q_chunk,kv_chunk", [(16, 16), (32, 16), (16, 64)])
+def test_chunked_equals_full(rng, causal, q_chunk, kv_chunk):
+    q, k, v = _qkv(rng)
+    want = A.attend_full(q, k, v, causal=causal)
+    got = A.attend_chunked(q, k, v, causal=causal, q_chunk=q_chunk,
+                           kv_chunk=kv_chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24, 64])
+def test_chunked_sliding_window(rng, window):
+    q, k, v = _qkv(rng)
+    want = A.attend_full(q, k, v, causal=True, window=window)
+    got = A.attend_chunked(q, k, v, causal=True, window=window,
+                           q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_chunked_cross_attention_different_lengths(rng):
+    q, k, v = _qkv(rng, s=32, sk=96)
+    want = A.attend_full(q, k, v, causal=False)
+    got = A.attend_chunked(q, k, v, causal=False, q_chunk=16, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_attend_decode_equals_full_last_row(rng):
+    q, k, v = _qkv(rng, s=33)
+    want = A.attend_full(q, k, v, causal=True)[:, -1:]
+    got = A.attend_decode(q[:, -1:], k, v,
+                          kv_len_mask=jnp.ones((2, 33), bool))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_gqa_matches_repeated_mha(rng):
+    """GQA == MHA with KV heads explicitly repeated."""
+    q, k, v = _qkv(rng, h=8, kvh=2)
+    out_gqa = A.attend_full(q, k, v, causal=True)
+    k_rep = A._repeat_kv(k, 4)
+    v_rep = A._repeat_kv(v, 4)
+    out_mha = A.attend_full(q, k_rep, v_rep, causal=True)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               rtol=1e-5)

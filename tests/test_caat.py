@@ -1,0 +1,57 @@
+"""CAAT model: ideal linearity, mismatch statistics, algebraic collapse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import caat, numerics
+
+
+def test_ideal_caat_is_perfectly_linear():
+    cfg = caat.CaatConfig()
+    inl = caat.caat_inl(caat.ideal_caat(cfg), cfg)
+    assert np.max(np.abs(inl)) < 1e-4
+
+
+def test_ideal_caat_scaling():
+    """v_root == code / (ASUM * WSUM) on the static transfer sweep."""
+    cfg = caat.CaatConfig()
+    s = caat.ideal_caat(cfg)
+    codes = jnp.arange(-128, 128)
+    v = np.asarray(caat.caat_transfer(codes, s, cfg), np.float64)
+    expect = np.arange(-128, 128) / (128.0 * 128.0)
+    np.testing.assert_allclose(v, expect, atol=1e-6)
+
+
+def test_mismatch_degrades_gracefully():
+    cfg = caat.CaatConfig(sigma_unit=0.0014, c2c_stage_gamma=0.0007,
+                          gain_sigma=0.001, offset_sigma=0.0005)
+    bits = [
+        caat.caat_effective_bits(caat.sample_caat(jax.random.PRNGKey(i), cfg), cfg)
+        for i in range(60)
+    ]
+    bits = np.asarray(bits)
+    # Nominal chip population: most chips in the 6-8b band (Fig. 9a).
+    assert np.median(bits) > 6.0
+    assert np.mean(bits >= 7.0) > 0.4
+    assert np.all(bits > 4.0)
+
+
+def test_effective_linear_weights_collapse():
+    """The 2-level tree == one linear map over the 81 planes (exactly)."""
+    cfg = caat.CaatConfig(sigma_unit=0.003, c2c_stage_gamma=0.002,
+                          gain_sigma=0.01, offset_sigma=0.01)
+    s = caat.sample_caat(jax.random.PRNGKey(3), cfg)
+    w_eff, off = caat.effective_linear_weights(s)
+    v_col = jax.random.uniform(jax.random.PRNGKey(4), (5, 7, 9, 9), minval=-1)
+    direct = caat.caat_combine(v_col, s)
+    collapsed = jnp.einsum("bnki,ki->bn", v_col, w_eff) + off
+    np.testing.assert_allclose(
+        np.asarray(direct), np.asarray(collapsed), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_capacitor_totals_match_paper():
+    assert abs(caat.capacitor_total_hybrid(8) - 96.0) < 1.0
+    binary = caat.capacitor_total_binary(8)
+    assert 1000.0 < binary < 1060.0        # paper: 1032C
+    assert binary / caat.capacitor_total_hybrid(8) > 10.0  # paper: 10.8x

@@ -1,0 +1,52 @@
+"""Output-based fine-tune: recovers linear distortion; folding identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration
+
+
+def test_finetune_inverts_affine_distortion(rng):
+    ideal = jax.random.normal(rng, (512, 32)) * 3.0 + 1.0
+    measured = 0.8 * ideal - 2.5          # pure linear distortion
+    ft = calibration.fit_finetune(ideal, measured, "per_tensor")
+    rec = ft.apply(measured)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(ideal), rtol=1e-4, atol=1e-4)
+
+
+def test_finetune_per_channel_beats_per_tensor_on_channel_skew(rng):
+    k1, k2 = jax.random.split(rng)
+    ideal = jax.random.normal(k1, (2048, 8))
+    gains = jnp.linspace(0.7, 1.3, 8)
+    offs = jnp.linspace(-1.0, 1.0, 8)
+    measured = ideal * gains + offs
+    ft_t = calibration.fit_finetune(ideal, measured, "per_tensor")
+    ft_c = calibration.fit_finetune(ideal, measured, "per_channel")
+    err_t = float(jnp.mean((ft_t.apply(measured) - ideal) ** 2))
+    err_c = float(jnp.mean((ft_c.apply(measured) - ideal) ** 2))
+    assert err_c < err_t * 0.1
+    assert err_c < 1e-6
+
+
+def test_fold_into_epilogue_is_equivalent(rng):
+    acc = jax.random.normal(rng, (64, 16))
+    scale = jnp.float32(0.37)
+    bias = jax.random.normal(jax.random.PRNGKey(5), (16,))
+    ft = calibration.FineTuneParams(gain=jnp.float32(1.1), offset=jnp.float32(-0.2))
+    direct = ft.apply(acc * scale + bias)
+    folded_scale, folded_bias = ft.fold_into(scale, bias)
+    np.testing.assert_allclose(
+        np.asarray(acc * folded_scale + folded_bias), np.asarray(direct), rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_noisy_distortion_statistics_recovered(rng):
+    """With noise on top of the affine, fine-tune matches mean/std (not values)."""
+    k1, k2 = jax.random.split(rng)
+    ideal = jax.random.normal(k1, (4096,)) * 2.0 + 0.3
+    measured = 0.9 * ideal + 0.5 + 0.05 * jax.random.normal(k2, (4096,))
+    ft = calibration.fit_finetune(ideal, measured)
+    rec = ft.apply(measured)
+    assert abs(float(jnp.mean(rec) - jnp.mean(ideal))) < 1e-3
+    assert abs(float(jnp.std(rec) - jnp.std(ideal))) < 1e-3

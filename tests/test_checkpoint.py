@@ -1,0 +1,89 @@
+"""Checkpoint manager: atomicity, keep-k, async, bit-exact resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": jax.random.normal(k1, (4, 8)),
+        "nested": {"b": jax.random.normal(k2, (3,)).astype(jnp.bfloat16),
+                   "step": jnp.asarray(7, jnp.int32)},
+        "lst": [jnp.ones((2,)), jnp.zeros((5,))],
+    }
+
+
+def test_save_restore_roundtrip(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree(rng)
+    mgr.save(3, tree)
+    assert mgr.latest_step() == 3
+    back = mgr.restore(3, tree)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, back)
+    # dtype preserved (bf16 through npz)
+    assert back["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_keep_k_prunes(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree(rng)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_000000003", "step_000000004"]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree(rng)
+    mgr.save_async(11, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 11
+    back = mgr.restore(11, tree)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+
+
+def test_interrupted_save_never_corrupts(tmp_path, rng):
+    """A stale .tmp dir (simulated crash) is invisible to restore."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree(rng)
+    mgr.save(5, tree)
+    # simulate a crash mid-save: leftover tmp dir + stale LATEST content
+    os.makedirs(os.path.join(tmp_path, "step_000000006.tmp-999"))
+    assert mgr.latest_step() == 5
+    back = mgr.restore(5, tree)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+
+
+def test_train_resume_bit_exact(tmp_path):
+    """Kill/restart reproduces the never-crashed run exactly (params AND
+    data stream): the fault-tolerance contract."""
+    from repro import configs as cfg_lib
+    from repro.configs.base import TrainConfig
+    from repro.train import train_loop
+
+    cfg = cfg_lib.reduced_config("granite-moe-1b-a400m", n_layers=1,
+                                 d_model=32)
+    tcfg = TrainConfig(lr=1e-3, total_steps=6, warmup_steps=1,
+                       checkpoint_every=3, remat=False)
+
+    out_a = train_loop.run(cfg, tcfg, ckpt_dir=str(tmp_path / "a"), steps=6,
+                           log_every=100)
+    # run B: crash after 3 steps (simulated by steps=3), then resume to 6
+    train_loop.run(cfg, tcfg, ckpt_dir=str(tmp_path / "b"), steps=3,
+                   log_every=100)
+    out_b = train_loop.run(cfg, tcfg, ckpt_dir=str(tmp_path / "b"), steps=6,
+                           log_every=100)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-6, atol=1e-6),
+        out_a["params"], out_b["params"])

@@ -1,0 +1,66 @@
+"""CAAT behavioral kernel vs the 81-plane oracle and the full macro sim."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import caat, macro
+from repro.kernels.caat_mac import caat_mac_ref, cim_macro_matmul
+
+NOMINAL_CAAT = caat.CaatConfig(
+    sigma_unit=0.0014, c2c_stage_gamma=0.0007, gain_sigma=0.001,
+    offset_sigma=0.0005,
+)
+
+
+def _inputs(seed, b, k, n):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.randint(k1, (b, k), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(k2, (k, n), -128, 128, jnp.int32).astype(jnp.int8)
+    return a, w
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("chip_seed", [0, 1])
+def test_kernel_matches_81_plane_oracle(relu, chip_seed):
+    cfg = macro.MacroConfig(rows=96, caat=NOMINAL_CAAT)
+    chip = macro.sample_chip(jax.random.PRNGKey(chip_seed), cfg)
+    a, w = _inputs(chip_seed, 16, 96, 40)
+    v_fs = jnp.float32(96 * 128 * 128 * 0.25)
+    ref = caat_mac_ref(a, w, chip["caat"], v_fs, relu=relu)
+    got = cim_macro_matmul(a, w, chip, v_fs, cfg, relu=relu, bm=8, bn=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**10),
+    b=st.integers(1, 12),
+    k=st.integers(1, 160),
+    n=st.integers(1, 24),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_property_kernel_equals_full_sim_no_inl(seed, b, k, n):
+    """Multi-tile kernel path == core.macro sim (ideal ADC), any shape."""
+    cfg = macro.MacroConfig(rows=64, caat=NOMINAL_CAAT)
+    chip = macro.sample_chip(jax.random.PRNGKey(seed), cfg)
+    a, w = _inputs(seed + 1, b, k, n)
+    v_fs = jnp.float32(64 * 128 * 128 * 0.3)
+    got = cim_macro_matmul(a, w, chip, v_fs, cfg, relu=True, bm=8, bn=8)
+    want, _ = macro.cim_matmul_sim(a, w, chip, v_fs, cfg, relu=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want, np.int32))
+
+
+def test_ideal_chip_kernel_is_quantized_exact_mac():
+    cfg = macro.MacroConfig(rows=128)
+    chip = macro.ideal_chip(cfg)
+    a, w = _inputs(5, 8, 128, 16)
+    from repro.core import numerics
+    exact = np.asarray(numerics.exact_int_matmul(a, w), np.float64)
+    v_fs = jnp.float32(np.abs(exact).max() * 1.05)
+    got = cim_macro_matmul(a, w, chip, v_fs, cfg, relu=False, bm=8, bn=16)
+    lsb = float(v_fs) / 128.0
+    err = np.abs(np.asarray(got) * lsb - exact) / lsb
+    assert err.max() <= 0.5 + 1e-6

@@ -1,0 +1,81 @@
+"""Pallas fused W8A8 kernel vs pure-jnp oracle: shape/dtype sweeps (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cim_matmul import cim_matmul, cim_matmul_ref
+
+
+def _inputs(seed, m, k, n):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    a = jax.random.randint(k1, (m, k), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(k2, (k, n), -128, 128, jnp.int32).astype(jnp.int8)
+    w_s = jax.random.uniform(k3, (n,), minval=0.01, maxval=0.2)
+    bias = jax.random.normal(k4, (n,)) * 10
+    return a, w, jnp.float32(0.07), w_s, bias
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (32, 128, 64, 32, 64, 128),
+    (64, 512, 128, 32, 64, 128),   # multi-step K accumulation
+    (8, 128, 128, 8, 128, 64),
+    (128, 256, 256, 64, 128, 256),
+])
+@pytest.mark.parametrize("relu", [False, True])
+def test_kernel_matches_ref_f32(m, k, n, bm, bn, bk, relu):
+    a, w, a_s, w_s, bias = _inputs(0, m, k, n)
+    ref = cim_matmul_ref(a, w, a_s, w_s, bias, jnp.float32(1.0), relu=relu)
+    got = cim_matmul(a, w, a_s, w_s, bias=bias, relu=relu, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_kernel_requant_bit_exact(relu):
+    a, w, a_s, w_s, bias = _inputs(1, 64, 256, 96)
+    out_s = jnp.float32(0.5)
+    ref = cim_matmul_ref(a, w, a_s, w_s, bias, out_s, relu=relu, requant=True,
+                         out_dtype=jnp.int8)
+    got = cim_matmul(a, w, a_s, w_s, bias=bias, out_scale=out_s, relu=relu,
+                     bm=32, bn=32, bk=128)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**16),
+    m=st.integers(1, 70),
+    k=st.integers(1, 300),
+    n=st.integers(1, 90),
+    relu=st.booleans(),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_arbitrary_shapes_padding(seed, m, k, n, relu):
+    """ops.py pads arbitrary shapes to block multiples without corruption."""
+    a, w, a_s, w_s, bias = _inputs(seed, m, k, n)
+    ref = cim_matmul_ref(a, w, a_s, w_s, bias, jnp.float32(1.0), relu=relu)
+    got = cim_matmul(a, w, a_s, w_s, bias=bias, relu=relu, bm=16, bn=32, bk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-3)
+
+
+def test_leading_batch_dims():
+    a, w, a_s, w_s, bias = _inputs(3, 24, 128, 32)
+    a3 = a.reshape(2, 3, 4, 128)
+    ref = cim_matmul_ref(a, w, a_s, w_s, bias, jnp.float32(1.0))
+    got = cim_matmul(a3, w, a_s, w_s, bias=bias, bm=8, bn=32, bk=64)
+    assert got.shape == (2, 3, 4, 32)
+    np.testing.assert_allclose(
+        np.asarray(got).reshape(24, 32), np.asarray(ref), rtol=1e-5, atol=1e-3
+    )
+
+
+def test_int32_accumulation_no_overflow_long_k():
+    """K=2048 of worst-case int8 products stays inside int32."""
+    m, k, n = 8, 2048, 16
+    a = jnp.full((m, k), -128, jnp.int8)
+    w = jnp.full((k, n), -128, jnp.int8)
+    got = cim_matmul(a, w, jnp.float32(1.0), jnp.ones((n,)), bm=8, bn=16, bk=256)
+    assert float(got[0, 0]) == 128.0 * 128.0 * k  # 33.5M < 2^31

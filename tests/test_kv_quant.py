@@ -1,0 +1,79 @@
+"""int8 KV cache: fully-integer decode attention + end-to-end consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+from repro.models import attention as A
+from repro.models import model as M
+
+
+def test_quantize_dequantize_kv_roundtrip(rng):
+    x = jax.random.normal(rng, (2, 16, 4, 32))
+    q, s = A.quantize_kv(x)
+    back = A.dequantize_kv(q, s)
+    # per-token-head scaling: error ~ scale/2 (+ bf16 rounding of the scale)
+    err = np.abs(np.asarray(back) - np.asarray(x, np.float32))
+    bound = np.asarray(s, np.float32)[..., None] * 0.56 + 1e-4
+    assert np.all(err <= bound)
+
+
+def test_attend_decode_int8_close_to_f32(rng):
+    ks = jax.random.split(rng, 3)
+    B, S, H, KVH, D = 2, 64, 8, 4, 16
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, KVH, D))
+    v = jax.random.normal(ks[2], (B, S, KVH, D))
+    mask = jnp.arange(S)[None] < 50
+    want = A.attend_decode(q, k, v, mask)
+    kq, ksc = A.quantize_kv(k)
+    vq, vsc = A.quantize_kv(v)
+    got = A.attend_decode_int8(q, kq, ksc, vq, vsc, mask)
+    err = np.abs(np.asarray(got, np.float32) - np.asarray(want, np.float32))
+    rel = err.max() / np.abs(np.asarray(want)).max()
+    assert rel < 0.05, rel
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "granite-moe-1b-a400m"])
+def test_int8_kv_end_to_end_decode(arch, rng):
+    cfg = cfg_lib.reduced_config(arch, n_layers=2)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params = M.init(rng, cfg)
+    batch = {"tokens": jax.random.randint(rng, (2, 8), 0, cfg.vocab)}
+    lg_f, c_f = M.prefill(params, batch, cfg, max_len=16)
+    lg_q, c_q = M.prefill(params, batch, cfg8, max_len=16)
+    assert c_q["kv"]["k"].dtype == jnp.int8
+    tok = {"tokens": jnp.argmax(lg_f[:, -1:], -1).astype(jnp.int32)}
+    for _ in range(3):
+        d_f, c_f = M.decode_step(params, tok, c_f, cfg)
+        d_q, c_q = M.decode_step(params, tok, c_q, cfg8)
+        cos = float(jnp.sum(d_f * d_q) /
+                    (jnp.linalg.norm(d_f) * jnp.linalg.norm(d_q) + 1e-9))
+        assert cos > 0.999, cos
+        tok = {"tokens": jnp.argmax(d_f[:, -1:], -1).astype(jnp.int32)}
+
+
+def test_frozen_moe_experts_int8(rng):
+    """W8A8 expert banks produce outputs close to the float experts."""
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as moe_lib
+    mcfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32, capacity_factor=2.0)
+    p = moe_lib.init_moe(rng, 32, mcfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, 32)) * 0.5
+    y_f, _ = moe_lib.moe(p, x, mcfg)
+
+    frozen = dict(p)
+    from repro.models.model import freeze_params
+    fz = freeze_params({"gate": p["gate"], "up": p["up"], "down": p["down"]},
+                       a_scale=float(jnp.max(jnp.abs(x))) / 127.0)
+    frozen.update(fz)
+    for k in ("gate", "up", "down"):
+        frozen.pop(k, None)
+    frozen["router"] = p["router"]
+    y_q, _ = moe_lib.moe(frozen, x, mcfg)
+    cos = float(jnp.sum(y_f * y_q) /
+                (jnp.linalg.norm(y_f) * jnp.linalg.norm(y_q) + 1e-9))
+    assert cos > 0.97, cos

@@ -1,0 +1,112 @@
+"""Macro-level matmul sim: oracle agreement, tiling, ReLU fusion rules."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import macro, numerics
+
+
+def _rand_int8(key, shape):
+    return jax.random.randint(key, shape, -128, 128, jnp.int32).astype(jnp.int8)
+
+
+def test_ideal_chip_single_tile_within_half_lsb(rng):
+    cfg = macro.MacroConfig(rows=64)
+    chip = macro.ideal_chip(cfg)
+    k1, k2 = jax.random.split(rng)
+    a = _rand_int8(k1, (8, 64))
+    w = _rand_int8(k2, (64, 16))
+    exact = np.asarray(numerics.exact_int_matmul(a, w), np.float64)
+    v_fs = float(np.abs(exact).max() * 1.05)
+    codes, stats = macro.cim_matmul_sim(a, w, chip, jnp.float32(v_fs), cfg, relu=False)
+    lsb = v_fs / 128.0
+    err = np.abs(np.asarray(codes) * lsb - exact) / lsb
+    assert err.max() <= 0.5 + 1e-6
+    assert float(stats["n_tiles"]) == 1.0
+
+
+def test_relu_fused_only_for_single_tile(rng):
+    cfg = macro.MacroConfig(rows=32)
+    chip = macro.ideal_chip(cfg)
+    k1, k2 = jax.random.split(rng)
+    a = _rand_int8(k1, (4, 32))
+    w = _rand_int8(k2, (32, 8))
+    _, stats1 = macro.cim_matmul_sim(a, w, chip, jnp.float32(1e5), cfg, relu=True)
+    assert float(stats1["relu_fused"]) == 1.0
+    a2 = _rand_int8(k1, (4, 100))
+    w2 = _rand_int8(k2, (100, 8))
+    codes2, stats2 = macro.cim_matmul_sim(a2, w2, chip, jnp.float32(1e5), cfg, relu=True)
+    assert float(stats2["relu_fused"]) == 0.0
+    assert float(stats2["n_tiles"]) == 4.0
+    assert np.all(np.asarray(codes2) >= 0)  # digital ReLU still applied
+
+
+def test_multi_tile_accumulation_tracks_oracle(rng):
+    cfg = macro.MacroConfig(rows=48)
+    chip = macro.ideal_chip(cfg)
+    k1, k2 = jax.random.split(rng)
+    a = _rand_int8(k1, (6, 144))   # 3 tiles
+    w = _rand_int8(k2, (144, 12))
+    exact = np.asarray(numerics.exact_int_matmul(a, w), np.float64)
+    v_fs = float(np.abs(exact).max())  # generous per-tile FS
+    codes, _ = macro.cim_matmul_sim(a, w, chip, jnp.float32(v_fs), cfg, relu=False)
+    lsb = v_fs / 128.0
+    err = np.abs(np.asarray(codes) * lsb - exact) / lsb
+    # 3 tiles => up to 3 half-LSB roundings.
+    assert err.max() <= 1.5 + 1e-6
+
+
+@hypothesis.given(
+    b=st.integers(min_value=1, max_value=4),
+    k=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_ideal_macro_quantizes_exact_mac(b, k, n, seed):
+    cfg = macro.MacroConfig(rows=32)
+    chip = macro.ideal_chip(cfg)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = _rand_int8(k1, (b, k))
+    w = _rand_int8(k2, (k, n))
+    exact = np.asarray(numerics.exact_int_matmul(a, w), np.float64)
+    # The analog full scale is a PER-TILE quantity: calibrate it from the
+    # per-tile partial sums (a per-chip deployment step), not the total MAC —
+    # per-tile partials can exceed the total through cancellation.
+    rows = cfg.rows
+    n_tiles = -(-k // rows)
+    pad = n_tiles * rows - k
+    a_np = np.pad(np.asarray(a, np.int64), ((0, 0), (0, pad)))
+    w_np = np.pad(np.asarray(w, np.int64), ((0, pad), (0, 0)))
+    partials = np.einsum(
+        "btr,trn->tbn",
+        a_np.reshape(b, n_tiles, rows),
+        w_np.reshape(n_tiles, rows, n),
+    )
+    v_fs = max(float(np.abs(partials).max()), 1.0) * 1.1
+    codes, stats = macro.cim_matmul_sim(a, w, chip, jnp.float32(v_fs), cfg, relu=False)
+    lsb = v_fs / 128.0
+    n_tiles = float(stats["n_tiles"])
+    err = np.abs(np.asarray(codes) * lsb - exact) / lsb
+    assert err.max() <= 0.5 * n_tiles + 1e-6
+
+
+def test_nonideal_chip_bounded_distortion(rng):
+    cfg = macro.nominal_config(rows=128)
+    chip = macro.sample_chip(jax.random.PRNGKey(11), cfg)
+    k1, k2 = jax.random.split(rng)
+    a = _rand_int8(k1, (16, 128))
+    w = _rand_int8(k2, (128, 32))
+    exact = np.asarray(numerics.exact_int_matmul(a, w), np.float64)
+    v_fs = float(np.abs(exact).max() * 1.05)
+    codes, _ = macro.cim_matmul_sim(a, w, chip, jnp.float32(v_fs), cfg, relu=False)
+    approx = np.asarray(codes) * v_fs / 128.0
+    lsb = v_fs / 128.0
+    err_lsb = np.abs(approx - exact) / lsb
+    # Nominal chip: ~7b effective accuracy => errors of a few LSB, not garbage.
+    assert np.median(err_lsb) < 3.0
+    assert err_lsb.max() < 12.0

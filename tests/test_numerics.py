@@ -1,0 +1,59 @@
+"""Eq.(1) codec: exactness, multiplicativity, and oracle consistency."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import numerics
+
+
+def test_pm1_roundtrip_exhaustive_int8():
+    xs = jnp.arange(-128, 128)
+    bits = numerics.encode_pm1(xs)
+    assert bits.shape == (256, 9)
+    assert set(np.unique(np.asarray(bits))) <= {-1, 1}
+    np.testing.assert_array_equal(np.asarray(numerics.decode_pm1(bits)), np.asarray(xs))
+
+
+def test_twos_complement_roundtrip_exhaustive_int8():
+    xs = jnp.arange(-128, 128)
+    planes = numerics.encode_twos_complement_planes(xs)
+    assert set(np.unique(np.asarray(planes))) <= {0, 1}
+    np.testing.assert_array_equal(
+        np.asarray(numerics.decode_twos_complement_planes(planes)), np.asarray(xs)
+    )
+
+
+@pytest.mark.parametrize("nbits", [2, 4, 6, 8])
+def test_pm1_roundtrip_other_widths(nbits):
+    lo, hi = -(2 ** (nbits - 1)), 2 ** (nbits - 1)
+    xs = jnp.arange(lo, hi)
+    np.testing.assert_array_equal(
+        np.asarray(numerics.decode_pm1(numerics.encode_pm1(xs, nbits), nbits)),
+        np.asarray(xs),
+    )
+
+
+@hypothesis.given(
+    a=st.integers(min_value=-128, max_value=127),
+    w=st.integers(min_value=-128, max_value=127),
+)
+@hypothesis.settings(max_examples=200, deadline=None)
+def test_pm1_multiplicative(a, w):
+    """a*w == sum_k sum_i alpha_k beta_i (a_k * w_i): the XNOR-MAC identity."""
+    weights = np.asarray(numerics.bit_weights(8), np.float64)
+    ab = np.asarray(numerics.encode_pm1(jnp.asarray(a)), np.float64)
+    wb = np.asarray(numerics.encode_pm1(jnp.asarray(w)), np.float64)
+    prod = np.einsum("k,i,k,i->", weights, weights, ab, wb)
+    assert prod == a * w
+
+
+def test_exact_int_matmul_matches_numpy(rng):
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.randint(k1, (7, 33), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(k2, (33, 11), -128, 128, jnp.int32).astype(jnp.int8)
+    got = numerics.exact_int_matmul(a, w)
+    want = np.asarray(a, np.int64) @ np.asarray(w, np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)

@@ -1,0 +1,87 @@
+"""Quantization utilities: scales, exact datapaths, QAT gradients."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import numerics, quant
+
+
+def test_absmax_scale_roundtrip(rng):
+    x = jax.random.normal(rng, (128, 64)) * 4.2
+    s = quant.absmax_scale(x)
+    q = quant.quantize(x, s)
+    err = jnp.abs(quant.dequantize(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-6
+
+
+def test_w8a8_equals_exact_integer_path(rng):
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.randint(k1, (9, 77), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(k2, (77, 13), -128, 128, jnp.int32).astype(jnp.int8)
+    y = quant.w8a8_matmul(a, w, jnp.float32(1.0), jnp.ones((13,)))
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(numerics.exact_int_matmul(a, w), np.float32)
+    )
+
+
+@hypothesis.given(seed=st.integers(0, 2**16), k=st.integers(1, 64))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_bitserial_equals_single_pass(seed, k):
+    """8 bit-serial passes + shift-add == the single fused pass (paper Fig 1)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.randint(k1, (3, k), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(k2, (k, 5), -128, 128, jnp.int32).astype(jnp.int8)
+    ws = jnp.ones((5,))
+    y1 = quant.w8a8_matmul(a, w, jnp.float32(1.0), ws)
+    y8 = quant.bitserial_matmul(a, w, jnp.float32(1.0), ws)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y8), rtol=0, atol=1e-3)
+
+
+def test_bitserial_per_plane_adc_loses_precision(rng):
+    """Per-plane conversions (prior-work datapath) add quantization noise —
+    the accuracy argument for the single-conversion design."""
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.randint(k1, (32, 256), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(k2, (256, 16), -128, 128, jnp.int32).astype(jnp.int8)
+    ws = jnp.ones((16,))
+    exact = quant.w8a8_matmul(a, w, jnp.float32(1.0), ws)
+    lossy = quant.bitserial_matmul(
+        a, w, jnp.float32(1.0), ws, plane_adc_bits=8
+    )
+    err = float(jnp.max(jnp.abs(lossy - exact)))
+    assert err > 0.0  # visibly lossy
+    rel = err / float(jnp.max(jnp.abs(exact)))
+    assert rel < 0.2  # but not absurd
+
+
+def test_fake_quant_ste_gradient_passes_through(rng):
+    x = jax.random.normal(rng, (32,))
+    s = quant.absmax_scale(x)
+
+    def loss(x):
+        return jnp.sum(quant.fake_quant(x, s) ** 2)
+
+    g = jax.grad(loss)(x)
+    # STE: gradient == 2*fq(x) (identity through the quantizer).
+    np.testing.assert_allclose(
+        np.asarray(g), np.asarray(2 * quant.fake_quant(x, s)), rtol=1e-5
+    )
+
+
+def test_qat_linear_matches_quantized_forward(rng):
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (4, 16))
+    w = jax.random.normal(k2, (16, 8))
+    a_s = quant.absmax_scale(x)
+    w_s = quant.absmax_scale(w, axis=0)
+    y = quant.qat_linear(x, w, a_s, w_s)
+    xq = quant.quantize(x, a_s)
+    wq = quant.quantize(w, w_s)
+    want = (
+        np.asarray(xq, np.float32) * np.asarray(a_s)
+    ) @ (np.asarray(wq, np.float32) * np.asarray(w_s))
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-4, atol=1e-5)

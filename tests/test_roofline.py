@@ -1,0 +1,96 @@
+"""HLO parser: trip-count multiplication, dot FLOPs, collective factors."""
+import numpy as np
+import pytest
+
+from repro.roofline import analysis, hlo_parse, hw
+
+HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[16,32]<=[512], to_apply=%add.1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.1 (arg: f32[8,16]) -> (s32[], f32[8,16]) {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%c0, %arg)
+  %big = f32[32,64]{1,0} constant({...})
+  %w2 = f32[64,8]{1,0} constant({...})
+  %dot.2 = f32[32,8]{1,0} dot(%big, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %wh = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_loop_aware_flops():
+    agg = hlo_parse.aggregate(HLO)
+    # dot.1: 2*8*16*16 = 4096 flops x 10 trips; dot.2: 2*32*8*64 = 32768 x 1
+    assert agg["flops"] == pytest.approx(4096 * 10 + 32768)
+    assert agg["unknown_trip_loops"] == 0
+
+
+def test_loop_aware_collectives():
+    agg = hlo_parse.aggregate(HLO)
+    ar = agg["collectives"]["all-reduce"]
+    assert ar["count"] == 10  # one per trip
+    # per-shard 8*16*4 bytes, group 32, ring factor 2*31/32
+    expected = 8 * 16 * 4 * 32 * 2 * 31 / 32 * 10
+    assert ar["wire_bytes"] == pytest.approx(expected)
+
+
+def test_top_ops_diagnostics():
+    agg = hlo_parse.aggregate(HLO)
+    kinds = [it["kind"] for it in agg["top_ops"]]
+    assert "dot" in kinds and "all-reduce" in kinds
+    dots = [it for it in agg["top_ops"] if it["kind"] == "dot"]
+    assert dots[0]["total"] >= dots[-1]["total"]
+
+
+def test_roofline_terms_dominance():
+    result = {
+        "n_chips": 256,
+        "flops_per_device": 1e12,
+        "traffic_bytes_per_device": 1e9,
+        "collectives": {"all-reduce": {"wire_bytes": 1e10, "count": 1,
+                                       "payload_bytes": 1e10}},
+    }
+    t = analysis.roofline_terms(result, model_flops=2e14)
+    assert t.dominant == "compute"
+    assert t.compute_s == pytest.approx(1e12 / hw.PEAK_FLOPS_BF16)
+    assert t.useful_ratio == pytest.approx(2e14 / (1e12 * 256))
+
+
+def test_model_flops_conventions():
+    from repro import configs as cfg_lib
+    from repro.configs.base import SHAPES
+    cfg = cfg_lib.get_config("qwen3-8b")
+    f_train = analysis.model_flops_for_cell(cfg, SHAPES["train_4k"])
+    f_dec = analysis.model_flops_for_cell(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert f_train == pytest.approx(6 * n * 4096 * 256)
+    assert f_dec == pytest.approx(2 * n * 128)
+    # MoE uses ACTIVE params
+    moe = cfg_lib.get_config("moonshot-v1-16b-a3b")
+    assert moe.active_param_count() < 0.4 * moe.param_count()
