@@ -1,0 +1,17 @@
+# Local mirror of .github/workflows/ci.yml.  `make ci` is the tier-1 gate;
+# ruff runs only when installed (the CI image always installs it).
+PY ?= python
+
+.PHONY: ci test lint
+
+ci: lint test
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks examples; \
+	else \
+		echo "ruff not installed; skipping lint (CI runs it)"; \
+	fi

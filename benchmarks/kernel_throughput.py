@@ -52,6 +52,20 @@ def main() -> None:
         lambda: quant.w8a8_matmul(a, w, a_s, ws, relu=True), iters=5)
     emit("kernel_xla_w8a8", t_xla, "jnp int8 dot path")
 
+    # Registry view: the same kernels behind their backends, with the
+    # backend-owned arithmetic-intensity estimate for the roofline.
+    from repro.core import backend as backend_lib
+    from repro.core import executor
+    spec = executor.LinearSpec(in_dim=k, out_dim=n, relu=True, mode="w8a8")
+    frozen = {"w_q": w, "w_scale": ws, "a_scale": jnp.float32(1.0)}
+    x = a.astype(jnp.float32)
+    for name in ("w8a8", "w8a8_kernel", "bitserial_kernel"):
+        b = backend_lib.get_backend(name)
+        spec_b = spec.__class__(**{**spec.__dict__, "mode": name})
+        t = time_call(lambda b=b, s=spec_b: b.apply(frozen, x, s), iters=3)
+        emit(f"backend_{name}", t,
+             f"flops_per_byte={b.flops_per_byte(spec_b, batch=m):.1f}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,66 +1,94 @@
-"""Quickstart: the CD-CiM macro in five minutes.
+"""Quickstart: the CD-CiM macro through the execution-backend API.
 
-1. Build a chip (CAAT mismatch + ADC INL sampled like the fabricated die).
-2. Run an int8 matmul three ways: exact MXU datapath (w8a8), full analog
-   behavioral sim (cim), and the 8-pass bit-serial baseline.
+1. Build a layer once, then run it through registry-dispatched backends:
+   the idealized single-conversion datapath (w8a8), the fused Pallas kernel
+   (w8a8_kernel, interpret mode on CPU), the 8-pass bit-serial baseline,
+   and the full analog behavioral sim (cim) with a sampled chip.
+2. Read the conversion stats straight out of `apply` — no re-deriving.
 3. Apply the paper's output-based fine-tune and watch the error drop.
 4. Price the workload with the silicon-calibrated energy model.
+5. Describe a mixed per-layer deployment with a DeploymentPlan.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import calibration, energy, macro, numerics, quant
+from repro.core import backend, calibration, energy, executor, macro, quant
+from repro.core.backend import DeploymentPlan, LayerRule
 
 
 def main():
     key = jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(key)
 
-    # A (batch 32) x W (1152 x 64): one macro tile, like the paper's array.
-    a = jax.random.randint(k1, (32, 1152), -128, 128, jnp.int32).astype(jnp.int8)
-    w = jax.random.randint(k2, (1152, 64), -128, 128, jnp.int32).astype(jnp.int8)
+    # One macro-sized layer: K = 1152 rows, like the paper's array.
+    spec = executor.LinearSpec(
+        in_dim=1152, out_dim=64, use_bias=False, relu=True, mode="w8a8",
+        macro=macro.nominal_config(rows=1152))
+    x = jax.random.normal(k1, (32, 1152)) * 0.5
+    params = executor.init(k2, spec)
+    a_scale = quant.absmax_scale(x)
 
-    exact = numerics.exact_int_matmul(a, w).astype(jnp.float32)
-    print(f"exact int MAC range: [{float(exact.min()):.0f}, "
-          f"{float(exact.max()):.0f}]")
+    print("registered backends:", ", ".join(backend.available_backends()))
 
-    # --- the idealized single-conversion datapath (TPU form) ---
-    y_w8a8 = quant.w8a8_matmul(a, w, jnp.float32(1.0), jnp.ones((64,)),
-                               relu=True)
-    print("w8a8 == relu(exact):",
-          bool(jnp.all(y_w8a8 == jnp.maximum(exact, 0))))
+    # --- freeze once, run through three int8 backends -----------------------
+    frozen = executor.freeze(params, spec, a_scale)
+    ref = executor.apply(frozen, x, spec)                     # w8a8 oracle
+    for mode in ("w8a8", "w8a8_kernel", "bitserial"):
+        spec_m = dataclasses.replace(spec, mode=mode)
+        y, stats = executor.apply(frozen, x, spec_m, return_stats=True)
+        match = bool(jnp.max(jnp.abs(y - ref)) < 1e-3)
+        print(f"{mode:13s} conversions/output={stats['n_passes']:.0f} "
+              f"matches w8a8: {match}")
 
-    # --- the analog macro, non-idealities included ---
-    cfg = macro.nominal_config(rows=1152)
-    chip = macro.sample_chip(jax.random.PRNGKey(42), cfg)
-    v_fs = jnp.float32(float(jnp.max(jnp.abs(exact))) * 1.05)
-    codes, stats = macro.cim_matmul_sim(a, w, chip, v_fs, cfg, relu=True)
-    y_cim = codes * (v_fs / 128.0)
-    ref = jnp.maximum(exact, 0)
+    # --- the analog macro, non-idealities included --------------------------
+    # The analog full scale is a *static* calibration quantity (the array
+    # cannot autorange): measure the int MAC envelope on calibration data.
+    spec_cim = dataclasses.replace(spec, mode="cim")
+    chip = macro.sample_chip(jax.random.PRNGKey(42), spec_cim.macro)
+    mac = quant.int8_matmul_int32(quant.quantize(x, a_scale), frozen["w_q"])
+    v_fs = float(jnp.max(jnp.abs(mac))) * 1.05
+    frozen_cim = executor.freeze(params, spec_cim, a_scale, chip=chip,
+                                 v_fs_mac=v_fs)
+    y_cim, stats = executor.apply(frozen_cim, x, spec_cim, return_stats=True)
     err = float(jnp.linalg.norm(y_cim - ref) / jnp.linalg.norm(ref))
     print(f"cim (raw chip) relative error: {err:.4f}  "
           f"(negative fraction {float(stats['neg_fraction']):.2f}, "
           f"ReLU fused: {bool(stats['relu_fused'])})")
 
-    # --- output-based fine-tune (one calibration pass) ---
+    # --- output-based fine-tune (one calibration pass) -----------------------
     ft = calibration.fit_finetune(ref, y_cim)
-    y_ft = ft.apply(y_cim)
+    frozen_ft = executor.freeze(params, spec_cim, a_scale, chip=chip,
+                                finetune=ft, v_fs_mac=v_fs)
+    y_ft = executor.apply(frozen_ft, x, spec_cim)
     err_ft = float(jnp.linalg.norm(y_ft - ref) / jnp.linalg.norm(ref))
     print(f"cim + fine-tune relative error: {err_ft:.4f} "
           f"(gain {float(ft.gain):.4f}, offset {float(ft.offset):.2f})")
 
-    # --- energy: what would this cost on the 65nm macro? ---
+    # --- energy: what would this cost on the 65nm macro? ---------------------
     n_conv = float(stats["n_conversions"])
     e = energy.workload_energy_joules(
         n_conv, neg_fraction=float(stats["neg_fraction"]),
         relu_fused=bool(stats["relu_fused"]))
-    ops = 2.0 * a.shape[0] * 1152 * 64
+    ops = 2.0 * x.shape[0] * 1152 * 64
     print(f"macro energy: {e*1e9:.2f} nJ for {ops/1e6:.1f} MOPs "
           f"=> {ops/e/1e12:.2f} TOPS/W "
           f"(chip: 10.3 TOPS/W peak @240MHz, 3.53 @1GHz)")
+
+    # --- per-layer mixed deployment: one plan, many backends -----------------
+    plan = DeploymentPlan(rules=(
+        ("*attn*", LayerRule("w8a8_kernel")),
+        ("*mlp*", LayerRule("w8a8")),
+        ("lm_head", LayerRule("exact")),
+    ), default="w8a8")
+    print("plan:", plan.to_json())
+    for path in ("stack/blocks/attn/q", "stack/blocks/mlp/up", "lm_head"):
+        print(f"  {path:22s} -> {plan.backend_for(path)}")
+    # Models consume the same plan: M.freeze_params(params, plan=plan) and
+    # Engine(frozen, cfg, plan=plan) — see examples/serve_lm.py.
 
 
 if __name__ == "__main__":

@@ -43,16 +43,23 @@ def main():
     print(f"[exact ] {args.batch}x{args.tokens} tokens in {dt_exact:.2f}s "
           f"({args.batch*args.tokens/dt_exact:.1f} tok/s, incl. compile)")
 
-    # --- deployed W8A8 (CiM datapath) serving ---
-    frozen = M.freeze_params(params, a_scale=0.05)
-    eng_q = Engine(frozen, cfg, max_len=args.prompt_len + args.tokens + 8)
+    # --- deployed W8A8 (CiM datapath) serving, per-layer plan ---
+    from repro.core.backend import DeploymentPlan, LayerRule
+    plan = DeploymentPlan(rules=(
+        ("lm_head", LayerRule("exact")),       # head stays float
+        ("*router*", LayerRule("exact")),      # routing is precision-sensitive
+    ), default="w8a8")
+    frozen = M.freeze_params(params, a_scale=0.05, plan=plan)
+    eng_q = Engine(frozen, cfg, max_len=args.prompt_len + args.tokens + 8,
+                   plan=plan)
     t0 = time.perf_counter()
     res_q = eng_q.generate(prompts, max_new_tokens=args.tokens)
     jax.block_until_ready(res_q.tokens)
     dt_q = time.perf_counter() - t0
     agree = float(np.mean(np.asarray(res.tokens) == np.asarray(res_q.tokens)))
     print(f"[w8a8  ] {args.batch}x{args.tokens} tokens in {dt_q:.2f}s; "
-          f"greedy-token agreement vs exact: {agree:.2%}")
+          f"greedy-token agreement vs exact: {agree:.2%}  "
+          f"(plan: {plan.to_json()})")
 
     # --- what would the CiM macro charge for the linear layers? ---
     # conversions = output elements of every weight-stationary matmul.

@@ -7,12 +7,16 @@ Layers (bottom-up):
   macro        full-matmul macro simulation (row tiling, digital accumulation)
   calibration  output-based fine-tune compensation
   quant        W8A8 static quantization + QAT + idealized datapaths
-  executor     LinearExecutor: exact | qat | w8a8 | w8a8_kernel | bitserial | cim
+  backend      ExecutionBackend registry + DeploymentPlan (per-layer mixed
+               deployment); every mode is a pluggable backend class
+  executor     LinearExecutor: spec-based front-end over the backend registry
   energy       analytic energy/area/latency model (Table I, Fig. 7/8)
 """
-from repro.core import adc, caat, calibration, energy, executor, macro, numerics, quant
+from repro.core import (
+    adc, backend, caat, calibration, energy, executor, macro, numerics, quant,
+)
 
 __all__ = [
-    "adc", "caat", "calibration", "energy", "executor", "macro", "numerics",
-    "quant",
+    "adc", "backend", "caat", "calibration", "energy", "executor", "macro",
+    "numerics", "quant",
 ]

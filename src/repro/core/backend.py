@@ -1,0 +1,593 @@
+"""Execution backends: the paper's datapath as a pluggable, registry-dispatched
+API, plus per-layer deployment plans.
+
+The chip's core claim — **one** A/D conversion per MAC instead of one per
+activation bit — used to live in this repo as six string modes hard-wired
+into an if/elif chain.  Here each mode is a self-contained
+:class:`ExecutionBackend` with a uniform contract:
+
+  init(key, spec)          master (float) params
+  freeze(params, ...)      deploy transform -> int8 params w/ static scales
+                           (identity for float backends)
+  apply(params, x, spec)   run the linear; optionally returns conversion
+                           stats (n_conversions, relu_fused, neg_fraction)
+                           as an aux so energy/accuracy studies stop
+                           re-deriving them
+  flops_per_byte(spec)     arithmetic-intensity estimate for the roofline
+
+Backends register under a name (``@register_backend("w8a8")``); new variants
+(per-tile-requant CiM, int4, …) plug in without touching any dispatcher:
+
+    @register_backend("my_cim_v2")
+    class MyCimV2(CimBackend):
+        ...
+
+On top of the registry, :class:`DeploymentPlan` maps layer *path patterns*
+(fnmatch) to backends + calibration overrides, enabling per-layer mixed
+deployment — e.g. attention projections on the fused Pallas kernel, MLPs on
+the bit-serial baseline, lm_head in float:
+
+    plan = DeploymentPlan(rules=(
+        ("*attn*", LayerRule("w8a8_kernel")),
+        ("*mlp*",  LayerRule("bitserial")),
+        ("lm_head", LayerRule("exact")),
+    ), default="w8a8")
+
+(The 'cim' backend needs a per-layer chip sample and macro config, which
+the generic transformer freeze does not plumb — deploy it through
+`executor.freeze` / `vgg.freeze_vgg8`, which do.)
+
+Every ``mode=`` kwarg in models/serve/launch accepts a plan wherever it
+accepted a mode string (strings still work — they resolve to single-backend
+plans through the same registry).  Plans are static pytree nodes (hashable,
+jit-stable) and JSON round-trippable for deployment manifests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as cal_lib
+from repro.core import macro as macro_lib
+from repro.core import quant
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    in_dim: int
+    out_dim: int
+    use_bias: bool = False
+    relu: bool = False            # fuse ReLU into the conversion epilogue
+    mode: str = "exact"
+    dtype: Any = jnp.bfloat16     # compute dtype for exact/qat
+    # CiM-sim knobs (mode == 'cim'):
+    macro: macro_lib.MacroConfig = macro_lib.MacroConfig()
+    # Bit-serial baseline knobs (mode == 'bitserial'):
+    plane_adc_bits: int | None = None   # per-plane ADC resolution (None=exact)
+    dynamic_plane_fs: bool = False      # opt-in runtime autorange (not
+    #                                     deployable: data-dependent FS)
+
+    def __post_init__(self):
+        if self.mode not in _REGISTRY:
+            raise ValueError(
+                f"unknown mode {self.mode!r}; expected one of "
+                f"{available_backends()}")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, "ExecutionBackend"] = {}
+
+
+def register_backend(name: str) -> Callable[[type], type]:
+    """Class decorator: instantiate and register a backend under `name`."""
+    def deco(cls: type) -> type:
+        inst = cls()
+        inst.name = name
+        _REGISTRY[name] = inst
+        return cls
+    return deco
+
+
+def get_backend(name: "str | ExecutionBackend") -> "ExecutionBackend":
+    if isinstance(name, ExecutionBackend):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Backend base
+# ---------------------------------------------------------------------------
+
+class ExecutionBackend:
+    """One execution strategy for a weight-stationary linear layer.
+
+    Subclasses set ``frozen = True`` when ``apply`` consumes deployed int8
+    params ('w_q'); float backends (exact/qat) run on master params ('w').
+    """
+
+    name: str = "?"
+    frozen: bool = False          # does apply() consume frozen (int8) params?
+    deploys_int8: bool = False    # does freeze() emit the int8 param layout?
+    needs_chip: bool = False      # does apply() need a sampled chip plumbed?
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def init(self, key: jax.Array, spec: LinearSpec,
+             scale: float | None = None) -> Params:
+        """Master (float) parameters with fan-in scaled init."""
+        if scale is None:
+            scale = spec.in_dim ** -0.5
+        w = jax.random.normal(
+            key, (spec.in_dim, spec.out_dim), jnp.float32) * scale
+        p: Params = {"w": w.astype(spec.dtype)}
+        if spec.use_bias:
+            p["b"] = jnp.zeros((spec.out_dim,), jnp.float32)
+        return p
+
+    def freeze(self, params: Params, spec: LinearSpec | None = None,
+               a_scale: "float | jax.Array" = 1.0, *, n_mat_dims: int = 2,
+               **kw) -> Params:
+        """Deploy transform.  Float backends keep master params."""
+        return params
+
+    def apply(self, params: Params, x: jax.Array,
+              spec: LinearSpec | None = None, *,
+              a_scale: jax.Array | None = None,
+              chip: macro_lib.MacroSample | None = None,
+              return_stats: bool = False):
+        raise NotImplementedError
+
+    # -- analysis -----------------------------------------------------------
+
+    def _bytes_moved(self, spec: LinearSpec, batch: int) -> float:
+        """Approximate HBM traffic for one apply (weights + acts + out)."""
+        k, n = spec.in_dim, spec.out_dim
+        return 2.0 * (k * n + batch * k) + 2.0 * batch * n
+
+    def flops_per_byte(self, spec: LinearSpec, batch: int = 1) -> float:
+        """Arithmetic intensity of one apply at the given batch."""
+        return (2.0 * batch * spec.in_dim * spec.out_dim
+                / self._bytes_moved(spec, batch))
+
+    def stats(self, spec: LinearSpec, batch: int = 1) -> dict[str, float]:
+        """Static (shape-derived) conversion accounting for one apply."""
+        return {
+            "n_conversions": 0.0,
+            "n_passes": 1.0,
+            "relu_fused": 0.0,
+            "neg_fraction": 0.0,
+        }
+
+    def _finish(self, y, stats, return_stats):
+        return (y, stats) if return_stats else y
+
+
+def _w8a8_freeze(params: Params, a_scale, n_mat_dims: int = 2) -> Params:
+    """Master float linear -> deployed int8 form with static scales.
+
+    Handles stacked leading dims (lax.scan'd layer stacks, [L, K, N]):
+    w_scale is per output channel within each stacked matrix and a_scale
+    carries the leading dims so frozen stacks slice like every other leaf.
+    """
+    w = params["w"].astype(jnp.float32)
+    scale = quant.absmax_scale(w, axis=-2)           # [..., 1, N]
+    lead = w.shape[:-n_mat_dims]
+    frozen: Params = {
+        "w_q": quant.quantize(w, scale),
+        "w_scale": jnp.squeeze(scale, -2),
+        "a_scale": jnp.full(lead, a_scale, jnp.float32),
+    }
+    if "b" in params:
+        frozen["b"] = params["b"].astype(jnp.float32)
+    return frozen
+
+
+def _quantize_input(params: Params, x: jax.Array, a_scale):
+    a_s = params.get("a_scale", a_scale)
+    assert a_s is not None, "frozen backends need a static activation scale"
+    return quant.quantize(x.astype(jnp.float32), a_s), a_s
+
+
+def _batch_elems(x: jax.Array) -> float:
+    b = 1.0
+    for d in x.shape[:-1]:
+        b *= d
+    return b
+
+
+# ---------------------------------------------------------------------------
+# The six (plus one) built-in backends
+# ---------------------------------------------------------------------------
+
+@register_backend("exact")
+class ExactBackend(ExecutionBackend):
+    """bf16/f32 matmul baseline.  freeze() is the identity: layers mapped to
+    'exact' in a DeploymentPlan stay in float through deployment."""
+
+    def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
+              return_stats=False):
+        dtype = spec.dtype if spec is not None else x.dtype
+        y = x.astype(dtype) @ params["w"].astype(dtype)
+        if "b" in params:
+            y = y + params["b"].astype(dtype)
+        if spec is not None and spec.relu:
+            y = jnp.maximum(y, 0)
+        return self._finish(y, self.stats_for(x, params), return_stats)
+
+    def stats_for(self, x, params):
+        return {"n_conversions": 0.0, "n_passes": 1.0, "relu_fused": 0.0,
+                "neg_fraction": 0.0}
+
+
+@register_backend("qat")
+class QatBackend(ExecutionBackend):
+    """Fake-quant W8A8 with straight-through grads (training for CiM).
+    freeze() deploys to the same int8 form as w8a8."""
+
+    deploys_int8 = True
+
+    def freeze(self, params, spec=None, a_scale=1.0, *, n_mat_dims=2, **kw):
+        return _w8a8_freeze(params, a_scale, n_mat_dims)
+
+    def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
+              return_stats=False):
+        dtype = spec.dtype if spec is not None else x.dtype
+        relu = spec.relu if spec is not None else False
+        a_s = a_scale if a_scale is not None else quant.absmax_scale(x)
+        w = params["w"].astype(jnp.float32)
+        w_s = quant.absmax_scale(w, axis=0)
+        y = quant.qat_linear(
+            x.astype(jnp.float32), w, a_s, w_s,
+            bias=params.get("b"), relu=relu,
+        ).astype(dtype)
+        stats = {"n_conversions": 0.0, "n_passes": 1.0,
+                 "relu_fused": 1.0 if relu else 0.0, "neg_fraction": 0.0}
+        return self._finish(y, stats, return_stats)
+
+
+class _SingleConversionBackend(ExecutionBackend):
+    """Shared plumbing for the deployed single-conversion int8 paths."""
+
+    frozen = True
+    deploys_int8 = True
+    n_passes = 1.0
+
+    def freeze(self, params, spec=None, a_scale=1.0, *, n_mat_dims=2, **kw):
+        return _w8a8_freeze(params, a_scale, n_mat_dims)
+
+    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu):
+        raise NotImplementedError
+
+    def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
+              return_stats=False):
+        relu = spec.relu if spec is not None else False
+        xq, a_s = _quantize_input(params, x, a_scale)
+        y = self._matmul(xq, params["w_q"], a_s, params["w_scale"],
+                         params.get("b"), relu)
+        stats = {
+            "n_conversions": _batch_elems(x) * params["w_q"].shape[-1]
+            * self.n_passes,
+            "n_passes": self.n_passes,
+            "relu_fused": 1.0 if relu else 0.0,
+            "neg_fraction": 0.0,
+        }
+        return self._finish(y, stats, return_stats)
+
+    def stats(self, spec, batch=1):
+        return {
+            "n_conversions": float(batch * spec.out_dim) * self.n_passes,
+            "n_passes": self.n_passes,
+            "relu_fused": 1.0 if spec.relu else 0.0,
+            "neg_fraction": 0.0,
+        }
+
+    def _bytes_moved(self, spec, batch):
+        k, n = spec.in_dim, spec.out_dim
+        # int8 weights + int8 activations, one f32 epilogue write per pass.
+        return self.n_passes * (k * n + batch * k) + 4.0 * batch * n
+
+
+@register_backend("w8a8")
+class W8A8Backend(_SingleConversionBackend):
+    """Idealized CiM datapath: int8 MXU matmul + ONE fused
+    dequant/bias/ReLU/requant epilogue (the single-conversion insight)."""
+
+    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu):
+        return quant.w8a8_matmul(xq, w_q, a_s, w_scale, bias=bias, relu=relu)
+
+
+@register_backend("w8a8_kernel")
+class W8A8KernelBackend(_SingleConversionBackend):
+    """Same semantics as w8a8, via the fused Pallas kernel (TPU hot path;
+    interpret mode on CPU)."""
+
+    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu):
+        from repro.kernels.cim_matmul import ops as kops  # lazy import
+        return kops.cim_matmul(xq, w_q, a_s, w_scale, bias=bias, relu=relu)
+
+
+@register_backend("bitserial")
+class BitserialBackend(_SingleConversionBackend):
+    """Prior-work baseline: one pass per activation bit + digital shift-add.
+    One conversion per activation bit — the interface cost the paper's
+    single-ADC design removes.
+
+    With ``spec.plane_adc_bits`` set, each plane's partial sum goes through a
+    finite-resolution conversion against a *static* calibrated full-scale
+    (frozen as 'plane_fs' by :meth:`freeze`); the runtime-autorange variant is
+    an explicit opt-in (``spec.dynamic_plane_fs``) because a data-dependent
+    full scale is neither jit-cache-stable nor deployable on real silicon.
+    """
+
+    n_passes = 8.0
+
+    def freeze(self, params, spec=None, a_scale=1.0, *, n_mat_dims=2,
+               plane_full_scale=None, calib_a_q=None, **kw):
+        frozen = _w8a8_freeze(params, a_scale, n_mat_dims)
+        if plane_full_scale is not None:
+            frozen["plane_fs"] = jnp.asarray(plane_full_scale, jnp.float32)
+        elif calib_a_q is not None:
+            frozen["plane_fs"] = quant.calibrate_plane_full_scale(
+                calib_a_q, frozen["w_q"])
+        return frozen
+
+    def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
+              return_stats=False):
+        relu = spec.relu if spec is not None else False
+        plane_bits = spec.plane_adc_bits if spec is not None else None
+        dynamic = spec.dynamic_plane_fs if spec is not None else False
+        xq, a_s = _quantize_input(params, x, a_scale)
+        y = quant.bitserial_matmul(
+            xq, params["w_q"], a_s, params["w_scale"],
+            bias=params.get("b"), relu=relu,
+            plane_adc_bits=plane_bits,
+            plane_full_scale=params.get("plane_fs"),
+            dynamic_plane_fs=dynamic,
+        )
+        stats = {
+            "n_conversions": _batch_elems(x) * params["w_q"].shape[-1] * 8.0,
+            "n_passes": 8.0,
+            "relu_fused": 0.0,   # ReLU happens after the digital shift-add
+            "neg_fraction": 0.0,
+        }
+        return self._finish(y, stats, return_stats)
+
+
+@register_backend("bitserial_kernel")
+class BitserialKernelBackend(_SingleConversionBackend):
+    """Pallas bit-plane kernel variant of the bit-serial baseline (8 kernel
+    launches + host shift-add).  Registered as a seventh backend: proof that
+    new execution strategies plug in without touching any dispatcher."""
+
+    n_passes = 8.0
+
+    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu):
+        from repro.kernels.bitserial_matmul import ops as kops  # lazy import
+        return kops.bitserial_matmul(xq, w_q, a_s, w_scale, bias=bias,
+                                     relu=relu)
+
+
+@register_backend("cim")
+class CimBackend(ExecutionBackend):
+    """Full behavioral macro simulation: CAAT mismatch + ADC INL + per-row-
+    tile conversions, with the output-based fine-tune affine.
+
+    Needs per-layer chip samples + macro configs at freeze/apply time, so it
+    deploys through `executor.freeze`/`vgg.freeze_vgg8` (which plumb them),
+    not through the generic `model.freeze_params` plan walk."""
+
+    frozen = True
+    deploys_int8 = True
+    needs_chip = True
+
+    def freeze(self, params, spec=None, a_scale=1.0, *, n_mat_dims=2,
+               chip=None, finetune=None, v_fs_mac=None, **kw):
+        assert spec is not None, "cim freeze needs a LinearSpec (macro cfg)"
+        frozen = _w8a8_freeze(params, a_scale, n_mat_dims)
+        if v_fs_mac is None:
+            v_fs_mac = macro_lib.default_v_fs(
+                127.0, 127.0, spec.in_dim, spec.macro.rows)
+        frozen["v_fs_mac"] = jnp.asarray(v_fs_mac, jnp.float32)
+        ft = finetune or cal_lib.identity_finetune()
+        frozen["ft_gain"] = jnp.asarray(ft.gain, jnp.float32)
+        frozen["ft_offset"] = jnp.asarray(ft.offset, jnp.float32)
+        if chip is not None:
+            frozen["chip"] = chip
+        return frozen
+
+    def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
+              return_stats=False):
+        assert spec is not None, "cim apply needs a LinearSpec (macro cfg)"
+        the_chip = chip if chip is not None else params.get("chip")
+        assert the_chip is not None, "cim mode needs a chip sample"
+        xq, a_s = _quantize_input(params, x, a_scale)
+        lead = xq.shape[:-1]
+        xq2 = xq.reshape(-1, xq.shape[-1])
+        codes, sim_stats = macro_lib.cim_matmul_sim(
+            xq2, params["w_q"], the_chip, params["v_fs_mac"], spec.macro,
+            relu=spec.relu,
+        )
+        out_scale = params["v_fs_mac"] / (2.0 ** (spec.macro.adc.n_bits - 1))
+        y = codes * out_scale * (a_s * params["w_scale"])
+        y = y * params["ft_gain"] + params["ft_offset"]
+        if spec.use_bias:
+            y = y + params["b"]
+        # NOTE: when relu was fused per-tile the epilogue must not undo it;
+        # fine-tune offsets can push values slightly negative — re-clamp.
+        if spec.relu:
+            y = jnp.maximum(y, 0.0)
+        y = y.reshape(*lead, -1)
+        stats = {
+            "n_conversions": sim_stats["n_conversions"],
+            "n_passes": 1.0,
+            "relu_fused": sim_stats["relu_fused"],
+            "neg_fraction": sim_stats["neg_fraction"],
+            "n_tiles": sim_stats["n_tiles"],
+        }
+        return self._finish(y, stats, return_stats)
+
+    def stats(self, spec, batch=1):
+        n_tiles = -(-spec.in_dim // spec.macro.rows)
+        fused = 1.0 if (spec.relu and n_tiles == 1) else 0.0
+        return {
+            "n_conversions": float(batch * spec.out_dim * n_tiles),
+            "n_passes": 1.0,
+            "relu_fused": fused,
+            "neg_fraction": 0.0,
+            "n_tiles": float(n_tiles),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Deployment plans: per-layer backend + calibration overrides
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerRule:
+    """Backend + optional calibration overrides for the layers a pattern
+    matches."""
+    backend: str
+    a_scale: float | None = None          # static activation scale override
+    plane_adc_bits: int | None = None     # bitserial: per-plane ADC bits
+
+    def to_dict(self) -> dict:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentPlan:
+    """Pattern -> backend mapping consumed by models, serving, and launch.
+
+    ``rules`` is an ordered tuple of (fnmatch pattern, LayerRule); the first
+    matching pattern wins, else ``default``.  Layer paths are '/'-joined
+    logical names, e.g. ``stack/blocks/attn/q`` at freeze time and
+    ``attn/q`` at apply time — write patterns with wildcards around
+    component names (``*attn*``, ``*mlp/down``, ``lm_head``) so both match.
+
+    Instances are frozen/hashable (jit-static) and JSON round-trippable.
+    """
+    rules: tuple[tuple[str, LayerRule], ...] = ()
+    default: str = "w8a8"
+
+    def __post_init__(self):
+        norm = tuple(
+            (pat, rule if isinstance(rule, LayerRule) else LayerRule(rule))
+            for pat, rule in self.rules)
+        object.__setattr__(self, "rules", norm)
+
+    def rule_for(self, path: str) -> LayerRule:
+        """First matching rule, else the default.
+
+        NOTE: freeze-time paths are full tree paths
+        ('stack/blocks/attn/q') while apply-time paths are call-site
+        prefixes ('attn/q') — always anchor patterns with wildcards
+        ('*attn/q', '*mlp*') so both resolve to the same rule; an
+        unanchored exact path matches only one side and the other silently
+        falls back to the param-format default."""
+        for pattern, rule in self.rules:
+            if fnmatch.fnmatchcase(path, pattern):
+                return rule
+        return LayerRule(self.default)
+
+    def backend_for(self, path: str) -> str:
+        return self.rule_for(path).backend
+
+    def validate(self) -> "DeploymentPlan":
+        for _, rule in self.rules:
+            get_backend(rule.backend)
+        get_backend(self.default)
+        return self
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "default": self.default,
+            "rules": [[pat, rule.to_dict()] for pat, rule in self.rules],
+        })
+
+    @classmethod
+    def from_json(cls, text: str) -> "DeploymentPlan":
+        obj = json.loads(text)
+        rules = tuple(
+            (pat, LayerRule(**rd)) for pat, rd in obj.get("rules", ()))
+        return cls(rules=rules, default=obj.get("default", "w8a8")).validate()
+
+
+jax.tree_util.register_static(DeploymentPlan)
+jax.tree_util.register_static(LayerRule)
+
+ModeLike = Any  # str | DeploymentPlan | None
+
+
+def as_plan(mode: ModeLike, default: str = "exact") -> DeploymentPlan:
+    """Normalize a mode-or-plan into a DeploymentPlan (back-compat shim:
+    'MODES'-era strings become single-backend plans)."""
+    if mode is None:
+        mode = default
+    if isinstance(mode, DeploymentPlan):
+        return mode
+    get_backend(mode)  # validate early
+    return DeploymentPlan(rules=(), default=mode)
+
+
+def load_plan(spec: str) -> DeploymentPlan:
+    """Parse a plan from a CLI string: a backend name, inline JSON, or a
+    path to a JSON file."""
+    spec = spec.strip()
+    if spec.startswith("{"):
+        return DeploymentPlan.from_json(spec)
+    if spec in _REGISTRY:
+        return DeploymentPlan(rules=(), default=spec)
+    with open(spec) as f:
+        return DeploymentPlan.from_json(f.read())
+
+
+def resolve_backend(mode: ModeLike, path: str = "",
+                    params: Params | None = None) -> str:
+    """Resolve the backend name for one dense call site.
+
+    `mode` may be a plan, a mode string, or None (-> exact).  When `params`
+    is given the choice is reconciled with the param format: deployed params
+    ('w_q') never silently run a float backend (they fall back to 'w8a8',
+    preserving the legacy frozen-dense behavior), and a frozen backend named
+    for still-master params falls back to 'exact' (plans take effect at
+    freeze time).
+    """
+    if isinstance(mode, DeploymentPlan):
+        name = mode.backend_for(path)
+    elif mode is None:
+        name = "exact"
+    else:
+        name = mode
+    if params is not None:
+        backend = get_backend(name)
+        if "w_q" in params and not backend.frozen:
+            name = "w8a8"
+        elif "w_q" not in params and backend.frozen:
+            name = "exact"
+    return name

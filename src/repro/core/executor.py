@@ -1,95 +1,64 @@
-"""LinearExecutor — the paper's datapath as a first-class execution mode.
+"""LinearExecutor — thin spec-based front-end over the backend registry.
 
-Every weight-stationary linear layer in the framework routes through this
-module.  A `LinearSpec` picks the execution mode:
+Every weight-stationary linear layer in the framework routes through an
+:class:`~repro.core.backend.ExecutionBackend`.  A `LinearSpec` names the
+backend (``spec.mode``); this module keeps the historical init/freeze/apply
+entry points but contains **no dispatch logic** — all modes (and any
+plugin-registered ones) resolve through :func:`repro.core.backend.get_backend`:
 
-  exact        bf16/f32 matmul (baseline)
-  qat          fake-quant W8A8 with straight-through grads (training for CiM)
-  w8a8         idealized CiM datapath: int8 MXU matmul + ONE fused
-               dequant/bias/ReLU/requant epilogue (single-conversion insight)
-  w8a8_kernel  same semantics, via the Pallas fused kernel (TPU hot path)
-  bitserial    prior-work baseline: one pass per activation bit + shift-add
-  cim          full behavioral macro simulation with analog non-idealities
-               and the output-based fine-tune affine
+  exact             bf16/f32 matmul (baseline)
+  qat               fake-quant W8A8 with straight-through grads
+  w8a8              idealized CiM datapath: int8 matmul + ONE fused epilogue
+  w8a8_kernel       same semantics via the fused Pallas kernel
+  bitserial         prior-work baseline: one pass per activation bit
+  bitserial_kernel  the same baseline as 8 Pallas bit-plane launches
+  cim               full behavioral macro sim with analog non-idealities
 
 Weights are stored in float (master) form; `freeze` converts a layer to its
-deployed int8 form with static scales.  Modes `w8a8*`/`bitserial`/`cim`
-operate on frozen params; `exact`/`qat` on master params.
+deployed int8 form with static scales.  Frozen backends (`backend.frozen`)
+operate on frozen params; float backends on master params.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
 import jax
-import jax.numpy as jnp
 
+from repro.core import backend as backend_lib
 from repro.core import calibration as cal_lib
 from repro.core import macro as macro_lib
-from repro.core import quant
+from repro.core.backend import (  # noqa: F401  (public API re-exports)
+    DeploymentPlan,
+    LayerRule,
+    LinearSpec,
+    Params,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 
-Params = dict[str, Any]
 
-MODES = ("exact", "qat", "w8a8", "w8a8_kernel", "bitserial", "cim")
-
-
-@dataclasses.dataclass(frozen=True)
-class LinearSpec:
-    in_dim: int
-    out_dim: int
-    use_bias: bool = False
-    relu: bool = False            # fuse ReLU into the conversion epilogue
-    mode: str = "exact"
-    dtype: Any = jnp.bfloat16     # compute dtype for exact/qat
-    # CiM-sim knobs (mode == 'cim'):
-    macro: macro_lib.MacroConfig = macro_lib.MacroConfig()
-
-    def __post_init__(self):
-        if self.mode not in MODES:
-            raise ValueError(f"unknown mode {self.mode!r}; expected one of {MODES}")
+# Back-compat: the historical tuple-valued constant.  Snapshot at import of
+# the built-in backends; plugins appear in available_backends().
+MODES = available_backends()
 
 
 def init(key: jax.Array, spec: LinearSpec, scale: float | None = None) -> Params:
     """Master (float) parameters with fan-in scaled init."""
-    if scale is None:
-        scale = spec.in_dim ** -0.5
-    w = (jax.random.normal(key, (spec.in_dim, spec.out_dim), jnp.float32) * scale)
-    p: Params = {"w": w.astype(spec.dtype)}
-    if spec.use_bias:
-        p["b"] = jnp.zeros((spec.out_dim,), jnp.float32)
-    return p
+    return get_backend(spec.mode).init(key, spec, scale)
 
 
 def freeze(
     params: Params,
     spec: LinearSpec,
-    a_scale: float | jax.Array,
+    a_scale,
     chip: macro_lib.MacroSample | None = None,
     finetune: cal_lib.FineTuneParams | None = None,
-    v_fs_mac: float | jax.Array | None = None,
+    v_fs_mac=None,
+    **kw,
 ) -> Params:
     """Convert master params into the deployed int8 form with static scales."""
-    w = params["w"].astype(jnp.float32)
-    w_scale = quant.absmax_scale(w, axis=0)          # per-channel [1, N]
-    frozen: Params = {
-        "w_q": quant.quantize(w, w_scale),
-        "w_scale": w_scale.reshape(-1),
-        "a_scale": jnp.asarray(a_scale, jnp.float32),
-    }
-    if spec.use_bias:
-        frozen["b"] = params["b"].astype(jnp.float32)
-    if spec.mode == "cim":
-        if v_fs_mac is None:
-            v_fs_mac = macro_lib.default_v_fs(
-                127.0, 127.0, spec.in_dim, spec.macro.rows
-            )
-        frozen["v_fs_mac"] = jnp.asarray(v_fs_mac, jnp.float32)
-        ft = finetune or cal_lib.identity_finetune()
-        frozen["ft_gain"] = jnp.asarray(ft.gain, jnp.float32)
-        frozen["ft_offset"] = jnp.asarray(ft.offset, jnp.float32)
-        if chip is not None:
-            frozen["chip"] = chip
-    return frozen
+    return get_backend(spec.mode).freeze(
+        params, spec, a_scale, chip=chip, finetune=finetune,
+        v_fs_mac=v_fs_mac, **kw)
 
 
 def apply(
@@ -98,67 +67,14 @@ def apply(
     spec: LinearSpec,
     a_scale: jax.Array | None = None,
     chip: macro_lib.MacroSample | None = None,
-) -> jax.Array:
-    """Run the linear in the spec's mode.  x: [..., in_dim]."""
-    mode = spec.mode
-    if mode == "exact":
-        y = x.astype(spec.dtype) @ params["w"].astype(spec.dtype)
-        if spec.use_bias:
-            y = y + params["b"].astype(spec.dtype)
-        if spec.relu:
-            y = jnp.maximum(y, 0)
-        return y
+    return_stats: bool = False,
+):
+    """Run the linear in the spec's backend.  x: [..., in_dim].
 
-    if mode == "qat":
-        a_s = a_scale if a_scale is not None else quant.absmax_scale(x)
-        w = params["w"].astype(jnp.float32)
-        w_s = quant.absmax_scale(w, axis=0)
-        return quant.qat_linear(
-            x.astype(jnp.float32), w, a_s, w_s,
-            bias=params.get("b"), relu=spec.relu,
-        ).astype(spec.dtype)
-
-    # Deployed (frozen) modes below.
-    a_s = params.get("a_scale", a_scale)
-    assert a_s is not None, "frozen modes need a static activation scale"
-    xq = quant.quantize(x.astype(jnp.float32), a_s)
-
-    if mode in ("w8a8", "w8a8_kernel"):
-        if mode == "w8a8_kernel":
-            from repro.kernels.cim_matmul import ops as kops  # lazy import
-            return kops.cim_matmul(
-                xq, params["w_q"], a_s, params["w_scale"],
-                bias=params.get("b"), relu=spec.relu,
-            )
-        return quant.w8a8_matmul(
-            xq, params["w_q"], a_s, params["w_scale"],
-            bias=params.get("b"), relu=spec.relu,
-        )
-
-    if mode == "bitserial":
-        return quant.bitserial_matmul(
-            xq, params["w_q"], a_s, params["w_scale"],
-            bias=params.get("b"), relu=spec.relu,
-        )
-
-    if mode == "cim":
-        the_chip = chip if chip is not None else params.get("chip")
-        assert the_chip is not None, "cim mode needs a chip sample"
-        lead = xq.shape[:-1]
-        xq2 = xq.reshape(-1, xq.shape[-1])
-        codes, _stats = macro_lib.cim_matmul_sim(
-            xq2, params["w_q"], the_chip, params["v_fs_mac"], spec.macro,
-            relu=spec.relu,
-        )
-        out_scale = params["v_fs_mac"] / (2.0 ** (spec.macro.adc.n_bits - 1))
-        y = codes * out_scale * (a_s * params["w_scale"])
-        y = y * params["ft_gain"] + params["ft_offset"]
-        if spec.use_bias:
-            y = y + params["b"]
-        # NOTE: when relu was fused per-tile the epilogue must not undo it;
-        # fine-tune offsets can push values slightly negative — re-clamp.
-        if spec.relu:
-            y = jnp.maximum(y, 0.0)
-        return y.reshape(*lead, -1)
-
-    raise ValueError(f"unhandled mode {mode!r}")
+    With ``return_stats=True`` returns (y, stats) where stats carries the
+    backend's conversion accounting (n_conversions, relu_fused,
+    neg_fraction, n_passes) for energy/accuracy studies.
+    """
+    return get_backend(spec.mode).apply(
+        params, x, spec, a_scale=a_scale, chip=chip,
+        return_stats=return_stats)

@@ -86,6 +86,31 @@ def w8a8_matmul(
     return y
 
 
+def calibrate_plane_full_scale(
+    a_q: jax.Array,            # [..., K] int8 calibration activations
+    w_q: jax.Array,            # [K, N] int8 deployed weights
+    nbits: int = 8,
+    margin: float = 1.1,
+) -> jax.Array:
+    """Static per-plane ADC full-scales for :func:`bitserial_matmul`.
+
+    Real bit-serial macros fix each plane ADC's range at deployment: measure
+    the per-plane partial-sum envelope on a calibration batch once, apply a
+    safety margin.  Returns [nbits] float32 (plane k's |psum| full scale)."""
+    from repro.core import numerics  # local import to avoid cycle
+
+    planes = numerics.encode_twos_complement_planes(a_q, nbits)
+    fs = []
+    for k in range(nbits):
+        p = planes[..., k]
+        psum = jax.lax.dot_general(
+            p, w_q, (((p.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        fs.append(jnp.maximum(jnp.max(jnp.abs(psum)).astype(jnp.float32), 1.0))
+    return jnp.stack(fs) * margin
+
+
 def bitserial_matmul(
     a_q: jax.Array,            # [..., K] int8
     w_q: jax.Array,            # [K, N] int8
@@ -95,6 +120,8 @@ def bitserial_matmul(
     relu: bool = False,
     plane_adc_bits: int | None = None,
     nbits: int = 8,
+    plane_full_scale: jax.Array | None = None,
+    dynamic_plane_fs: bool = False,
 ) -> jax.Array:
     """Bit-serial-activation baseline (prior works [1][2]): 8 passes.
 
@@ -105,8 +132,22 @@ def bitserial_matmul(
 
     With plane_adc_bits=None this is exact (equals w8a8_matmul) but costs
     nbits passes over the data — the throughput bottleneck the paper removes.
+
+    When a per-plane ADC is modeled its full scale must be **static**
+    (`plane_full_scale`: scalar or [nbits], from
+    :func:`calibrate_plane_full_scale`) — an analog front-end cannot
+    autorange per batch, and a data-dependent scale would bake runtime
+    values into the jit cache.  The old runtime-max behavior survives as an
+    explicit opt-in (`dynamic_plane_fs=True`) for studies only.
     """
     from repro.core import numerics  # local import to avoid cycle
+
+    if plane_adc_bits is not None and plane_full_scale is None \
+            and not dynamic_plane_fs:
+        raise ValueError(
+            "plane_adc_bits needs a static plane_full_scale (see "
+            "calibrate_plane_full_scale); pass dynamic_plane_fs=True to "
+            "explicitly opt into the non-deployable runtime-autorange path")
 
     planes = numerics.encode_twos_complement_planes(a_q, nbits)  # [..., K, nbits]
     acc = jnp.zeros((*a_q.shape[:-1], w_q.shape[1]), jnp.float32)
@@ -117,10 +158,19 @@ def bitserial_matmul(
             preferred_element_type=jnp.int32,
         ).astype(jnp.float32)
         if plane_adc_bits is not None:
-            # per-plane conversion: quantize partial sum to the ADC range
-            fs = jnp.maximum(jnp.max(jnp.abs(psum)), 1e-6)
-            lsb = fs / (2 ** (plane_adc_bits - 1))
-            psum = jnp.round(psum / lsb) * lsb
+            half = 2 ** (plane_adc_bits - 1)
+            if plane_full_scale is not None:
+                # static calibrated conversion: the deployable path.  The
+                # ADC clips at its fixed full scale, like the silicon.
+                fs_arr = jnp.asarray(plane_full_scale, jnp.float32)
+                fs = fs_arr[k] if fs_arr.ndim else fs_arr
+                lsb = fs / half
+                psum = jnp.clip(jnp.round(psum / lsb), -half, half - 1) * lsb
+            else:
+                # dynamic autorange (opt-in): per-call data-dependent FS.
+                fs = jnp.maximum(jnp.max(jnp.abs(psum)), 1e-6)
+                lsb = fs / half
+                psum = jnp.round(psum / lsb) * lsb
         weight = -(2.0 ** (nbits - 1)) if k == nbits - 1 else 2.0 ** k
         acc = acc + weight * psum
     y = acc * (a_scale * w_scale)

@@ -15,8 +15,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def _partial_decode(q, k_shard, v_shard, valid_mask):
@@ -66,7 +68,7 @@ def seq_parallel_decode_attention(mesh: Mesh, q, k_cache, v_cache, n_valid,
         out = _combine(m, l, o, axis_name)
         return out.reshape(b, 1, h, d).astype(q.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(None, axis_name, None, None),
                   P(None, axis_name, None, None), P()),

@@ -19,6 +19,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -41,9 +43,9 @@ def pipeline_forward(mesh: Mesh, stage_fn, stacked_params, x_micro,
         n_ticks = n_micro + n_stages - 1
         # carries become pod-varying inside the loop; mark the zeros so the
         # fori_loop carry types match (jax >= 0.8 shard_map VMA tracking)
-        buf = jax.lax.pcast(jnp.zeros_like(x_micro[0]), axis_name,
+        buf = compat.pcast(jnp.zeros_like(x_micro[0]), axis_name,
                             to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(x_micro), axis_name, to="varying")
+        outs = compat.pcast(jnp.zeros_like(x_micro), axis_name, to="varying")
 
         def tick(t, carry):
             buf, outs = carry
@@ -77,7 +79,7 @@ def pipeline_forward(mesh: Mesh, stage_fn, stacked_params, x_micro,
             axis_name)
         return outs
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(),

@@ -28,6 +28,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 PARAM_RULES = {
     "vocab": "model",
     "embed": "data",
@@ -155,7 +157,7 @@ def constrain(x, dim_axes: dict[int, str | tuple | None]):
     `jax.sharding.set_mesh` context (smoke tests) or when a dim doesn't
     divide.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     names = set(mesh.axis_names)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _plane_kernel(a_ref, w_ref, out_ref, acc_ref, *, n_k: int, plane: int):
     k = pl.program_id(2)
@@ -66,8 +68,8 @@ def bitplane_matmul_kernel(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.VMEM((bm, bn), jnp.int32)],
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

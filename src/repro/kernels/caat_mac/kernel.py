@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _kernel(
     a_ref,       # [1, bm, M] f32  (plane i of folded activation bits)
@@ -89,8 +91,8 @@ def caat_mac_kernel(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda ib, jn, ip: (ib, jn)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.VMEM((bm, bn), jnp.float32)],
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _kernel(
     a_ref,        # [bm, bk] int8
@@ -118,8 +120,8 @@ def cim_matmul_kernel(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.VMEM((bm, bn), jnp.int32)],
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

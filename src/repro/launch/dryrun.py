@@ -28,6 +28,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro import configs as cfg_lib
 from repro.configs.base import SHAPES, TrainConfig
 from repro.distributed import sharding as shard_lib
@@ -46,9 +47,10 @@ def _abstract(tree):
 
 
 def build_cell(arch: str, shape_name: str, mesh, *, quant: str = "none",
-               remat_policy: str = "nothing", seq_shard: bool = True,
-               kv_quant: bool = False, ssd_chunk: int = 0,
-               capacity_factor: float = 0.0, act_shard: bool = False):
+               plan=None, remat_policy: str = "nothing",
+               seq_shard: bool = True, kv_quant: bool = False,
+               ssd_chunk: int = 0, capacity_factor: float = 0.0,
+               act_shard: bool = False):
     """Returns (lowered, meta) for one cell."""
     cfg = cfg_lib.get_config(arch)
     if kv_quant:
@@ -68,10 +70,11 @@ def build_cell(arch: str, shape_name: str, mesh, *, quant: str = "none",
         return None, {"arch": arch, "shape": shape_name, "quant": quant,
                       "skipped": reason}
 
-    frozen = quant == "w8a8"
+    frozen = quant == "w8a8" or plan is not None
+    deploy_plan = plan if frozen else None
     pspec = model_lib.pspec(cfg)
     if frozen:
-        pspec = model_lib.freeze_pspec(pspec)
+        pspec = model_lib.freeze_pspec(pspec, plan=deploy_plan)
     param_sh = shard_lib.resolve_param_specs(pspec, mesh)
 
     params_shape = jax.eval_shape(
@@ -80,7 +83,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, quant: str = "none",
         params_shape = jax.eval_shape(
             lambda: model_lib.freeze_params(
                 jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                             params_shape)))
+                             params_shape), plan=deploy_plan))
 
     meta = {
         "arch": arch, "shape": shape_name, "quant": quant,
@@ -114,7 +117,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, quant: str = "none",
         batch = cfg_lib.input_specs(cfg, shape)
         batch_sh = shard_lib.data_specs(mesh, batch)
         meta["microbatches"] = meta_micro
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(
                 step,
                 in_shardings=(param_sh, opt_sh, batch_sh),
@@ -128,9 +131,9 @@ def build_cell(arch: str, shape_name: str, mesh, *, quant: str = "none",
 
         def prefill_step(params, batch):
             return model_lib.prefill(params, batch, cfg,
-                                     max_len=shape.seq_len)
+                                     max_len=shape.seq_len, mode=deploy_plan)
 
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(
                 prefill_step, in_shardings=(param_sh, batch_sh),
             ).lower(params_shape, batch)
@@ -144,9 +147,10 @@ def build_cell(arch: str, shape_name: str, mesh, *, quant: str = "none",
                                       seq_shard=seq_shard)
 
     def serve_step(params, batch, caches):
-        return model_lib.decode_step(params, batch, caches, cfg)
+        return model_lib.decode_step(params, batch, caches, cfg,
+                                     mode=deploy_plan)
 
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(
             serve_step,
             in_shardings=(param_sh, batch_sh, caches_sh),
@@ -158,13 +162,13 @@ def build_cell(arch: str, shape_name: str, mesh, *, quant: str = "none",
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
-             quant: str = "none", out_json: str | None = None,
+             quant: str = "none", plan=None, out_json: str | None = None,
              seq_shard: bool = True, remat_policy: str = "nothing",
              kv_quant: bool = False, ssd_chunk: int = 0,
              capacity_factor: float = 0.0, act_shard: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
-    lowered, meta = build_cell(arch, shape_name, mesh, quant=quant,
+    lowered, meta = build_cell(arch, shape_name, mesh, quant=quant, plan=plan,
                                seq_shard=seq_shard,
                                remat_policy=remat_policy, kv_quant=kv_quant,
                                ssd_chunk=ssd_chunk,
@@ -223,6 +227,8 @@ def main(argv=None):
     ap.add_argument("--mesh", default="single", choices=["single", "multi",
                                                          "both"])
     ap.add_argument("--quant", default="none", choices=["none", "w8a8"])
+    ap.add_argument("--plan", default=None,
+                    help="DeploymentPlan: backend name, inline JSON, or path")
     ap.add_argument("--no-seq-shard", action="store_true",
                     help="disable KV sequence sharding (ablation)")
     ap.add_argument("--remat-policy", default="nothing",
@@ -314,7 +320,10 @@ def main(argv=None):
             + (f"__remat-{args.remat_policy}" if args.remat_policy != "nothing" else "") \
             + ("__actshard" if args.act_shard else "")
         out_json = os.path.join(args.out, tag + ".json")
+        from repro.core import backend as backend_lib
+        plan = backend_lib.load_plan(args.plan) if args.plan else None
         run_cell(args.arch, args.shape, mesh_kind, quant=args.quant,
+                 plan=plan,
                  out_json=out_json, seq_shard=not args.no_seq_shard,
                  remat_policy=args.remat_policy, kv_quant=args.kv_quant,
                  ssd_chunk=args.ssd_chunk, capacity_factor=args.cf,

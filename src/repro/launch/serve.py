@@ -3,7 +3,11 @@ the W8A8 (CiM) datapath.
 
 Usage:
   python -m repro.launch.serve --arch qwen3-8b --devices 8 --mesh-shape 4,2 \
-      --batch 8 --tokens 16 [--quant w8a8]
+      --batch 8 --tokens 16 [--quant w8a8] [--plan plan.json]
+
+--plan takes a DeploymentPlan (backend name, inline JSON, or a JSON file)
+for per-layer mixed deployment; --quant w8a8 is shorthand for the default
+all-w8a8 plan.
 """
 import argparse
 import os
@@ -19,6 +23,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--quant", default="none", choices=["none", "w8a8"])
+    ap.add_argument("--plan", default=None,
+                    help="DeploymentPlan: backend name, inline JSON, or path")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
@@ -28,6 +34,8 @@ def main():
     import jax
     import jax.numpy as jnp
 
+    from repro import compat
+
     from repro import configs as cfg_lib
     from repro.distributed import sharding as shard_lib
     from repro.models import model as M
@@ -36,12 +44,19 @@ def main():
     axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
     mesh = jax.make_mesh(shape, axes)
 
+    from repro.core import backend as backend_lib
+
     cfg = cfg_lib.reduced_config(args.arch)
     params = M.init(jax.random.PRNGKey(0), cfg)
     pspec = M.pspec(cfg)
-    if args.quant == "w8a8":
-        params = M.freeze_params(params, a_scale=0.05)
-        pspec = M.freeze_pspec(pspec)
+    plan = None
+    if args.plan is not None:
+        plan = backend_lib.load_plan(args.plan)
+    elif args.quant == "w8a8":
+        plan = M.DEFAULT_DEPLOY_PLAN
+    if plan is not None:
+        params = M.freeze_params(params, a_scale=0.05, plan=plan)
+        pspec = M.freeze_pspec(pspec, plan=plan)
     param_sh = shard_lib.resolve_param_specs(pspec, mesh)
     params = jax.tree.map(jax.device_put, params, param_sh)
 
@@ -49,11 +64,12 @@ def main():
     prompts = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)}
 
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         prefill = jax.jit(
-            lambda p, b: M.prefill(p, b, cfg, max_len=max_len),
+            lambda p, b: M.prefill(p, b, cfg, max_len=max_len, mode=plan),
             in_shardings=(param_sh, None))
-        decode = jax.jit(lambda p, b, c: M.decode_step(p, b, c, cfg),
+        decode = jax.jit(lambda p, b, c: M.decode_step(p, b, c, cfg,
+                                                       mode=plan),
                          in_shardings=(param_sh, None, None))
         t0 = time.perf_counter()
         logits, caches = prefill(params, prompts)
@@ -66,7 +82,8 @@ def main():
         jax.block_until_ready(out[-1])
         dt = time.perf_counter() - t0
     total = args.batch * args.tokens
-    print(f"[{args.quant}] served {total} tokens on {args.devices} devices "
+    tag = "plan" if args.plan is not None else args.quant
+    print(f"[{tag}] served {total} tokens on {args.devices} devices "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s incl. compile)")
 
 

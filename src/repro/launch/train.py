@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--plan", default=None,
+                    help="training DeploymentPlan (e.g. 'qat', inline JSON, "
+                         "or a JSON file) routed through the backend registry")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
@@ -30,7 +33,8 @@ def main():
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import jax
-    import jax.numpy as jnp
+
+    from repro import compat
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro import configs as cfg_lib
@@ -69,8 +73,12 @@ def main():
         params, opt = restored["params"], restored["opt"]
         print(f"resumed from step {start}")
 
-    step_fn = make_train_step(cfg, tcfg)
-    with jax.sharding.set_mesh(mesh):
+    plan = None
+    if args.plan is not None:
+        from repro.core import backend as backend_lib
+        plan = backend_lib.load_plan(args.plan)
+    step_fn = make_train_step(cfg, tcfg, plan=plan)
+    with compat.set_mesh(mesh):
         jstep = jax.jit(step_fn, in_shardings=(param_sh, opt_sh, None),
                         donate_argnums=(0, 1))
         for step in range(start, args.steps):

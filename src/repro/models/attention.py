@@ -301,7 +301,7 @@ def attention(
     dt = x.dtype
 
     from repro.distributed.sharding import constrain
-    q = layers.dense(p["q"], x, mode).reshape(b, s, cfg.n_heads, hd)
+    q = layers.dense(p["q"], x, mode, path="attn/q").reshape(b, s, cfg.n_heads, hd)
     q = constrain(q, {0: "batch", 2: "model"})
 
     if xattn_cache is not None:
@@ -312,13 +312,14 @@ def attention(
         else:
             out = attend_chunked(q, kx, vx, causal=False,
                                  q_chunk=min(q_chunk, s), kv_chunk=kv_chunk)
-        y = layers.dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), mode)
+        y = layers.dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), mode,
+                         path="attn/o")
         return y.astype(dt), None
 
     kv_src = xattn_kv if xattn_kv is not None else x
     sk = kv_src.shape[1]
-    k = layers.dense(p["k"], kv_src, mode).reshape(b, sk, cfg.n_kv_heads, hd)
-    v = layers.dense(p["v"], kv_src, mode).reshape(b, sk, cfg.n_kv_heads, hd)
+    k = layers.dense(p["k"], kv_src, mode, path="attn/k").reshape(b, sk, cfg.n_kv_heads, hd)
+    v = layers.dense(p["v"], kv_src, mode, path="attn/v").reshape(b, sk, cfg.n_kv_heads, hd)
     k = constrain(k, {0: "batch", 2: "model"})
     v = constrain(v, {0: "batch", 2: "model"})
 
@@ -447,7 +448,8 @@ def attention(
         out = attend_chunked(q, k, v, causal=causal, window=cfg.sliding_window,
                              q_chunk=q_chunk, kv_chunk=kv_chunk)
 
-    y = layers.dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), mode)
+    y = layers.dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), mode,
+                     path="attn/o")
     return y.astype(dt), new_cache
 
 

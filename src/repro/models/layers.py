@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant
+from repro.core import backend as backend_lib
 
 DType = Any
 
@@ -48,37 +48,28 @@ def dense_pspec(in_axis: str | None, out_axis: str | None, frozen: bool = False)
     return {"w": (in_axis, out_axis)}
 
 
-def freeze_dense(p: dict, a_scale: float = 1.0) -> dict:
-    """Master float linear -> deployed W8A8 form (static scales)."""
-    w = p["w"].astype(jnp.float32)
-    w_scale = quant.absmax_scale(w, axis=0)
-    return {
-        "w_q": quant.quantize(w, w_scale),
-        "w_scale": w_scale.reshape(-1),
-        "a_scale": jnp.asarray(a_scale, jnp.float32),
-    }
+def dense(p: dict, x: jax.Array, mode: "str | Any" = "exact",
+          relu: bool = False, dtype=None, *, path: str = "") -> jax.Array:
+    """CiM-aware linear, dispatched through the backend registry.
 
-
-def dense(p: dict, x: jax.Array, mode: str = "exact", relu: bool = False,
-          dtype=None) -> jax.Array:
-    """CiM-aware linear.  Frozen params (w_q) => int8 datapath.
-    dtype=None -> compute in x.dtype."""
+    `mode` is a backend name, a :class:`~repro.core.backend.DeploymentPlan`
+    (resolved against `path`, the call site's logical layer path, e.g.
+    'attn/q'), or None (exact).  Frozen params ('w_q') always run a
+    deployed int8 backend; master params run float backends until frozen.
+    dtype=None -> compute in x.dtype.
+    """
     if dtype is None:
         dtype = x.dtype
-    if "w_q" in p:
-        xq = quant.quantize(x.astype(jnp.float32), p["a_scale"])
-        y = quant.w8a8_matmul(xq, p["w_q"], p["a_scale"], p["w_scale"], relu=relu)
-        return y.astype(dtype)
-    if mode == "qat":
-        a_s = quant.absmax_scale(x)
-        w = p["w"].astype(jnp.float32)
-        w_s = quant.absmax_scale(w, axis=0)
-        y = quant.qat_linear(x.astype(jnp.float32), w, a_s, w_s, relu=relu)
-        return y.astype(dtype)
-    y = x.astype(dtype) @ p["w"].astype(dtype)
-    if relu:
-        y = jnp.maximum(y, 0)
-    return y
+    name = backend_lib.resolve_backend(mode, path, params=p)
+    backend = backend_lib.get_backend(name)
+    w = p["w_q"] if "w_q" in p else p["w"]
+    plane_bits = None
+    if isinstance(mode, backend_lib.DeploymentPlan):
+        plane_bits = mode.rule_for(path).plane_adc_bits
+    spec = backend_lib.LinearSpec(
+        in_dim=w.shape[-2], out_dim=w.shape[-1], use_bias="b" in p,
+        relu=relu, mode=name, dtype=dtype, plane_adc_bits=plane_bits)
+    return backend.apply(p, x, spec).astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -184,18 +175,18 @@ def mlp_pspec(act: str = "silu", frozen: bool = False) -> dict:
     }
 
 
-def mlp(p: dict, x: jax.Array, act: str = "silu", mode: str = "exact",
-        dtype=None) -> jax.Array:
+def mlp(p: dict, x: jax.Array, act: str = "silu", mode="exact",
+        dtype=None, path: str = "mlp") -> jax.Array:
     if dtype is None:
         dtype = x.dtype
     if act == "silu":
-        g = dense(p["gate"], x, mode, dtype=dtype)
-        u = dense(p["up"], x, mode, dtype=dtype)
+        g = dense(p["gate"], x, mode, dtype=dtype, path=f"{path}/gate")
+        u = dense(p["up"], x, mode, dtype=dtype, path=f"{path}/up")
         h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
-        return dense(p["down"], h, mode, dtype=dtype)
-    h = dense(p["in"], x, mode, dtype=dtype)
+        return dense(p["down"], h, mode, dtype=dtype, path=f"{path}/down")
+    h = dense(p["in"], x, mode, dtype=dtype, path=f"{path}/in")
     h = jax.nn.gelu(h.astype(jnp.float32)).astype(dtype)
-    return dense(p["out"], h, mode, dtype=dtype)
+    return dense(p["out"], h, mode, dtype=dtype, path=f"{path}/out")
 
 
 # ---------------------------------------------------------------------------

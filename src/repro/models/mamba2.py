@@ -174,7 +174,7 @@ def mamba2_block(p: dict, x: jax.Array, cfg, *, state: dict | None = None,
     pdim = cfg_ssm.headdim
 
     from repro.distributed.sharding import constrain
-    zxbcdt = layers.dense(p["in_proj"], x, mode)
+    zxbcdt = layers.dense(p["in_proj"], x, mode, path="ssm/in_proj")
     zxbcdt = constrain(zxbcdt, {0: "batch"})
     z, xbc, dt_raw = jnp.split(zxbcdt, [di, di + di + 2 * n], axis=-1)
     conv_in = xbc
@@ -207,7 +207,7 @@ def mamba2_block(p: dict, x: jax.Array, cfg, *, state: dict | None = None,
     y = y.reshape(bsz, s, di).astype(x.dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)       # gate
     y = layers.rmsnorm(p["norm"], y, cfg.norm_eps)
-    return layers.dense(p["out_proj"], y, mode), new_state
+    return layers.dense(p["out_proj"], y, mode, path="ssm/out_proj"), new_state
 
 
 def init_mamba_state(batch: int, d_model: int, cfg_ssm, dtype=jnp.float32) -> dict:

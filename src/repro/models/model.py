@@ -23,6 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_lib
 from repro.models import layers, transformer
 
 
@@ -59,64 +60,92 @@ def pspec(cfg, frozen: bool = False) -> dict:
     return p
 
 
-FREEZE_SKIP = {"router"}  # routing quality is precision-sensitive; stays f32
+# Routing quality is precision-sensitive: the default deployment keeps the
+# router in float while every other weight-stationary linear goes int8
+# (DESIGN.md §5: the CiM macro holds matmul weights; those are what
+# quantize).  Kept as a plan so per-layer overrides compose with it.
+DEFAULT_DEPLOY_PLAN = backend_lib.DeploymentPlan(
+    rules=(("*router*", backend_lib.LayerRule("exact")),),
+    default="w8a8",
+)
 
 
-def freeze_params(params, a_scale: float = 1.0):
+def _as_deploy_plan(plan) -> backend_lib.DeploymentPlan:
+    if plan is None:
+        return DEFAULT_DEPLOY_PLAN
+    return backend_lib.as_plan(plan, default="w8a8")
+
+
+def freeze_params(params, a_scale: float = 1.0, plan=None):
     """Deploy transform: every weight-stationary linear (incl. stacked-layer
-    and MoE expert banks) -> int8 with static per-channel scales.  Embedding
-    gathers, norms, depthwise conv, and the router stay in float (DESIGN.md
-    §5: the CiM macro holds matmul weights; those are what quantize)."""
-    from repro.core import quant
+    and MoE expert banks) is frozen by its plan-resolved backend's own
+    `freeze` — int8 with static per-channel scales for deployed backends,
+    untouched master params for float ones.  Embedding gathers, norms, and
+    depthwise conv are never linears and always stay in float.
 
-    def freeze_w(w, n_mat_dims: int = 2):
-        w = w.astype(jnp.float32)
-        scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 127.0
-        scale = jnp.maximum(scale, 1e-8)
-        # a_scale carries the stacked (layer) leading dims so lax.scan over
-        # frozen layer stacks can slice it like every other leaf.
-        lead = w.shape[:-n_mat_dims]
-        return {
-            "w_q": jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8),
-            "w_scale": jnp.squeeze(scale, -2),
-            "a_scale": jnp.full(lead, a_scale, jnp.float32),
-        }
+    `plan` maps layer paths ('stack/blocks/attn/q', 'lm_head', ...) to
+    backends + per-layer a_scale overrides; None -> DEFAULT_DEPLOY_PLAN
+    (everything w8a8, router exact)."""
+    plan = _as_deploy_plan(plan)
 
-    def walk(name, node):
+    def freeze_with(rule, node, n_mat_dims=2):
+        backend = backend_lib.get_backend(rule.backend)
+        if backend.needs_chip:
+            raise NotImplementedError(
+                f"backend {rule.backend!r} needs per-layer chip samples and "
+                "macro configs, which the generic transformer freeze does "
+                "not plumb; deploy it via executor.freeze / vgg.freeze_vgg8")
+        w = node["w"]
+        spec = backend_lib.LinearSpec(
+            in_dim=int(w.shape[-2]), out_dim=int(w.shape[-1]),
+            use_bias="b" in node, mode=rule.backend)
+        a_s = a_scale if rule.a_scale is None else rule.a_scale
+        return backend.freeze(node, spec, a_s, n_mat_dims=n_mat_dims)
+
+    def walk(path, node):
         if isinstance(node, dict):
             if "w" in node and not isinstance(node["w"], dict):
-                if name in FREEZE_SKIP:
-                    return node
-                out = freeze_w(node["w"])
-                if "b" in node:
-                    out["b"] = node["b"]
-                return out
+                return freeze_with(plan.rule_for(path), node)
             if {"gate", "up", "down"} <= set(node.keys()) \
                     and not isinstance(node["gate"], dict):
-                # MoE expert banks [.., E, d, ff]
+                # MoE expert banks [.., E, d, ff].  One rule covers the
+                # whole bank (the three matmuls share one dispatch buffer,
+                # so per-matrix mixed precision is not representable).
+                rule = plan.rule_for(path)
+                if not backend_lib.get_backend(rule.backend).deploys_int8:
+                    return {k: (v if k in ("gate", "up", "down")
+                                else walk(f"{path}/{k}", v))
+                            for k, v in node.items()}
                 out = {}
                 for k in ("gate", "up", "down"):
-                    f = freeze_w(node[k], n_mat_dims=3)
+                    f = freeze_with(rule, {"w": node[k]}, n_mat_dims=3)
                     out[f"{k}_q"] = f["w_q"]
                     out[f"{k}_scale"] = f["w_scale"]
-                out["a_scale"] = jnp.full(node["gate"].shape[:-3], a_scale,
-                                          jnp.float32)
+                out["a_scale"] = f["a_scale"]
                 for k, v in node.items():
                     if k not in ("gate", "up", "down"):
-                        out[k] = walk(k, v)
+                        out[k] = walk(f"{path}/{k}", v)
                 return out
-            return {k: walk(k, v) for k, v in node.items()}
+            return {k: walk(f"{path}/{k}" if path else k, v)
+                    for k, v in node.items()}
         return node
 
     return walk("", params)
 
 
-def freeze_pspec(pspec_tree):
+def freeze_pspec(pspec_tree, plan=None):
     """Logical-axes tree matching freeze_params' output structure."""
-    def walk(name, node):
+    plan = _as_deploy_plan(plan)
+
+    def is_frozen(path):
+        # Match freeze_params: what matters is whether freeze() emits the
+        # int8 layout (qat does, despite apply() consuming master params).
+        return backend_lib.get_backend(plan.backend_for(path)).deploys_int8
+
+    def walk(path, node):
         if isinstance(node, dict):
             if "w" in node and isinstance(node["w"], tuple):
-                if name in FREEZE_SKIP:
+                if not is_frozen(path):
                     return node
                 spec = node["w"]
                 out = {"w_q": spec, "w_scale": spec[:-2] + (spec[-1],),
@@ -126,6 +155,10 @@ def freeze_pspec(pspec_tree):
                 return out
             if {"gate", "up", "down"} <= set(node.keys()) \
                     and isinstance(node["gate"], tuple):
+                if not is_frozen(path):
+                    return {k: (v if k in ("gate", "up", "down")
+                                else walk(f"{path}/{k}", v))
+                            for k, v in node.items()}
                 out = {}
                 for k in ("gate", "up", "down"):
                     spec = node[k]
@@ -134,9 +167,10 @@ def freeze_pspec(pspec_tree):
                 out["a_scale"] = node["gate"][:-3]
                 for k, v in node.items():
                     if k not in ("gate", "up", "down"):
-                        out[k] = walk(k, v)
+                        out[k] = walk(f"{path}/{k}", v)
                 return out
-            return {k: walk(k, v) for k, v in node.items()}
+            return {k: walk(f"{path}/{k}" if path else k, v)
+                    for k, v in node.items()}
         return node
 
     return walk("", pspec_tree)
@@ -180,7 +214,7 @@ def _head_weight(params, cfg):
 
 def logits_fn(params, h, cfg, mode=None):
     logits = layers.dense(_head_weight(params, cfg), h, mode or "exact",
-                          dtype=jnp.float32)
+                          dtype=jnp.float32, path="lm_head")
     if cfg.padded_vocab != cfg.vocab:
         # Mask the padding columns (kept in-shape so vocab stays shardable).
         pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
@@ -212,7 +246,8 @@ def loss_fn(params, batch, cfg, *, loss_chunk: int = 256,
     def body(carry, xs):
         tot, cnt = carry
         hc, lc = xs
-        logits = layers.dense(head, hc, "exact", dtype=jnp.float32)
+        logits = layers.dense(head, hc, "exact", dtype=jnp.float32,
+                              path="lm_head")
         if pad_mask is not None:
             logits = jnp.where(pad_mask, -1e30, logits)
         logz = jax.nn.logsumexp(logits, axis=-1)
@@ -231,12 +266,19 @@ def loss_fn(params, batch, cfg, *, loss_chunk: int = 256,
 # Serving
 # ---------------------------------------------------------------------------
 
-def prefill(params, batch, cfg, *, max_len: int, mode: str | None = None):
+def prefill(params, batch, cfg, *, max_len: int, mode=None):
     """Process the prompt, build caches, return last-position logits.
 
     For attention archs the per-layer K/V caches are rebuilt from a full
     forward (projections recomputed per layer inside a scan so the HLO stays
     compact); SSM/hybrid carry their recurrent states.
+
+    `batch['length']` (optional scalar int32) marks the true prompt length
+    when `tokens` is right-padded to a bucketed shape (serve/engine.py):
+    logits are taken at position length-1 and the KV write cursor is rewound
+    past the pads so decode overwrites them.  Dense-attention archs only:
+    SSM state would integrate the pads, and MoE capacity is computed from
+    the padded token count (pads could displace real tokens).
     """
     dt = _dtype(cfg)
     at = cfg.arch_type
@@ -258,7 +300,19 @@ def prefill(params, batch, cfg, *, max_len: int, mode: str | None = None):
     # Run the full-sequence forward while filling the caches layer by layer.
     h, caches = _prefill_stack(params["stack"], x, cfg, caches,
                                positions=positions, mode=mode, enc_out=enc_out)
-    h = layers.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    length = batch.get("length")
+    if length is None:
+        h_last = h[:, -1:]
+    else:
+        assert at == "dense", \
+            "bucketed prefill (batch['length']) is dense-attention only"
+        h_last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+        # Pads were written into the KV cache beyond `length`; rewind the
+        # write cursor so decode overwrites them and the length masks
+        # exclude them.
+        kv = dict(caches["kv"], len=caches["kv"]["len"] - (s - length))
+        caches = dict(caches, kv=kv)
+    h = layers.rmsnorm(params["final_norm"], h_last, cfg.norm_eps)
     logits = logits_fn(params, h, cfg, mode)
     return logits, caches
 

@@ -119,8 +119,8 @@ def moe(p: dict, x: jax.Array, cfg_moe, mode: str = "exact",
     # Router matmul in the layer dtype (cotangents to xt stay bf16 => the
     # per-layer model-axis all-reduce of d(xt) halves its wire bytes);
     # softmax still in f32 for routing stability.
-    logits = layers.dense(p["router"], xt, "exact",
-                          dtype=dtype).astype(jnp.float32)  # [G, Tg, E]
+    logits = layers.dense(p["router"], xt, "exact", dtype=dtype,
+                          path="moe/router").astype(jnp.float32)  # [G, Tg, E]
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_e = jax.lax.top_k(probs, k)         # [G, Tg, k]
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
@@ -187,7 +187,8 @@ def moe(p: dict, x: jax.Array, cfg_moe, mode: str = "exact",
         y = y + picked.astype(dtype) * w_slot[..., None]
 
     if "shared" in p:
-        y = y + layers.mlp(p["shared"], xt, "silu", mode, dtype)
+        y = y + layers.mlp(p["shared"], xt, "silu", mode, dtype,
+                           path="moe/shared")
 
     aux = {
         "aux_loss": aux_loss,

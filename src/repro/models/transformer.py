@@ -390,8 +390,10 @@ def precompute_cross_kv(params, enc_out, cfg, mode=None) -> tuple[jax.Array, jax
     hd = cfg.resolved_head_dim
 
     def body(_, blk_p):
-        k = layers.dense(blk_p["xattn"]["k"], enc_out, mode or cfg.linear_mode)
-        v = layers.dense(blk_p["xattn"]["v"], enc_out, mode or cfg.linear_mode)
+        k = layers.dense(blk_p["xattn"]["k"], enc_out, mode or cfg.linear_mode,
+                         path="xattn/k")
+        v = layers.dense(blk_p["xattn"]["v"], enc_out, mode or cfg.linear_mode,
+                         path="xattn/v")
         return None, (k.reshape(b, s, cfg.n_kv_heads, hd),
                       v.reshape(b, s, cfg.n_kv_heads, hd))
 

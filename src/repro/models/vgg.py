@@ -24,11 +24,30 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import calibration as cal_lib
+from repro.core import backend as backend_lib
 from repro.core import executor, macro, quant
 
 VGG8_CHANNELS = (128, 128, 256, 256, 512, 512)
 POOL_AFTER = (False, True, False, True, False, True)
+# Logical layer paths for DeploymentPlan pattern matching.
+VGG8_LAYER_PATHS = ("conv1", "conv2", "conv3", "conv4", "conv5", "conv6",
+                    "fc1", "head")
+
+
+def resolve_specs(cfg: "Vgg8Config", mode=None) -> list[executor.LinearSpec]:
+    """Layer specs with modes resolved from a mode string or a
+    DeploymentPlan (patterns match VGG8_LAYER_PATHS, e.g. 'conv*')."""
+    specs = cfg.layer_specs()
+    if mode is None:
+        return specs
+    plan = backend_lib.as_plan(mode)
+    out = []
+    for s, p in zip(specs, VGG8_LAYER_PATHS):
+        rule = plan.rule_for(p)
+        out.append(dataclasses.replace(
+            s, mode=rule.backend,
+            plane_adc_bits=rule.plane_adc_bits or s.plane_adc_bits))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,10 +104,9 @@ def vgg8_forward(
     a_scales: list | None = None,     # static activation scales (frozen modes)
     chips: list | None = None,        # per-layer MacroSample for 'cim'
 ) -> jax.Array:
-    """Returns logits [B, n_classes]."""
-    specs = cfg.layer_specs()
-    if mode is not None:
-        specs = [dataclasses.replace(s, mode=mode) for s in specs]
+    """Returns logits [B, n_classes].  `mode` is a backend name or a
+    DeploymentPlan with per-layer rules."""
+    specs = resolve_specs(cfg, mode)
     x = images
     li = 0
     for conv_i, cout in enumerate(VGG8_CHANNELS):
@@ -198,15 +216,17 @@ def freeze_vgg8(
 ) -> list[dict]:
     """Deploy: convert every layer to its frozen int8 / cim form.
 
-    For 'cim' mode pass v_fs_list from :func:`calibrate_v_fs`; the fallback
-    fixed-utilization heuristic is known-poor on trained networks."""
-    specs = [dataclasses.replace(s, mode=mode) for s in cfg.layer_specs()]
+    `mode` is a backend name or a DeploymentPlan (per-layer mixed
+    deployment, patterns over VGG8_LAYER_PATHS).  For 'cim' layers pass
+    v_fs_list from :func:`calibrate_v_fs`; the fallback fixed-utilization
+    heuristic is known-poor on trained networks."""
+    specs = resolve_specs(cfg, mode)
     frozen = []
     for i, (p, s) in enumerate(zip(params, specs)):
         chip = None if chips is None else chips[i]
         ft = None if finetunes is None else finetunes[i]
         v_fs = None
-        if mode == "cim":
+        if s.mode == "cim":
             if v_fs_list is not None:
                 v_fs = v_fs_list[i]
             else:

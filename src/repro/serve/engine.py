@@ -1,10 +1,29 @@
 """Serving engine: batched prefill + decode with KV caches.
 
 The engine wraps model.prefill / model.decode_step into a request-batched
-greedy/temperature sampler.  Both steps are jit'd once per (batch, seq)
-bucket; production decode shapes are what launch/dryrun.py lowers for the
-roofline (serve_step == decode_step by construction — the dry-run proves the
-full engine step, not a toy)."""
+greedy/temperature sampler:
+
+* **Bucketed prefill** — prompt lengths are right-padded to `seq_bucket`
+  multiples (with the true length threaded to model.prefill), so the jit
+  cache holds one prefill per bucket instead of one per distinct prompt
+  length.  Pads are causally invisible to real positions and the KV write
+  cursor is rewound past them, so results match the unbucketed path up to
+  shape-dependent XLA fusion rounding (measured ~1e-7 in logprobs; greedy
+  tokens agree in practice).  Dense attention only — MoE capacity and SSM
+  state depend on the padded token count.
+* **Fused decode+sample step** — one jit'd function per (plan, greedy)
+  runs decode_step, the logprob gather, and the next-token sample; the step
+  index and temperature are traced scalars, so the Python loop never
+  retraces and never round-trips logits to the host.
+* **Deployment plans** — the engine takes a
+  :class:`~repro.core.backend.DeploymentPlan` (or a legacy mode string,
+  which resolves through the same registry) and threads it through prefill
+  and decode; `generate` can override it per call.
+
+Production decode shapes are what launch/dryrun.py lowers for the roofline
+(serve_step == decode_step by construction — the dry-run proves the full
+engine step, not a toy).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -14,6 +33,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_lib
 from repro.models import model as model_lib
 
 
@@ -25,40 +45,103 @@ class GenerationResult:
 
 
 class Engine:
-    def __init__(self, params, cfg, *, max_len: int = 512, mode=None):
+    def __init__(self, params, cfg, *, max_len: int = 512, plan=None,
+                 mode=None, seq_bucket: int = 32):
+        if plan is None and mode is not None:
+            plan = backend_lib.as_plan(mode)
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
-        self.mode = mode
-        self._prefill = jax.jit(
-            functools.partial(model_lib.prefill, cfg=cfg, max_len=max_len,
-                              mode=mode))
-        self._decode = jax.jit(
-            functools.partial(model_lib.decode_step, cfg=cfg, mode=mode))
+        self.plan = plan                  # DeploymentPlan | None (exact)
+        self.seq_bucket = seq_bucket
+        self._fn_cache: dict = {}
+
+    # ------------------------------------------------------------------ jit
+
+    def _prefill_fn(self, plan):
+        """Prefill is greedy-agnostic: jit once per plan."""
+        key = ("prefill", plan)
+        if key not in self._fn_cache:
+            self._fn_cache[key] = jax.jit(functools.partial(
+                model_lib.prefill, cfg=self.cfg, max_len=self.max_len,
+                mode=plan))
+        return self._fn_cache[key]
+
+    def _fns(self, plan, greedy: bool):
+        """(prefill, sample, step); sample/step jitted per (plan, greedy)."""
+        prefill = self._prefill_fn(plan)
+        key = (plan, greedy)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        cfg = self.cfg
+
+        def sample(logits, rng, t, temperature):
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            k = jax.random.fold_in(rng, t)
+            return jax.random.categorical(
+                k, logits.astype(jnp.float32) / temperature, axis=-1
+            ).astype(jnp.int32)
+
+        def step(params, tok, caches, rng, t, temperature):
+            """decode + logprob-of-tok + next-token sample, all on device."""
+            logits, caches = model_lib.decode_step(
+                params, {"tokens": tok[:, None]}, caches, cfg, mode=plan)
+            last = logits[:, -1]
+            lp = jax.nn.log_softmax(last.astype(jnp.float32))
+            lp_tok = jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
+            nxt = sample(last, rng, t, temperature)
+            return nxt, lp_tok, caches
+
+        fns = (prefill, jax.jit(sample), jax.jit(step))
+        self._fn_cache[key] = fns
+        return fns
+
+    # ------------------------------------------------------------- prefill
+
+    def _bucket(self, batch: dict) -> dict:
+        """Right-pad the prompt to a seq_bucket multiple when the arch
+        supports length-aware prefill; otherwise return batch unchanged.
+
+        Dense attention only: pads are causally invisible there, but MoE
+        capacity is computed from the (padded) token count, so bucketing
+        could drop real tokens; SSM state would integrate the pads."""
+        if (self.seq_bucket <= 1
+                or set(batch) != {"tokens"}
+                or self.cfg.arch_type != "dense"
+                or self.cfg.sliding_window is not None):
+            return batch
+        s = batch["tokens"].shape[1]
+        s_pad = min(-(-s // self.seq_bucket) * self.seq_bucket, self.max_len)
+        if s_pad <= s:
+            return batch
+        return {
+            "tokens": jnp.pad(batch["tokens"], ((0, 0), (0, s_pad - s))),
+            "length": jnp.asarray(s, jnp.int32),
+        }
+
+    # ------------------------------------------------------------ generate
 
     def generate(self, batch: dict, *, max_new_tokens: int = 32,
-                 temperature: float = 0.0, key=None) -> GenerationResult:
-        logits, caches = self._prefill(self.params, batch)
+                 temperature: float = 0.0, key=None,
+                 plan=None) -> GenerationResult:
+        plan = self.plan if plan is None else backend_lib.as_plan(plan)
+        greedy = temperature <= 0 or key is None
+        prefill, sample, step = self._fns(plan, greedy)
+
+        rng = key if key is not None else jax.random.PRNGKey(0)
+        temp = jnp.asarray(max(temperature, 1e-6), jnp.float32)
+
+        logits, caches = prefill(self.params, self._bucket(batch))
+        tok = sample(logits[:, -1], rng, jnp.asarray(0, jnp.int32), temp)
         toks, lps = [], []
-        tok = self._sample(logits[:, -1], temperature, key, 0)
         for t in range(max_new_tokens):
             toks.append(tok)
-            step_batch = {"tokens": tok[:, None]}
-            logits, caches = self._decode(self.params, step_batch, caches)
-            lp = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32))
-            lps.append(jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0])
-            tok = self._sample(logits[:, -1], temperature, key, t + 1)
+            tok, lp, caches = step(self.params, tok, caches, rng,
+                                   jnp.asarray(t + 1, jnp.int32), temp)
+            lps.append(lp)
         return GenerationResult(
             tokens=jnp.stack(toks, axis=1),
             logprobs=jnp.stack(lps, axis=1),
             steps=max_new_tokens,
         )
-
-    @staticmethod
-    def _sample(logits, temperature, key, t):
-        if temperature <= 0 or key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(key, t)
-        return jax.random.categorical(
-            k, logits.astype(jnp.float32) / temperature, axis=-1
-        ).astype(jnp.int32)

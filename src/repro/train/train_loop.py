@@ -30,12 +30,18 @@ from repro.models import model as model_lib
 from repro.train import optimizer as opt_lib
 
 
-def make_train_step(cfg, tcfg) -> Callable:
+def make_train_step(cfg, tcfg, plan=None) -> Callable:
+    # Training consumes the same mode-or-plan the deployment does: a
+    # DeploymentPlan (e.g. qat on the layers that will deploy int8, exact on
+    # the rest) or the legacy cfg.linear_mode string.
+    mode = plan if plan is not None else (
+        "qat" if cfg.linear_mode == "qat" else None)
+
     def loss_of(params, batch):
         return model_lib.loss_fn(
             params, batch, cfg,
             remat_policy=getattr(tcfg, "remat_policy", "nothing"),
-            mode="qat" if cfg.linear_mode == "qat" else None,
+            mode=mode,
         )
 
     def _micro_split(batch, m):

@@ -1,0 +1,95 @@
+"""Deterministic fallback for `hypothesis` when it is not installed.
+
+The test suite uses a small slice of the hypothesis API (``given`` /
+``settings`` / ``strategies.integers`` / ``strategies.booleans``).  CI images
+without the real package still need the property tests to run, so this stub
+replays each property with `max_examples` pseudo-random draws seeded from the
+test's qualified name — fully deterministic across runs and machines.
+
+Installed into ``sys.modules`` by ``tests/conftest.py`` only when the real
+hypothesis is unavailable; with hypothesis installed this file is inert.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 - 1 if max_value is None else int(max_value)
+    return _Strategy(lambda rnd: rnd.randint(lo, hi))
+
+
+def booleans():
+    return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rnd: rnd.choice(elements))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        max_examples = getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        def wrapper(*args, **kwargs):
+            # Seed from the test identity: stable examples per test, across
+            # processes (no PYTHONHASHSEED dependence — use the name itself).
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(max_examples):
+                drawn = {k: s.sample(rnd) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Make pytest see only the non-strategy parameters (so
+        # @parametrize args still bind and strategy names aren't mistaken
+        # for fixtures).  Deliberately no functools.wraps: __wrapped__
+        # would let pytest unwrap back to the original signature.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register stub 'hypothesis' and 'hypothesis.strategies' modules."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    hyp.strategies = st
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -2,17 +2,59 @@
 NOT set here — smoke tests and benchmarks must see the single real CPU
 device.  Distributed tests that need multiple devices spawn subprocesses
 (see tests/test_distributed.py)."""
+import importlib.util
 import os
+import pathlib
 
 # Keep CPU compiles light and deterministic for the test suite.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _stub_path = pathlib.Path(__file__).parent / "_hypothesis_stub.py"
+    _spec = importlib.util.spec_from_file_location("_hypothesis_stub", _stub_path)
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.install()
 
 import jax
 import pytest
 
 jax.config.update("jax_enable_x64", False)
 
+CHIP_SEED = 42  # single RNG root for every sampled chip in the suite
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def chip_key():
+    """The suite-wide chip RNG key.  Derive per-test chips with fold_in so
+    macro/caat/executor tests all draw from one seeded root instead of
+    ad-hoc PRNGKey(n) constants (kills cross-test RNG drift)."""
+    return jax.random.PRNGKey(CHIP_SEED)
+
+
+@pytest.fixture(scope="session")
+def chip_factory(chip_key):
+    """chip_factory(cfg, salt=0) -> deterministic macro.MacroSample.
+
+    Session-cached: the same (rows, salt) pair always returns the identical
+    chip object, so tests that compare against each other's chips see the
+    same silicon."""
+    from repro.core import macro as macro_lib
+
+    cache: dict = {}
+
+    def make(cfg: "macro_lib.MacroConfig", salt: int = 0):
+        key_id = (cfg, salt)
+        if key_id not in cache:
+            cache[key_id] = macro_lib.sample_chip(
+                jax.random.fold_in(chip_key, salt), cfg)
+        return cache[key_id]
+
+    return make

@@ -1,0 +1,316 @@
+"""Backend registry, parity vs exact, DeploymentPlan round-trip end-to-end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_lib
+from repro.core import executor, macro, quant
+from repro.core.backend import DeploymentPlan, LayerRule
+
+# Every registered backend runs against 'exact' with a mode-appropriate
+# tolerance (relative L2).  int8 static quantization carries ~1-3% error on
+# gaussian data; the behavioral cim sim adds analog non-idealities.
+TOLERANCES = {
+    "exact": 1e-2,          # bf16 vs f32 rounding only
+    "qat": 0.05,
+    "w8a8": 0.05,
+    "w8a8_kernel": 0.05,
+    "bitserial": 0.05,
+    "bitserial_kernel": 0.05,
+    "cim": 0.35,
+}
+
+
+def _setup(mode, k, n, relu=False, rows=1152, batch=8):
+    spec = executor.LinearSpec(
+        in_dim=k, out_dim=n, use_bias=True, relu=relu, mode=mode,
+        macro=macro.nominal_config(rows=rows),
+    )
+    params = executor.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, k))
+    return spec, params, x
+
+
+def _run(mode, k, n, chip_factory):
+    spec, params, x = _setup(mode, k, n, relu=False, rows=64)
+    backend = backend_lib.get_backend(mode)
+    a_scale = quant.absmax_scale(x)
+    if backend.frozen:
+        chip = chip_factory(spec.macro) if mode == "cim" else None
+        frozen = executor.freeze(params, spec, a_scale, chip=chip)
+        y = executor.apply(frozen, x, spec)
+    else:
+        y = executor.apply(params, x, spec, a_scale=a_scale)
+    spec_e = dataclasses.replace(spec, mode="exact", dtype=jnp.float32)
+    y_e = executor.apply(params, x, spec_e).astype(jnp.float32)
+    return np.asarray(y, np.float32), np.asarray(y_e, np.float32)
+
+
+@pytest.mark.parametrize("mode", backend_lib.available_backends())
+@pytest.mark.parametrize("k,n", [(64, 32), (96, 24)])
+def test_every_backend_tracks_exact(mode, k, n, chip_factory):
+    y, y_e = _run(mode, k, n, chip_factory)
+    rel = np.linalg.norm(y - y_e) / np.linalg.norm(y_e)
+    assert rel < TOLERANCES[mode], (mode, rel)
+
+
+@pytest.mark.parametrize("mode", backend_lib.available_backends())
+@pytest.mark.parametrize("k,n", [(67, 19), (130, 33)])  # non-block-aligned
+def test_every_backend_non_aligned_shapes(mode, k, n, chip_factory):
+    """K, N not multiples of any kernel block: padding paths must hold."""
+    y, y_e = _run(mode, k, n, chip_factory)
+    assert y.shape == y_e.shape
+    rel = np.linalg.norm(y - y_e) / np.linalg.norm(y_e)
+    assert rel < TOLERANCES[mode], (mode, rel)
+
+
+def test_single_conversion_backends_agree_exactly(chip_factory):
+    """w8a8 / w8a8_kernel / bitserial / bitserial_kernel share exact int8
+    semantics: identical outputs, not just close ones."""
+    spec, params, x = _setup("w8a8", 96, 24, relu=True)
+    a_scale = quant.absmax_scale(x)
+    frozen = executor.freeze(params, spec, a_scale)
+    ref = np.asarray(executor.apply(frozen, x, spec))
+    for mode in ("w8a8_kernel", "bitserial", "bitserial_kernel"):
+        spec_m = dataclasses.replace(spec, mode=mode)
+        got = np.asarray(executor.apply(frozen, x, spec_m))
+        np.testing.assert_allclose(got, ref, rtol=0, atol=1e-3, err_msg=mode)
+
+
+# --------------------------------------------------------------- registry --
+
+def test_registry_resolves_modes_era_strings():
+    """Back-compat shim: every MODES-era string resolves via the registry."""
+    for name in ("exact", "qat", "w8a8", "w8a8_kernel", "bitserial", "cim"):
+        backend = backend_lib.get_backend(name)
+        assert backend.name == name
+        assert name in executor.MODES
+        # and through the plan shim:
+        plan = backend_lib.as_plan(name)
+        assert plan.backend_for("anything") == name
+
+
+def test_registry_rejects_unknown_backend():
+    with pytest.raises(KeyError):
+        backend_lib.get_backend("int3_psychic")
+    with pytest.raises(ValueError):
+        executor.LinearSpec(in_dim=4, out_dim=4, mode="int3_psychic")
+
+
+def test_plugin_backend_registers_without_dispatcher_changes():
+    name = "test_plugin_w8a8"
+    if name not in backend_lib.available_backends():
+        @backend_lib.register_backend(name)
+        class PluginBackend(backend_lib.W8A8Backend):
+            pass
+    spec = executor.LinearSpec(in_dim=32, out_dim=16, mode=name)
+    params = executor.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    frozen = executor.freeze(params, spec, quant.absmax_scale(x))
+    y = executor.apply(frozen, x, spec)
+    assert y.shape == (4, 16)
+
+
+def test_apply_returns_stats_aux():
+    spec, params, x = _setup("w8a8", 64, 32)
+    frozen = executor.freeze(params, spec, quant.absmax_scale(x))
+    y, stats = executor.apply(frozen, x, spec, return_stats=True)
+    assert float(stats["n_conversions"]) == x.shape[0] * 32  # one per output
+    spec_b = dataclasses.replace(spec, mode="bitserial")
+    _, stats_b = executor.apply(frozen, x, spec_b, return_stats=True)
+    assert float(stats_b["n_conversions"]) == 8 * x.shape[0] * 32  # per bit
+
+
+def test_flops_per_byte_orders_backends():
+    spec = executor.LinearSpec(in_dim=1024, out_dim=1024, mode="w8a8")
+    fused = backend_lib.get_backend("w8a8").flops_per_byte(spec, batch=64)
+    serial = backend_lib.get_backend("bitserial").flops_per_byte(spec, batch=64)
+    assert fused > serial  # 8 passes move ~8x the bytes per MAC
+
+
+# -------------------------------------------------------- deployment plan --
+
+def test_plan_json_roundtrip():
+    plan = DeploymentPlan(
+        rules=(("*attn*", LayerRule("w8a8_kernel")),
+               ("*mlp*", LayerRule("w8a8", a_scale=0.07)),
+               ("lm_head", LayerRule("exact"))),
+        default="w8a8")
+    back = DeploymentPlan.from_json(plan.to_json())
+    assert back == plan
+    assert back.rule_for("stack/blocks/mlp/up").a_scale == 0.07
+    assert back.backend_for("lm_head") == "exact"
+    assert back.backend_for("stack/blocks/ssm/in_proj") == "w8a8"
+
+
+def test_plan_is_jit_static():
+    plan = DeploymentPlan(rules=(("*", LayerRule("w8a8")),))
+    leaves = jax.tree_util.tree_leaves(plan)
+    assert leaves == []           # static node: no traced content
+    assert hash(plan) is not None
+
+
+def test_plan_freeze_apply_generate_roundtrip(rng):
+    """A per-layer mixed plan survives freeze -> apply -> Engine.generate:
+    attention on the Pallas kernel, MLP on w8a8, lm_head exact."""
+    from repro import configs as cfg_lib
+    from repro.models import model as M
+    from repro.serve.engine import Engine
+
+    plan = DeploymentPlan(
+        rules=(("*attn*", LayerRule("w8a8_kernel")),
+               ("*mlp*", LayerRule("w8a8")),
+               ("lm_head", LayerRule("exact"))),
+        default="w8a8")
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=2)
+    params = M.init(rng, cfg)
+    frozen = M.freeze_params(params, a_scale=0.05, plan=plan)
+    # exact-rule layers stay master; frozen-rule layers went int8
+    assert "w" in frozen["lm_head"]
+    blk = frozen["stack"]["blocks"]
+    assert "w_q" in blk["attn"]["q"] and "w_q" in blk["mlp"]["up"]
+
+    batch = {"tokens": jax.random.randint(rng, (2, 8), 0, cfg.vocab)}
+    eng = Engine(frozen, cfg, max_len=32, plan=plan)
+    res = eng.generate(batch, max_new_tokens=4)
+    assert res.tokens.shape == (2, 4)
+    assert np.all(np.isfinite(np.asarray(res.logprobs)))
+
+    # same plan serialized and reloaded -> identical generation
+    plan2 = DeploymentPlan.from_json(plan.to_json())
+    eng2 = Engine(frozen, cfg, max_len=32, plan=plan2)
+    res2 = eng2.generate(batch, max_new_tokens=4)
+    np.testing.assert_array_equal(np.asarray(res.tokens),
+                                  np.asarray(res2.tokens))
+
+
+def _dict_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        out = set()
+        for k, v in tree.items():
+            out |= _dict_paths(v, f"{prefix}/{k}")
+        return out
+    return {prefix}
+
+
+def test_plan_qat_rule_keeps_params_and_pspec_in_sync(rng):
+    """qat deploys to the int8 layout: freeze_params and freeze_pspec must
+    agree structurally (sharding-spec resolution depends on it)."""
+    from repro import configs as cfg_lib
+    from repro.models import model as M
+
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=1)
+    params = M.init(rng, cfg)
+    plan = DeploymentPlan(rules=(), default="qat")
+    frozen = M.freeze_params(params, plan=plan)
+    pspec = M.freeze_pspec(M.pspec(cfg), plan=plan)
+    assert _dict_paths(frozen) == _dict_paths(pspec)
+
+
+def test_plan_subleaf_rule_does_not_break_moe_bank(rng):
+    """Expert banks are frozen as one unit under the bank-path rule; a
+    pattern that would only match a sub-matrix must not crash the walk."""
+    from repro import configs as cfg_lib
+    from repro.models import model as M
+
+    cfg = cfg_lib.reduced_config("granite-moe-1b-a400m", n_layers=1)
+    params = M.init(rng, cfg)
+    plan = DeploymentPlan(
+        rules=(("*moe/up", LayerRule("exact")),       # matches only a leaf
+               ("*router*", LayerRule("exact"))),
+        default="w8a8")
+    frozen = M.freeze_params(params, plan=plan)
+    blk = frozen["stack"]["blocks"]
+    assert "gate_q" in blk["moe"]      # bank-level rule (default) governs
+    assert "w" in blk["moe"]["router"]
+
+
+def test_plan_cim_rule_fails_loudly_at_freeze(rng):
+    """cim needs per-layer chip plumbing the transformer freeze lacks: the
+    plan walk must reject it up front, not assert deep inside apply."""
+    from repro import configs as cfg_lib
+    from repro.models import model as M
+
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=1)
+    params = M.init(rng, cfg)
+    plan = DeploymentPlan(rules=(("*mlp*", LayerRule("cim")),))
+    with pytest.raises(NotImplementedError, match="chip"):
+        M.freeze_params(params, plan=plan)
+
+
+def test_plan_plane_adc_bits_reaches_the_backend(rng):
+    """A plan rule's plane_adc_bits flows into the spec; without a
+    calibrated full-scale the deployable-only contract errors loudly
+    instead of silently running the exact path."""
+    from repro import configs as cfg_lib
+    from repro.models import model as M
+
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=1)
+    params = M.init(rng, cfg)
+    plan = DeploymentPlan(
+        rules=(("*mlp*", LayerRule("bitserial", plane_adc_bits=6)),),
+        default="w8a8")
+    frozen = M.freeze_params(params, a_scale=0.05, plan=plan)
+    with pytest.raises(ValueError, match="static"):
+        M.forward(frozen, {"tokens": jnp.zeros((1, 4), jnp.int32)}, cfg,
+                  mode=plan)
+
+
+def test_default_plan_matches_legacy_freeze(rng):
+    """freeze_params with no plan == the historical all-w8a8 freeze."""
+    from repro import configs as cfg_lib
+    from repro.models import model as M
+
+    cfg = cfg_lib.reduced_config("granite-moe-1b-a400m", n_layers=1)
+    params = M.init(rng, cfg)
+    frozen = M.freeze_params(params, a_scale=0.05)
+    blk = frozen["stack"]["blocks"]
+    assert "w_q" in blk["attn"]["q"]
+    assert "gate_q" in blk["moe"]                  # expert banks went int8
+    assert "w" in blk["moe"]["router"]             # router stayed float
+
+
+# ------------------------------------------------- bitserial static ADC FS --
+
+def test_bitserial_plane_adc_requires_static_fs():
+    a = jax.random.randint(jax.random.PRNGKey(0), (4, 32), -128, 128,
+                           jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(jax.random.PRNGKey(1), (32, 8), -128, 128,
+                           jnp.int32).astype(jnp.int8)
+    with pytest.raises(ValueError, match="static"):
+        quant.bitserial_matmul(a, w, jnp.float32(1.0), jnp.ones((8,)),
+                               plane_adc_bits=8)
+
+
+def test_bitserial_static_fs_matches_dynamic_on_calib_data():
+    """Calibrated static full-scale reproduces the dynamic path's accuracy
+    on in-distribution data while staying jit-cache-stable."""
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.randint(k1, (16, 64), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(k2, (64, 12), -128, 128, jnp.int32).astype(jnp.int8)
+    ws = jnp.ones((12,))
+    fs = quant.calibrate_plane_full_scale(a, w)
+    assert fs.shape == (8,)
+    exact = quant.w8a8_matmul(a, w, jnp.float32(1.0), ws)
+    y_static = quant.bitserial_matmul(a, w, jnp.float32(1.0), ws,
+                                      plane_adc_bits=8, plane_full_scale=fs)
+    y_dynamic = quant.bitserial_matmul(a, w, jnp.float32(1.0), ws,
+                                       plane_adc_bits=8, dynamic_plane_fs=True)
+    err_s = float(jnp.linalg.norm(y_static - exact))
+    err_d = float(jnp.linalg.norm(y_dynamic - exact))
+    norm = float(jnp.linalg.norm(exact))
+    assert err_s / norm < 0.02
+    assert err_s < 2.5 * max(err_d, 1e-6) + 1e-3
+
+    # and through the backend: freeze can calibrate + store the static FS
+    spec = executor.LinearSpec(in_dim=64, out_dim=12, mode="bitserial",
+                               plane_adc_bits=8)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(3), (64, 12))}
+    frozen = executor.freeze(params, spec, 0.05, calib_a_q=a)
+    assert "plane_fs" in frozen and frozen["plane_fs"].shape == (8,)
+    y = executor.apply(frozen, jax.random.normal(key, (4, 64)), spec)
+    assert np.all(np.isfinite(np.asarray(y)))

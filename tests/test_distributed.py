@@ -21,6 +21,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 import sys
 sys.path.insert(0, "src")
+from repro import compat
 """
 
 
@@ -106,7 +107,7 @@ def test_compressed_psum_error_feedback():
     mesh = jax.make_mesh((8,), ("data",))
 
     def reduce_once(g, err):
-        return jax.shard_map(
+        return compat.shard_map(
             partial(compression.compressed_psum, axis_name="data"),
             mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P("data"),
         )(g, err)

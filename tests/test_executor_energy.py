@@ -49,9 +49,9 @@ def test_w8a8_close_to_exact():
     assert rel < 0.05
 
 
-def test_cim_mode_with_finetune_tracks_exact():
+def test_cim_mode_with_finetune_tracks_exact(chip_factory):
     spec, params, x = _setup("cim", relu=True, rows=64)
-    chip = macro.sample_chip(jax.random.PRNGKey(3), spec.macro)
+    chip = chip_factory(spec.macro)
     a_scale = quant.absmax_scale(x)
     # Calibration pass: ideal (w8a8) vs raw cim output on calib data.
     spec_ideal = executor.LinearSpec(**{**spec.__dict__, "mode": "w8a8"})

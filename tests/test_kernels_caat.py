@@ -25,9 +25,9 @@ def _inputs(seed, b, k, n):
 
 @pytest.mark.parametrize("relu", [False, True])
 @pytest.mark.parametrize("chip_seed", [0, 1])
-def test_kernel_matches_81_plane_oracle(relu, chip_seed):
+def test_kernel_matches_81_plane_oracle(relu, chip_seed, chip_factory):
     cfg = macro.MacroConfig(rows=96, caat=NOMINAL_CAAT)
-    chip = macro.sample_chip(jax.random.PRNGKey(chip_seed), cfg)
+    chip = chip_factory(cfg, salt=chip_seed)
     a, w = _inputs(chip_seed, 16, 96, 40)
     v_fs = jnp.float32(96 * 128 * 128 * 0.25)
     ref = caat_mac_ref(a, w, chip["caat"], v_fs, relu=relu)

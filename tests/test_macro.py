@@ -95,9 +95,9 @@ def test_property_ideal_macro_quantizes_exact_mac(b, k, n, seed):
     assert err.max() <= 0.5 * n_tiles + 1e-6
 
 
-def test_nonideal_chip_bounded_distortion(rng):
+def test_nonideal_chip_bounded_distortion(rng, chip_factory):
     cfg = macro.nominal_config(rows=128)
-    chip = macro.sample_chip(jax.random.PRNGKey(11), cfg)
+    chip = chip_factory(cfg)
     k1, k2 = jax.random.split(rng)
     a = _rand_int8(k1, (16, 128))
     w = _rand_int8(k2, (128, 32))

@@ -49,13 +49,19 @@ def test_bitserial_per_plane_adc_loses_precision(rng):
     w = jax.random.randint(k2, (256, 16), -128, 128, jnp.int32).astype(jnp.int8)
     ws = jnp.ones((16,))
     exact = quant.w8a8_matmul(a, w, jnp.float32(1.0), ws)
+    fs = quant.calibrate_plane_full_scale(a, w)     # static, deployable
     lossy = quant.bitserial_matmul(
-        a, w, jnp.float32(1.0), ws, plane_adc_bits=8
+        a, w, jnp.float32(1.0), ws, plane_adc_bits=8, plane_full_scale=fs
     )
     err = float(jnp.max(jnp.abs(lossy - exact)))
     assert err > 0.0  # visibly lossy
     rel = err / float(jnp.max(jnp.abs(exact)))
     assert rel < 0.2  # but not absurd
+    # the legacy runtime-autorange path is an explicit opt-in
+    dyn = quant.bitserial_matmul(
+        a, w, jnp.float32(1.0), ws, plane_adc_bits=8, dynamic_plane_fs=True
+    )
+    assert float(jnp.max(jnp.abs(dyn - exact))) > 0.0
 
 
 def test_fake_quant_ste_gradient_passes_through(rng):
