@@ -2,12 +2,17 @@
 # ruff runs only when installed (the CI image always installs it).
 PY ?= python
 
-.PHONY: ci test lint
+.PHONY: ci test lint bench-smoke
 
 ci: lint test
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Smoke-size serving benchmark (interpret-mode kernels on CPU); emits the
+# machine-readable BENCH_PR2.json that CI uploads as an artifact.
+bench-smoke:
+	PYTHONPATH=src $(PY) benchmarks/serve_decode.py --smoke --out BENCH_PR2.json
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro.core import quant
+from repro.kernels import autotune
 from repro.kernels.bitserial_matmul import bitserial_matmul
 from repro.kernels.cim_matmul import cim_matmul
 
@@ -28,17 +29,22 @@ def main() -> None:
     ws = jnp.ones((n,))
     a_s = jnp.float32(1.0)
 
+    # Blocks come from the autotuner (measured on this machine, heuristic
+    # fallback), not hand-pinned constants; both kernels use the choice.
+    bm, bn, bk = autotune.measure(m, k, n, iters=2)[0]
+    blocks = f"blocks=bm{bm}/bn{bn}/bk{bk}"
+
     t_fused = time_call(
-        lambda: cim_matmul(a, w, a_s, ws, relu=True, bm=64, bn=64, bk=256),
-        iters=5)
+        lambda: cim_matmul(a, w, a_s, ws, relu=True), iters=5)
     t_serial = time_call(
-        lambda: bitserial_matmul(a, w, a_s, ws, relu=True, bm=64, bn=64,
-                                 bk=256),
+        lambda: bitserial_matmul(a, w, a_s, ws, relu=True, bm=bm, bn=bn,
+                                 bk=bk),
         iters=5)
     emit("kernel_fused_w8a8", t_fused,
-         "passes=1 conversions_per_output=1")
+         f"passes=1 conversions_per_output=1 {blocks}")
     emit("kernel_bitserial", t_serial,
-         f"passes=8 conversions_per_output=8 slowdown={t_serial/t_fused:.2f}x")
+         f"passes=8 conversions_per_output=8 slowdown={t_serial/t_fused:.2f}x "
+         f"{blocks}")
 
     # Structural byte accounting (per output element, int8 in / f32 out):
     bytes_fused = k * 2 / n + 4          # read a,w rows once + 1 write

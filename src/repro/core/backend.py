@@ -157,8 +157,18 @@ class ExecutionBackend:
               spec: LinearSpec | None = None, *,
               a_scale: jax.Array | None = None,
               chip: macro_lib.MacroSample | None = None,
-              return_stats: bool = False):
+              return_stats: bool = False,
+              out_scale: jax.Array | None = None):
+        """Run the linear.  `x` may be a float array or a
+        :class:`~repro.core.quant.QTensor` (already-quantized activation —
+        frozen backends then skip their own input conversion).  With
+        ``out_scale`` set on a backend whose ``supports_out_requant`` is
+        True the epilogue requantizes to int8 on that grid and a QTensor is
+        returned (int8 residency)."""
         raise NotImplementedError
+
+    # Can apply() requantize its output to int8 via out_scale=?
+    supports_out_requant: bool = False
 
     # -- analysis -----------------------------------------------------------
 
@@ -205,7 +215,12 @@ def _w8a8_freeze(params: Params, a_scale, n_mat_dims: int = 2) -> Params:
     return frozen
 
 
-def _quantize_input(params: Params, x: jax.Array, a_scale):
+def _quantize_input(params: Params, x, a_scale):
+    """x -> (int8 codes, scale).  A QTensor input is already in the int8
+    domain (its own scale wins — that is the residency contract); a float
+    input is quantized on the layer's frozen a_scale."""
+    if isinstance(x, quant.QTensor):
+        return x.q, x.scale
     a_s = params.get("a_scale", a_scale)
     assert a_s is not None, "frozen backends need a static activation scale"
     return quant.quantize(x.astype(jnp.float32), a_s), a_s
@@ -228,7 +243,9 @@ class ExactBackend(ExecutionBackend):
     'exact' in a DeploymentPlan stay in float through deployment."""
 
     def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
-              return_stats=False):
+              return_stats=False, out_scale=None):
+        if isinstance(x, quant.QTensor):
+            x = x.dequant()
         dtype = spec.dtype if spec is not None else x.dtype
         y = x.astype(dtype) @ params["w"].astype(dtype)
         if "b" in params:
@@ -253,7 +270,9 @@ class QatBackend(ExecutionBackend):
         return _w8a8_freeze(params, a_scale, n_mat_dims)
 
     def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
-              return_stats=False):
+              return_stats=False, out_scale=None):
+        if isinstance(x, quant.QTensor):
+            x = x.dequant()
         dtype = spec.dtype if spec is not None else x.dtype
         relu = spec.relu if spec is not None else False
         a_s = a_scale if a_scale is not None else quant.absmax_scale(x)
@@ -274,19 +293,34 @@ class _SingleConversionBackend(ExecutionBackend):
     frozen = True
     deploys_int8 = True
     n_passes = 1.0
+    supports_out_requant = True
+    fused_input_quant = False   # quantize float inputs in the kernel prologue
 
     def freeze(self, params, spec=None, a_scale=1.0, *, n_mat_dims=2, **kw):
         return _w8a8_freeze(params, a_scale, n_mat_dims)
 
-    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu):
+    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu, out_scale=None):
         raise NotImplementedError
 
     def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
-              return_stats=False):
+              return_stats=False, out_scale=None):
         relu = spec.relu if spec is not None else False
-        xq, a_s = _quantize_input(params, x, a_scale)
+        if self.fused_input_quant and not isinstance(x, quant.QTensor):
+            # The f32->int8 boundary conversion happens inside the kernel
+            # prologue: no separate XLA quantize pass (one full activation
+            # write + read) ever touches HBM.
+            a_s = params.get("a_scale", a_scale)
+            assert a_s is not None, \
+                "frozen backends need a static activation scale"
+            xq = x.astype(jnp.float32)
+        else:
+            xq, a_s = _quantize_input(params, x, a_scale)
         y = self._matmul(xq, params["w_q"], a_s, params["w_scale"],
-                         params.get("b"), relu)
+                         params.get("b"), relu, out_scale)
+        if out_scale is not None:
+            if y.dtype != jnp.int8:
+                y = quant.quantize(y, out_scale)
+            y = quant.QTensor(y, out_scale)
         stats = {
             "n_conversions": _batch_elems(x) * params["w_q"].shape[-1]
             * self.n_passes,
@@ -315,18 +349,24 @@ class W8A8Backend(_SingleConversionBackend):
     """Idealized CiM datapath: int8 MXU matmul + ONE fused
     dequant/bias/ReLU/requant epilogue (the single-conversion insight)."""
 
-    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu):
-        return quant.w8a8_matmul(xq, w_q, a_s, w_scale, bias=bias, relu=relu)
+    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu, out_scale=None):
+        return quant.w8a8_matmul(xq, w_q, a_s, w_scale, bias=bias, relu=relu,
+                                 out_scale=out_scale)
 
 
 @register_backend("w8a8_kernel")
 class W8A8KernelBackend(_SingleConversionBackend):
     """Same semantics as w8a8, via the fused Pallas kernel (TPU hot path;
-    interpret mode on CPU)."""
+    interpret mode on CPU).  Float inputs are quantized in the kernel
+    prologue (``fused_input_quant``); int8 outputs come straight from the
+    requant epilogue — boundary layers pay zero extra HBM passes."""
 
-    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu):
+    fused_input_quant = True
+
+    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu, out_scale=None):
         from repro.kernels.cim_matmul import ops as kops  # lazy import
-        return kops.cim_matmul(xq, w_q, a_s, w_scale, bias=bias, relu=relu)
+        return kops.cim_matmul(xq, w_q, a_s, w_scale, bias=bias,
+                               out_scale=out_scale, relu=relu)
 
 
 @register_backend("bitserial")
@@ -355,7 +395,7 @@ class BitserialBackend(_SingleConversionBackend):
         return frozen
 
     def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
-              return_stats=False):
+              return_stats=False, out_scale=None):
         relu = spec.relu if spec is not None else False
         plane_bits = spec.plane_adc_bits if spec is not None else None
         dynamic = spec.dynamic_plane_fs if spec is not None else False
@@ -367,6 +407,8 @@ class BitserialBackend(_SingleConversionBackend):
             plane_full_scale=params.get("plane_fs"),
             dynamic_plane_fs=dynamic,
         )
+        if out_scale is not None:
+            y = quant.QTensor(quant.quantize(y, out_scale), out_scale)
         stats = {
             "n_conversions": _batch_elems(x) * params["w_q"].shape[-1] * 8.0,
             "n_passes": 8.0,
@@ -384,8 +426,10 @@ class BitserialKernelBackend(_SingleConversionBackend):
 
     n_passes = 8.0
 
-    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu):
+    def _matmul(self, xq, w_q, a_s, w_scale, bias, relu, out_scale=None):
         from repro.kernels.bitserial_matmul import ops as kops  # lazy import
+        # out_scale is handled by the base apply (post-hoc quantize): the
+        # bit-plane kernel's digital shift-add epilogue has no requant slot.
         return kops.bitserial_matmul(xq, w_q, a_s, w_scale, bias=bias,
                                      relu=relu)
 
@@ -418,8 +462,10 @@ class CimBackend(ExecutionBackend):
             frozen["chip"] = chip
         return frozen
 
+    supports_out_requant = True
+
     def apply(self, params, x, spec=None, *, a_scale=None, chip=None,
-              return_stats=False):
+              return_stats=False, out_scale=None):
         assert spec is not None, "cim apply needs a LinearSpec (macro cfg)"
         the_chip = chip if chip is not None else params.get("chip")
         assert the_chip is not None, "cim mode needs a chip sample"
@@ -430,8 +476,8 @@ class CimBackend(ExecutionBackend):
             xq2, params["w_q"], the_chip, params["v_fs_mac"], spec.macro,
             relu=spec.relu,
         )
-        out_scale = params["v_fs_mac"] / (2.0 ** (spec.macro.adc.n_bits - 1))
-        y = codes * out_scale * (a_s * params["w_scale"])
+        adc_lsb = params["v_fs_mac"] / (2.0 ** (spec.macro.adc.n_bits - 1))
+        y = codes * adc_lsb * (a_s * params["w_scale"])
         y = y * params["ft_gain"] + params["ft_offset"]
         if spec.use_bias:
             y = y + params["b"]
@@ -440,6 +486,8 @@ class CimBackend(ExecutionBackend):
         if spec.relu:
             y = jnp.maximum(y, 0.0)
         y = y.reshape(*lead, -1)
+        if out_scale is not None:
+            y = quant.QTensor(quant.quantize(y, out_scale), out_scale)
         stats = {
             "n_conversions": sim_stats["n_conversions"],
             "n_passes": 1.0,
@@ -489,9 +537,17 @@ class DeploymentPlan:
     component names (``*attn*``, ``*mlp/down``, ``lm_head``) so both match.
 
     Instances are frozen/hashable (jit-static) and JSON round-trippable.
+
+    ``residency=True`` turns on network-wide int8 residency: call sites
+    where several deployed linears consume one activation (attention q/k/v,
+    MLP gate/up) quantize it once and share the int8 codes, and layer
+    chains whose producer can requantize in its epilogue (conv->relu->conv
+    in VGG-8) thread a :class:`~repro.core.quant.QTensor` straight into the
+    next layer's kernel — the activation never round-trips through f32 HBM.
     """
     rules: tuple[tuple[str, LayerRule], ...] = ()
     default: str = "w8a8"
+    residency: bool = False
 
     def __post_init__(self):
         norm = tuple(
@@ -525,17 +581,21 @@ class DeploymentPlan:
     # -- serialization ------------------------------------------------------
 
     def to_json(self) -> str:
-        return json.dumps({
+        obj: dict = {
             "default": self.default,
             "rules": [[pat, rule.to_dict()] for pat, rule in self.rules],
-        })
+        }
+        if self.residency:
+            obj["residency"] = True
+        return json.dumps(obj)
 
     @classmethod
     def from_json(cls, text: str) -> "DeploymentPlan":
         obj = json.loads(text)
         rules = tuple(
             (pat, LayerRule(**rd)) for pat, rd in obj.get("rules", ()))
-        return cls(rules=rules, default=obj.get("default", "w8a8")).validate()
+        return cls(rules=rules, default=obj.get("default", "w8a8"),
+                   residency=obj.get("residency", False)).validate()
 
 
 jax.tree_util.register_static(DeploymentPlan)
@@ -565,6 +625,31 @@ def load_plan(spec: str) -> DeploymentPlan:
         return DeploymentPlan(rules=(), default=spec)
     with open(spec) as f:
         return DeploymentPlan.from_json(f.read())
+
+
+def residency_enabled(mode: ModeLike) -> bool:
+    """Does this mode/plan ask for network-wide int8 residency?"""
+    return isinstance(mode, DeploymentPlan) and mode.residency
+
+
+def shared_quant(params_seq, x):
+    """One int8 conversion shared by several frozen consumers of x
+    (attention q/k/v, MLP gate/up) — per-consumer conversion passes are
+    elided (int8 residency).
+
+    Returns a QTensor on the first consumer's grid only when *every*
+    consumer is deployed int8 (so no float consumer ever sees a
+    quantize/dequantize round-trip); otherwise x unchanged and each layer
+    converts for itself as before.  When per-rule a_scale overrides make
+    sibling scales differ, the shared grid is the first consumer's (a
+    calibrated-quant approximation, exact when the scales agree)."""
+    ps = list(params_seq)
+    if not ps or any(
+            not isinstance(p, dict) or "w_q" not in p or "a_scale" not in p
+            for p in ps):
+        return x
+    return quant.quantize_to(x, ps[0]["a_scale"]) \
+        if not isinstance(x, quant.QTensor) else x
 
 
 def resolve_backend(mode: ModeLike, path: str = "",

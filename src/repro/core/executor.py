@@ -68,13 +68,17 @@ def apply(
     a_scale: jax.Array | None = None,
     chip: macro_lib.MacroSample | None = None,
     return_stats: bool = False,
+    out_scale: jax.Array | None = None,
 ):
-    """Run the linear in the spec's backend.  x: [..., in_dim].
+    """Run the linear in the spec's backend.  x: [..., in_dim] float array
+    or a :class:`~repro.core.quant.QTensor` (int8-resident activation).
 
     With ``return_stats=True`` returns (y, stats) where stats carries the
     backend's conversion accounting (n_conversions, relu_fused,
-    neg_fraction, n_passes) for energy/accuracy studies.
+    neg_fraction, n_passes) for energy/accuracy studies.  With
+    ``out_scale`` set (on a backend whose ``supports_out_requant`` is True)
+    the epilogue requantizes to int8 on that grid and y is a QTensor.
     """
     return get_backend(spec.mode).apply(
         params, x, spec, a_scale=a_scale, chip=chip,
-        return_stats=return_stats)
+        return_stats=return_stats, out_scale=out_scale)

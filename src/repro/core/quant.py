@@ -49,6 +49,62 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# QTensor: an activation that stays in the int8 domain between layers
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """A quantized activation: int8 codes + the (static) scale they carry.
+
+    This is the serving-path form of the paper's single-conversion claim at
+    *network* scope: when consecutive layers both run a requantizing int8
+    backend, the producer's epilogue requantizes straight into the
+    consumer's activation grid and the tensor never round-trips through
+    f32 HBM.  Frozen backends accept a QTensor wherever they accept a float
+    activation (the per-layer quantize pass is skipped; the QTensor's own
+    scale is used) and can emit one via ``out_scale=``.
+
+    Elementwise-monotone ops (ReLU at the epilogue, maxpool) and pure data
+    movement (reshape, im2col gather, zero-pad — symmetric quant has zero
+    zero-point) commute with the int8 codes, which is what makes whole
+    conv->relu->pool->conv chains residency-safe.
+    """
+
+    q: jax.Array        # int8 codes, [..., K]
+    scale: jax.Array    # f32 scalar (or broadcastable) activation scale
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    def reshape(self, *shape):
+        return QTensor(self.q.reshape(*shape), self.scale)
+
+    def dequant(self) -> jax.Array:
+        return dequantize(self.q, self.scale)
+
+
+def quantize_to(x: "jax.Array | QTensor", scale: jax.Array) -> QTensor:
+    """x -> QTensor on `scale`'s grid (no-op re-wrap when already there)."""
+    if isinstance(x, QTensor):
+        return x
+    return QTensor(quantize(x.astype(jnp.float32), scale), scale)
+
+
+# ---------------------------------------------------------------------------
 # Idealized W8A8 matmul (the oracle the Pallas kernel must match bit-exactly)
 # ---------------------------------------------------------------------------
 

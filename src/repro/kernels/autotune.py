@@ -1,0 +1,200 @@
+"""Block-shape autotuner for the Pallas matmul kernels.
+
+The kernels used to hard-code (bm, bn, bk) = (256, 256, 512) and clamp
+``bm = min(bm, max(8, m))`` — which snapped a *distinct* block shape (and so
+a distinct jit entry) onto every decode batch size.  This module owns block
+selection instead:
+
+* **Bucketing** — M is snapped to power-of-two buckets (>= 8), so decode
+  batches 1..B share O(log B) compiled kernels instead of B.
+* **Heuristic defaults** — MXU-aligned blocks chosen from the (bucketed)
+  problem shape and input dtype; float inputs (fused prologue quantization)
+  get a smaller K block to respect the 4x VMEM footprint.
+* **Measured overrides** — :func:`measure` times candidate blocks on the
+  actual kernel and records the winner; the table is JSON-dumpable so a
+  fleet can ship a tuned table and :func:`load` it at startup
+  (``REPRO_AUTOTUNE_CACHE`` names a default file).
+
+Selection is deterministic: the same (M, K, N, dtype) always returns the
+same blocks within a process, and a dumped table reproduces the choices
+exactly on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable
+
+import jax.numpy as jnp
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+# The in-process decision table: (m_bucket, k, n, dtype) -> (bm, bn, bk).
+# Heuristic choices are memoized here too, so `choose_blocks` is stable even
+# if the heuristic changes mid-process (it cannot: it is pure), and measured
+# entries transparently override heuristic ones.
+_TABLE: dict[tuple[int, int, int, str], tuple[int, int, int]] = {}
+_MEASURED: set[tuple[int, int, int, str]] = set()
+
+
+def next_pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def m_bucket(m: int) -> int:
+    """Power-of-two M bucket (>= 8): the padded row count kernels compile
+    for.  Decode batches 1..256 land in 6 buckets instead of 256."""
+    return max(8, next_pow2(m))
+
+
+def _key(m: int, k: int, n: int, dtype) -> tuple[int, int, int, str]:
+    return (m_bucket(m), int(k), int(n), jnp.dtype(dtype).name)
+
+
+def heuristic_blocks(m: int, k: int, n: int,
+                     dtype=jnp.int8) -> tuple[int, int, int]:
+    """MXU-aligned (bm, bn, bk) from the problem shape alone.
+
+    bm covers the whole M bucket up to 256 rows; bn/bk prefer 128-multiples
+    (the MXU tile) and avoid padding K/N when they are already smaller than
+    a block.  Float inputs halve the max K block: the fused-prologue a
+    block is f32 (4 bytes/elem), and bk=512 x bm=256 x 4B would crowd VMEM
+    double-buffering.
+    """
+    mb = m_bucket(m)
+    bm = min(256, mb)
+    if n >= 256 and n % 256 == 0:
+        bn = 256
+    elif n >= 128:
+        bn = 128
+    else:
+        bn = n                    # pad-free: one block spans all of N
+    bk_cap = 256 if jnp.dtype(dtype).itemsize > 1 else 512
+    if k >= bk_cap and k % bk_cap == 0:
+        bk = bk_cap
+    elif k >= 128:
+        bk = 128
+    else:
+        bk = k
+    return bm, bn, bk
+
+
+def choose_blocks(m: int, k: int, n: int,
+                  dtype=jnp.int8) -> tuple[int, int, int]:
+    """The (bm, bn, bk) for one matmul shape: measured if a measurement (or
+    loaded table entry) exists, else the deterministic heuristic."""
+    key = _key(m, k, n, dtype)
+    if key not in _TABLE:
+        _TABLE[key] = heuristic_blocks(m, k, n, dtype)
+    return _TABLE[key]
+
+
+def record(m: int, k: int, n: int, dtype,
+           blocks: tuple[int, int, int], *, measured: bool = True) -> None:
+    """Pin a block choice for a shape (what `measure` and `load` call)."""
+    bm, bn, bk = (int(b) for b in blocks)
+    key = _key(m, k, n, dtype)
+    _TABLE[key] = (bm, bn, bk)
+    if measured:
+        _MEASURED.add(key)
+
+
+def candidate_blocks(m: int, k: int, n: int,
+                     dtype=jnp.int8) -> list[tuple[int, int, int]]:
+    """Small MXU-aligned candidate grid around the heuristic choice."""
+    mb = m_bucket(m)
+    bk_cap = 256 if jnp.dtype(dtype).itemsize > 1 else 512
+    bms = sorted({min(mb, b) for b in (64, 128, 256)})
+    bns = sorted({b for b in (64, 128, 256) if b <= n} or {n})
+    bks = sorted({b for b in (128, 256, bk_cap) if b <= k} or {k})
+    cands = [(bm, bn, bk) for bm in bms for bn in bns for bk in bks]
+    h = heuristic_blocks(m, k, n, dtype)
+    if h not in cands:
+        cands.append(h)
+    return cands
+
+
+def measure(m: int, k: int, n: int, dtype=jnp.int8, *,
+            candidates: Iterable[tuple[int, int, int]] | None = None,
+            iters: int = 3, interpret: bool | None = None,
+            ) -> tuple[tuple[int, int, int], dict]:
+    """Time the cim kernel over candidate blocks; record + return the best.
+
+    Runs the real `cim_matmul` wrapper (padding included) so the measured
+    cost is end-to-end.  On CPU this times interpret mode — structurally
+    informative, not silicon-accurate — so CI uses it only as a smoke; on
+    TPU the same call tunes the compiled kernel.  Returns
+    ``(best_blocks, {blocks: median_us})``.
+    """
+    import time
+
+    import jax
+
+    from repro.kernels.cim_matmul import ops as kops  # lazy: avoid cycle
+
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    if jnp.dtype(dtype) == jnp.int8:
+        a = jax.random.randint(k1, (m, k), -128, 128, jnp.int32).astype(
+            jnp.int8)
+    else:
+        a = jax.random.normal(k1, (m, k), jnp.dtype(dtype))
+    w = jax.random.randint(k2, (k, n), -128, 128, jnp.int32).astype(jnp.int8)
+    w_s = jnp.ones((n,), jnp.float32)
+    a_s = jnp.float32(0.05)
+
+    timings: dict[tuple[int, int, int], float] = {}
+    for bm, bn, bk in (candidates or candidate_blocks(m, k, n, dtype)):
+        def run(bm=bm, bn=bn, bk=bk):
+            return kops.cim_matmul(a, w, a_s, w_s, bm=bm, bn=bn, bk=bk,
+                                   interpret=interpret)
+        jax.block_until_ready(run())  # compile
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run())
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        timings[(bm, bn, bk)] = ts[len(ts) // 2] * 1e6
+    best = min(timings, key=timings.get)
+    record(m, k, n, dtype, best)
+    return best, timings
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+
+def dump(path: str | None = None) -> str:
+    """Write the measured entries (JSON) to `path` (or $REPRO_AUTOTUNE_CACHE).
+    Returns the serialized text (also when no path is available)."""
+    entries = [
+        {"m_bucket": key[0], "k": key[1], "n": key[2], "dtype": key[3],
+         "blocks": list(_TABLE[key])}
+        for key in sorted(_MEASURED)
+    ]
+    text = json.dumps({"version": 1, "entries": entries}, indent=2)
+    path = path or os.environ.get(CACHE_ENV)
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def load(path_or_text: str) -> int:
+    """Load a dumped table (path or inline JSON); returns #entries loaded."""
+    text = path_or_text
+    if not path_or_text.lstrip().startswith("{"):
+        with open(path_or_text) as f:
+            text = f.read()
+    obj = json.loads(text)
+    for e in obj.get("entries", ()):
+        record(e["m_bucket"], e["k"], e["n"], e["dtype"],
+               tuple(e["blocks"]))
+    return len(obj.get("entries", ()))
+
+
+def clear() -> None:
+    """Drop every cached decision (tests)."""
+    _TABLE.clear()
+    _MEASURED.clear()

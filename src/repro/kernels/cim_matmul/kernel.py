@@ -30,7 +30,7 @@ from repro import compat
 
 
 def _kernel(
-    a_ref,        # [bm, bk] int8
+    a_ref,        # [bm, bk] int8 (or f32 when quant_input: prologue quant)
     w_ref,        # [bk, bn] int8
     a_scale_ref,  # [1, 1]  f32
     w_scale_ref,  # [1, bn] f32
@@ -42,6 +42,7 @@ def _kernel(
     n_k: int,
     relu: bool,
     requant: bool,
+    quant_input: bool,
 ):
     k = pl.program_id(2)
 
@@ -49,8 +50,16 @@ def _kernel(
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    a = a_ref[...]
+    if quant_input:
+        # Prologue conversion for f32->int8 boundary layers: the activation
+        # is quantized block-wise in VMEM (same round/clip as quant.quantize,
+        # so results are bit-identical to quantizing ahead of the kernel) —
+        # the separate XLA quantize pass over HBM is gone.
+        a = jnp.clip(jnp.round(a / a_scale_ref[0, 0]), -128, 127).astype(
+            jnp.int8)
     acc_ref[...] += jax.lax.dot_general(
-        a_ref[...],
+        a,
         w_ref[...],
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
@@ -76,7 +85,7 @@ def _kernel(
     static_argnames=("relu", "requant", "bm", "bn", "bk", "interpret", "out_dtype"),
 )
 def cim_matmul_kernel(
-    a_q: jax.Array,       # [M, K] int8
+    a_q: jax.Array,       # [M, K] int8, or float (fused prologue quant)
     w_q: jax.Array,       # [K, N] int8
     a_scale: jax.Array,   # scalar f32
     w_scale: jax.Array,   # [N] f32
@@ -94,6 +103,7 @@ def cim_matmul_kernel(
     m, k = a_q.shape
     k2, n = w_q.shape
     assert k == k2, (k, k2)
+    quant_input = a_q.dtype != jnp.int8
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
         f"shapes ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
@@ -106,7 +116,8 @@ def cim_matmul_kernel(
     bias2 = bias.reshape(1, n).astype(jnp.float32)
     out_scale2 = out_scale.reshape(1, 1).astype(jnp.float32)
 
-    kernel = functools.partial(_kernel, n_k=n_k, relu=relu, requant=requant)
+    kernel = functools.partial(_kernel, n_k=n_k, relu=relu, requant=requant,
+                               quant_input=quant_input)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -1,8 +1,14 @@
 """Jit'd public wrapper for the fused W8A8 "single-conversion" matmul.
 
 Handles leading batch dims, non-aligned shapes (pad to block multiples),
-backend selection (Pallas-compiled on TPU, interpret-mode on CPU), and the
-optional requantization epilogue.
+backend selection (Pallas-compiled on TPU, interpret-mode on CPU), the
+fused input-quantization prologue (float activations), and the optional
+requantization epilogue (int8 output for residency chains).
+
+Block shapes come from :mod:`repro.kernels.autotune` unless pinned by the
+caller: M is snapped to power-of-two buckets so decode batch sizes 1..B
+share O(log B) compiled kernels, and fully block-aligned shapes skip the
+pad/slice round-trip entirely.
 """
 from __future__ import annotations
 
@@ -11,24 +17,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.cim_matmul.kernel import cim_matmul_kernel
 
 
-def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
+def _pad_to(x: jax.Array, axis: int, size: int) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("relu", "requant", "bm", "bn", "bk", "interpret")
-)
+def _round_up(x: int, multiple: int) -> int:
+    return -(-x // multiple) * multiple
+
+
 def cim_matmul(
-    a_q: jax.Array,            # [..., K] int8
+    a_q: jax.Array,            # [..., K] int8, or float (prologue quant)
     w_q: jax.Array,            # [K, N] int8
     a_scale: jax.Array,
     w_scale: jax.Array,        # [N]
@@ -37,14 +44,43 @@ def cim_matmul(
     *,
     relu: bool = False,
     requant: bool | None = None,
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused W8A8 linear: y = epilogue(a_q @ w_q).  Returns f32 or int8."""
+    """Fused W8A8 linear: y = epilogue(a_q @ w_q).  Returns f32 or int8.
+
+    bm/bn/bk default to the autotuner's choice for this (M, K, N, dtype);
+    pass explicit blocks to pin them (tests, measurements).  Blocks are
+    resolved here, OUTSIDE the jit boundary, so `autotune.measure`/`load`
+    after a shape has already run takes effect on the next direct call
+    (the jit cache keys on the resolved blocks).  Calls traced inside an
+    outer jit bake in the blocks chosen at trace time, as any jit-static
+    does.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if bm is None or bn is None or bk is None:
+        k, n = w_q.shape
+        m = 1
+        for d in a_q.shape[:-1]:
+            m *= d
+        dt = a_q.dtype if a_q.dtype == jnp.int8 else jnp.float32
+        tbm, tbn, tbk = autotune.choose_blocks(m, k, n, dt)
+        bm, bn, bk = bm or tbm, bn or tbn, bk or tbk
+    return _cim_matmul(a_q, w_q, a_scale, w_scale, bias, out_scale,
+                       relu=relu, requant=requant, bm=bm, bn=bn, bk=bk,
+                       interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "requant", "bm", "bn", "bk", "interpret")
+)
+def _cim_matmul(
+    a_q, w_q, a_scale, w_scale, bias=None, out_scale=None, *,
+    relu=False, requant=None, bm=256, bn=256, bk=512, interpret=False,
+):
     if requant is None:
         requant = out_scale is not None
     k, n = w_q.shape
@@ -52,23 +88,36 @@ def cim_matmul(
     m = 1
     for d in lead:
         m *= d
+    if a_q.dtype != jnp.int8:
+        a_q = a_q.astype(jnp.float32)   # prologue-quantized inside the kernel
     a2 = a_q.reshape(m, k)
 
-    # Pick block shapes that divide (after padding).
-    bm_ = min(bm, max(8, m))
+    # bm is capped at the power-of-two M bucket, so for decode-sized M
+    # (m <= bm) the padded row count IS the bucket — every batch size in a
+    # bucket reuses one compiled kernel; larger M rounds to bm multiples.
+    bm_ = min(bm, autotune.m_bucket(m))
     bn_ = min(bn, n)
     bk_ = min(bk, k)
-    a2 = _pad_to(_pad_to(a2, 0, bm_), 1, bk_)
-    w2 = _pad_to(_pad_to(w_q, 0, bk_), 1, bn_)
-    ws = _pad_to(w_scale.reshape(-1), 0, bn_)
+    m_pad = _round_up(m, bm_)
+    k_pad = _round_up(k, bk_)
+    n_pad = _round_up(n, bn_)
+
+    aligned = (m_pad == m) and (k_pad == k) and (n_pad == n)
+    if not aligned:
+        a2 = _pad_to(_pad_to(a2, 0, m_pad), 1, k_pad)
+        w_q = _pad_to(_pad_to(w_q, 0, k_pad), 1, n_pad)
+    ws = _pad_to(w_scale.reshape(-1), 0, n_pad)
     b = bias if bias is not None else jnp.zeros((n,), jnp.float32)
-    b = _pad_to(b.reshape(-1).astype(jnp.float32), 0, bn_)
+    b = _pad_to(b.reshape(-1).astype(jnp.float32), 0, n_pad)
     os = out_scale if out_scale is not None else jnp.asarray(1.0, jnp.float32)
 
     out = cim_matmul_kernel(
-        a2, w2, jnp.asarray(a_scale, jnp.float32), ws, b, jnp.asarray(os, jnp.float32),
+        a2, w_q, jnp.asarray(a_scale, jnp.float32), ws, b,
+        jnp.asarray(os, jnp.float32),
         relu=relu, requant=requant, bm=bm_, bn=bn_, bk=bk_,
         out_dtype=jnp.int8 if requant else jnp.float32,
         interpret=interpret,
     )
-    return out[:m, :n].reshape(*lead, n)
+    if not aligned:
+        out = out[:m, :n]
+    return out.reshape(*lead, n)

@@ -300,8 +300,21 @@ def attention(
     hd = cfg.resolved_head_dim
     dt = x.dtype
 
+    from repro.core import backend as backend_lib
     from repro.distributed.sharding import constrain
-    q = layers.dense(p["q"], x, mode, path="attn/q").reshape(b, s, cfg.n_heads, hd)
+
+    # int8 residency: q/k/v all consume the same normed activation — when
+    # the plan asks for residency and all three are deployed int8, x is
+    # converted ONCE and the int8 codes are shared (two elided HBM passes
+    # per attention layer).  Self-attention only: cross-attention q and k/v
+    # read different sources.
+    x_in = x
+    if (backend_lib.residency_enabled(mode) and xattn_kv is None
+            and xattn_cache is None):
+        x_in = backend_lib.shared_quant((p["q"], p["k"], p["v"]), x)
+
+    q = layers.dense(p["q"], x_in, mode, dtype=dt,
+                     path="attn/q").reshape(b, s, cfg.n_heads, hd)
     q = constrain(q, {0: "batch", 2: "model"})
 
     if xattn_cache is not None:
@@ -316,10 +329,12 @@ def attention(
                          path="attn/o")
         return y.astype(dt), None
 
-    kv_src = xattn_kv if xattn_kv is not None else x
+    kv_src = xattn_kv if xattn_kv is not None else x_in
     sk = kv_src.shape[1]
-    k = layers.dense(p["k"], kv_src, mode, path="attn/k").reshape(b, sk, cfg.n_kv_heads, hd)
-    v = layers.dense(p["v"], kv_src, mode, path="attn/v").reshape(b, sk, cfg.n_kv_heads, hd)
+    k = layers.dense(p["k"], kv_src, mode, dtype=dt,
+                     path="attn/k").reshape(b, sk, cfg.n_kv_heads, hd)
+    v = layers.dense(p["v"], kv_src, mode, dtype=dt,
+                     path="attn/v").reshape(b, sk, cfg.n_kv_heads, hd)
     k = constrain(k, {0: "batch", 2: "model"})
     v = constrain(v, {0: "batch", 2: "model"})
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as backend_lib
+from repro.core import quant
 
 DType = Any
 
@@ -48,20 +49,29 @@ def dense_pspec(in_axis: str | None, out_axis: str | None, frozen: bool = False)
     return {"w": (in_axis, out_axis)}
 
 
-def dense(p: dict, x: jax.Array, mode: "str | Any" = "exact",
-          relu: bool = False, dtype=None, *, path: str = "") -> jax.Array:
+def dense(p: dict, x: "jax.Array | quant.QTensor", mode: "str | Any" = "exact",
+          relu: bool = False, dtype=None, *, path: str = "",
+          out_scale=None) -> "jax.Array | quant.QTensor":
     """CiM-aware linear, dispatched through the backend registry.
 
     `mode` is a backend name, a :class:`~repro.core.backend.DeploymentPlan`
     (resolved against `path`, the call site's logical layer path, e.g.
     'attn/q'), or None (exact).  Frozen params ('w_q') always run a
     deployed int8 backend; master params run float backends until frozen.
-    dtype=None -> compute in x.dtype.
+    dtype=None -> compute in x.dtype (f32 for a QTensor input).
+
+    Int8 residency: `x` may be a :class:`~repro.core.quant.QTensor` (frozen
+    backends consume its codes directly, skipping their input conversion;
+    float backends dequantize), and `out_scale` asks a requant-capable
+    backend to emit a QTensor on that grid instead of an f32 array.
     """
+    q_in = isinstance(x, quant.QTensor)
     if dtype is None:
-        dtype = x.dtype
+        dtype = jnp.float32 if q_in else x.dtype
     name = backend_lib.resolve_backend(mode, path, params=p)
     backend = backend_lib.get_backend(name)
+    if q_in and not backend.frozen:
+        x = x.dequant().astype(dtype)
     w = p["w_q"] if "w_q" in p else p["w"]
     plane_bits = None
     if isinstance(mode, backend_lib.DeploymentPlan):
@@ -69,7 +79,12 @@ def dense(p: dict, x: jax.Array, mode: "str | Any" = "exact",
     spec = backend_lib.LinearSpec(
         in_dim=w.shape[-2], out_dim=w.shape[-1], use_bias="b" in p,
         relu=relu, mode=name, dtype=dtype, plane_adc_bits=plane_bits)
-    return backend.apply(p, x, spec).astype(dtype)
+    if out_scale is not None and not backend.supports_out_requant:
+        out_scale = None
+    y = backend.apply(p, x, spec, out_scale=out_scale)
+    if isinstance(y, quant.QTensor):
+        return y
+    return y.astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -180,8 +195,13 @@ def mlp(p: dict, x: jax.Array, act: str = "silu", mode="exact",
     if dtype is None:
         dtype = x.dtype
     if act == "silu":
-        g = dense(p["gate"], x, mode, dtype=dtype, path=f"{path}/gate")
-        u = dense(p["up"], x, mode, dtype=dtype, path=f"{path}/up")
+        x_in = x
+        if backend_lib.residency_enabled(mode):
+            # int8 residency: gate and up consume one shared conversion of
+            # x instead of quantizing it twice (one elided HBM pass).
+            x_in = backend_lib.shared_quant((p["gate"], p["up"]), x)
+        g = dense(p["gate"], x_in, mode, dtype=dtype, path=f"{path}/gate")
+        u = dense(p["up"], x_in, mode, dtype=dtype, path=f"{path}/up")
         h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
         return dense(p["down"], h, mode, dtype=dtype, path=f"{path}/down")
     h = dense(p["in"], x, mode, dtype=dtype, path=f"{path}/in")

@@ -82,15 +82,24 @@ def init_vgg8(key, cfg: Vgg8Config) -> list[dict]:
     return [executor.init(k, s) for k, s in zip(keys, cfg.layer_specs())]
 
 
-def _im2col(x: jax.Array) -> jax.Array:
-    """[B, H, W, C] -> [B, H, W, 9C] patches (3x3, SAME padding)."""
+def _im2col(x) -> jax.Array:
+    """[B, H, W, C] -> [B, H, W, 9C] patches (3x3, SAME padding).
+
+    QTensor-safe: the gather/concat is pure data movement and symmetric
+    int8 has zero zero-point, so SAME-padding with code 0 == padding the
+    dequantized tensor with 0.0."""
+    if isinstance(x, quant.QTensor):
+        return quant.QTensor(_im2col(x.q), x.scale)
     b, h, w, c = x.shape
     xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
     cols = [xp[:, i:i + h, j:j + w, :] for i in range(3) for j in range(3)]
     return jnp.concatenate(cols, axis=-1)
 
 
-def _maxpool2(x: jax.Array) -> jax.Array:
+def _maxpool2(x) -> jax.Array:
+    """QTensor-safe: max over codes == max over values (scale > 0)."""
+    if isinstance(x, quant.QTensor):
+        return quant.QTensor(_maxpool2(x.q), x.scale)
     b, h, w, c = x.shape
     return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
 
@@ -105,8 +114,33 @@ def vgg8_forward(
     chips: list | None = None,        # per-layer MacroSample for 'cim'
 ) -> jax.Array:
     """Returns logits [B, n_classes].  `mode` is a backend name or a
-    DeploymentPlan with per-layer rules."""
+    DeploymentPlan with per-layer rules.
+
+    With a residency plan (``DeploymentPlan(..., residency=True)``) and
+    frozen params, each layer's epilogue requantizes straight onto the next
+    layer's calibrated activation grid and the whole conv->relu->pool->conv
+    chain stays int8 end-to-end (a :class:`~repro.core.quant.QTensor`
+    threads through im2col/maxpool) — the activation never round-trips
+    through f32 HBM between layers.  Bit-identical to the non-resident
+    frozen path: requant/quantize share one formula, and pool/im2col
+    commute with the codes.
+    """
     specs = resolve_specs(cfg, mode)
+    resident = backend_lib.residency_enabled(mode)
+
+    def chain_scale(li: int):
+        """The next layer's activation grid, when this layer can requantize
+        onto it in its epilogue and the next layer is deployed int8."""
+        if not resident or li + 1 >= len(params):
+            return None
+        nxt = params[li + 1]
+        if "w_q" not in params[li] or not isinstance(nxt, dict) \
+                or "a_scale" not in nxt:
+            return None
+        bk = backend_lib.get_backend(specs[li].mode)
+        return nxt["a_scale"] if (bk.frozen and bk.supports_out_requant) \
+            else None
+
     x = images
     li = 0
     for conv_i, cout in enumerate(VGG8_CHANNELS):
@@ -115,8 +149,11 @@ def vgg8_forward(
         flat = patches.reshape(b * h * w, pdim)
         a_s = None if a_scales is None else a_scales[li]
         chip = None if chips is None else chips[li]
-        y = executor.apply(params[li], flat, specs[li], a_scale=a_s, chip=chip)
-        x = y.reshape(b, h, w, cout).astype(jnp.float32)
+        y = executor.apply(params[li], flat, specs[li], a_scale=a_s,
+                           chip=chip, out_scale=chain_scale(li))
+        x = y.reshape(b, h, w, cout)
+        if not isinstance(x, quant.QTensor):
+            x = x.astype(jnp.float32)
         if POOL_AFTER[conv_i]:
             x = _maxpool2(x)
         li += 1
@@ -124,8 +161,10 @@ def vgg8_forward(
     x = x.reshape(b, -1)
     a_s = None if a_scales is None else a_scales[li]
     chip = None if chips is None else chips[li]
-    x = executor.apply(params[li], x, specs[li], a_scale=a_s, chip=chip)
-    x = x.astype(jnp.float32)
+    x = executor.apply(params[li], x, specs[li], a_scale=a_s, chip=chip,
+                       out_scale=chain_scale(li))
+    if not isinstance(x, quant.QTensor):
+        x = x.astype(jnp.float32)
     li += 1
     a_s = None if a_scales is None else a_scales[li]
     chip = None if chips is None else chips[li]

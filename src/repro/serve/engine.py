@@ -1,4 +1,4 @@
-"""Serving engine: batched prefill + decode with KV caches.
+"""Serving engine: batched prefill + device-resident decode with KV caches.
 
 The engine wraps model.prefill / model.decode_step into a request-batched
 greedy/temperature sampler:
@@ -11,14 +11,26 @@ greedy/temperature sampler:
   shape-dependent XLA fusion rounding (measured ~1e-7 in logprobs; greedy
   tokens agree in practice).  Dense attention only — MoE capacity and SSM
   state depend on the padded token count.
-* **Fused decode+sample step** — one jit'd function per (plan, greedy)
-  runs decode_step, the logprob gather, and the next-token sample; the step
-  index and temperature are traced scalars, so the Python loop never
-  retraces and never round-trips logits to the host.
+* **Device-resident decode** — `generate` compiles prefill + the entire
+  decode loop into ONE jitted function per (plan, bucket, greedy,
+  max_new_tokens, stop_tokens): a `lax.while_loop` carries (token, done
+  mask, caches, output buffers) across all `max_new_tokens` steps and
+  early-exits once every sequence has emitted a stop token.  One
+  host->device dispatch per `generate` call — the per-token Python loop of
+  jitted steps (kept as ``decode_loop="eager"`` for parity tests and
+  benchmarks) paid one dispatch + one device sync per token.
+* **Stop tokens** — ``stop_tokens=`` marks sequences done once they emit
+  any of the given ids; finished rows emit ``pad_token`` with logprob 0
+  and the loop stops as soon as every row is done.
 * **Deployment plans** — the engine takes a
   :class:`~repro.core.backend.DeploymentPlan` (or a legacy mode string,
   which resolves through the same registry) and threads it through prefill
-  and decode; `generate` can override it per call.
+  and decode; `generate` can override it per call.  Plans with
+  ``residency=True`` additionally keep activations int8-resident between
+  quantized layers (see core/backend.py).
+
+`dispatch_count` / `last_dispatch_count` count jitted executions (the
+O(1)-dispatches contract is tested, not just claimed).
 
 Production decode shapes are what launch/dryrun.py lowers for the roofline
 (serve_step == decode_step by construction — the dry-run proves the full
@@ -28,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +53,8 @@ from repro.models import model as model_lib
 class GenerationResult:
     tokens: Any           # [B, T_new]
     logprobs: Any         # [B, T_new]
-    steps: int
+    steps: int            # decode steps actually executed (<= T_new)
+    done: Any = None      # [B] bool: emitted a stop token (None: no stops)
 
 
 class Engine:
@@ -55,6 +68,14 @@ class Engine:
         self.plan = plan                  # DeploymentPlan | None (exact)
         self.seq_bucket = seq_bucket
         self._fn_cache: dict = {}
+        # Host->device dispatch accounting (jitted executions).
+        self.dispatch_count = 0           # lifetime
+        self.last_dispatch_count = 0      # most recent generate() call
+
+    def _dispatch(self, fn, *args):
+        self.dispatch_count += 1
+        self.last_dispatch_count += 1
+        return fn(*args)
 
     # ------------------------------------------------------------------ jit
 
@@ -67,13 +88,8 @@ class Engine:
                 mode=plan))
         return self._fn_cache[key]
 
-    def _fns(self, plan, greedy: bool):
-        """(prefill, sample, step); sample/step jitted per (plan, greedy)."""
-        prefill = self._prefill_fn(plan)
-        key = (plan, greedy)
-        if key in self._fn_cache:
-            return self._fn_cache[key]
-        cfg = self.cfg
+    def _make_sample(self, plan, greedy: bool):
+        del plan
 
         def sample(logits, rng, t, temperature):
             if greedy:
@@ -82,6 +98,12 @@ class Engine:
             return jax.random.categorical(
                 k, logits.astype(jnp.float32) / temperature, axis=-1
             ).astype(jnp.int32)
+
+        return sample
+
+    def _make_step(self, plan, greedy: bool):
+        cfg = self.cfg
+        sample = self._make_sample(plan, greedy)
 
         def step(params, tok, caches, rng, t, temperature):
             """decode + logprob-of-tok + next-token sample, all on device."""
@@ -93,9 +115,79 @@ class Engine:
             nxt = sample(last, rng, t, temperature)
             return nxt, lp_tok, caches
 
-        fns = (prefill, jax.jit(sample), jax.jit(step))
-        self._fn_cache[key] = fns
-        return fns
+        return step
+
+    def _fns(self, plan, greedy: bool):
+        """(prefill, sample, step) for the eager loop; jitted per
+        (plan, greedy)."""
+        prefill = self._prefill_fn(plan)
+        key = ("eager", plan, greedy)
+        if key not in self._fn_cache:
+            self._fn_cache[key] = (
+                prefill,
+                jax.jit(self._make_sample(plan, greedy)),
+                jax.jit(self._make_step(plan, greedy)),
+            )
+        return self._fn_cache[key]
+
+    def _gen_fn(self, plan, greedy: bool, max_new: int,
+                stop_tokens: tuple[int, ...] | None):
+        """ONE jitted function: prefill + the whole decode loop.
+
+        The decode loop is a lax.while_loop whose carry holds the current
+        token, per-sequence done mask, KV caches, and the stacked
+        token/logprob output buffers; with stop tokens the predicate also
+        early-exits once every row is done.  Compiled once per
+        (plan, greedy, max_new, stop_tokens) x input bucket — `generate`
+        then costs exactly one host->device dispatch.
+        """
+        key = ("gen", plan, greedy, max_new, stop_tokens)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        cfg, max_len = self.cfg, self.max_len
+        sample = self._make_sample(plan, greedy)
+        step = self._make_step(plan, greedy)
+
+        def gen(params, batch, rng, temperature, pad_token):
+            logits, caches = model_lib.prefill(
+                params, batch, cfg, max_len=max_len, mode=plan)
+            tok = sample(logits[:, -1], rng, jnp.asarray(0, jnp.int32),
+                         temperature)
+            b = tok.shape[0]
+            toks = jnp.full((b, max_new), pad_token, jnp.int32)
+            lps = jnp.zeros((b, max_new), jnp.float32)
+            done = jnp.zeros((b,), bool)
+            stop = (None if stop_tokens is None
+                    else jnp.asarray(stop_tokens, jnp.int32))
+
+            def cond(carry):
+                t, _, done, *_ = carry
+                live = t < max_new
+                if stop is not None:
+                    live = live & ~jnp.all(done)
+                return live
+
+            def body(carry):
+                t, tok, done, caches, toks, lps = carry
+                # Finished rows emit pads and their logprob gather is
+                # masked; once ALL rows finish the while predicate stops
+                # the loop entirely.
+                toks = toks.at[:, t].set(jnp.where(done, pad_token, tok))
+                nxt, lp, caches = step(params, tok, caches, rng,
+                                       t + 1, temperature)
+                lps = lps.at[:, t].set(jnp.where(done, 0.0, lp))
+                if stop is not None:
+                    done = done | jnp.any(tok[:, None] == stop[None, :], -1)
+                return (t + 1, nxt, done, caches, toks, lps)
+
+            t, _, done, _, toks, lps = jax.lax.while_loop(
+                cond, body,
+                (jnp.asarray(0, jnp.int32), tok, done, caches, toks, lps))
+            return toks, lps, done, t
+
+        fn = jax.jit(gen)
+        self._fn_cache[key] = fn
+        return fn
 
     # ------------------------------------------------------------- prefill
 
@@ -123,25 +215,76 @@ class Engine:
     # ------------------------------------------------------------ generate
 
     def generate(self, batch: dict, *, max_new_tokens: int = 32,
-                 temperature: float = 0.0, key=None,
-                 plan=None) -> GenerationResult:
+                 temperature: float = 0.0, key=None, plan=None,
+                 stop_tokens: Sequence[int] | None = None,
+                 pad_token: int = 0,
+                 decode_loop: str = "scan") -> GenerationResult:
+        """Generate up to `max_new_tokens` per sequence.
+
+        decode_loop='scan' (default) runs prefill + the whole decode loop
+        as ONE jitted device call; 'eager' is the legacy per-token Python
+        loop (one dispatch per token), kept as the parity/benchmark
+        reference.  `stop_tokens` marks a row done once it emits any of
+        the ids; finished rows emit `pad_token` with logprob 0.
+        """
         plan = self.plan if plan is None else backend_lib.as_plan(plan)
         greedy = temperature <= 0 or key is None
-        prefill, sample, step = self._fns(plan, greedy)
-
         rng = key if key is not None else jax.random.PRNGKey(0)
         temp = jnp.asarray(max(temperature, 1e-6), jnp.float32)
+        stops = None if stop_tokens is None else \
+            tuple(int(t) for t in stop_tokens)
+        self.last_dispatch_count = 0
 
-        logits, caches = prefill(self.params, self._bucket(batch))
-        tok = sample(logits[:, -1], rng, jnp.asarray(0, jnp.int32), temp)
+        if decode_loop == "scan":
+            fn = self._gen_fn(plan, greedy, max_new_tokens, stops)
+            toks, lps, done, t = self._dispatch(
+                fn, self.params, self._bucket(batch), rng, temp,
+                jnp.asarray(pad_token, jnp.int32))
+            # Without stop tokens the loop always runs to max_new_tokens;
+            # reading `t` would force a host sync and make the one-dispatch
+            # call blocking, so only materialize it when early exit exists.
+            return GenerationResult(
+                tokens=toks, logprobs=lps,
+                steps=max_new_tokens if stops is None else int(t),
+                done=None if stops is None else done)
+        if decode_loop != "eager":
+            raise ValueError(f"decode_loop must be 'scan' or 'eager', "
+                             f"got {decode_loop!r}")
+
+        # ---- eager reference loop (one jitted dispatch per token) --------
+        prefill, sample, step = self._fns(plan, greedy)
+        logits, caches = self._dispatch(prefill, self.params,
+                                        self._bucket(batch))
+        tok = self._dispatch(sample, logits[:, -1], rng,
+                             jnp.asarray(0, jnp.int32), temp)
+        b = tok.shape[0]
+        done = jnp.zeros((b,), bool)
+        stop = None if stops is None else jnp.asarray(stops, jnp.int32)
         toks, lps = [], []
+        steps = 0
         for t in range(max_new_tokens):
-            toks.append(tok)
-            tok, lp, caches = step(self.params, tok, caches, rng,
-                                   jnp.asarray(t + 1, jnp.int32), temp)
-            lps.append(lp)
+            # Without stop tokens `done` is constant False: append
+            # unmasked so the baseline loop stays exactly the pre-scan
+            # per-token loop (no extra un-jitted device ops per step).
+            toks.append(tok if stop is None
+                        else jnp.where(done, pad_token, tok))
+            nxt, lp, caches = self._dispatch(
+                step, self.params, tok, caches, rng,
+                jnp.asarray(t + 1, jnp.int32), temp)
+            lps.append(lp if stop is None else jnp.where(done, 0.0, lp))
+            if stop is not None:
+                done = done | jnp.any(tok[:, None] == stop[None, :], -1)
+            tok = nxt
+            steps = t + 1
+            if stop is not None and bool(jnp.all(done)):
+                break
+        pad_col = jnp.full((b,), pad_token, jnp.int32)
+        zero_col = jnp.zeros((b,), jnp.float32)
+        toks += [pad_col] * (max_new_tokens - len(toks))
+        lps += [zero_col] * (max_new_tokens - len(lps))
         return GenerationResult(
             tokens=jnp.stack(toks, axis=1),
             logprobs=jnp.stack(lps, axis=1),
-            steps=max_new_tokens,
+            steps=steps,
+            done=None if stops is None else done,
         )

@@ -1,0 +1,163 @@
+"""Device-resident decode: scanned-vs-eager parity, O(1) dispatches, stop
+tokens, and network-wide int8 residency parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+from repro.core import backend as backend_lib
+from repro.core import quant
+from repro.models import layers
+from repro.models import model as M
+from repro.serve.engine import Engine
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=2)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (3, 8), 0, cfg.vocab)}
+    return cfg, params, batch
+
+
+def test_scanned_matches_eager_greedy(dense_setup):
+    cfg, params, batch = dense_setup
+    eng = Engine(params, cfg, max_len=32)
+    r_scan = eng.generate(batch, max_new_tokens=6)
+    r_eager = eng.generate(batch, max_new_tokens=6, decode_loop="eager")
+    np.testing.assert_array_equal(np.asarray(r_scan.tokens),
+                                  np.asarray(r_eager.tokens))
+    np.testing.assert_allclose(np.asarray(r_scan.logprobs),
+                               np.asarray(r_eager.logprobs),
+                               rtol=1e-6, atol=1e-6)
+    assert r_scan.steps == r_eager.steps == 6
+
+
+def test_scanned_matches_eager_temperature(dense_setup):
+    cfg, params, batch = dense_setup
+    eng = Engine(params, cfg, max_len=32)
+    key = jax.random.PRNGKey(7)
+    r_scan = eng.generate(batch, max_new_tokens=5, temperature=0.8, key=key)
+    r_eager = eng.generate(batch, max_new_tokens=5, temperature=0.8, key=key,
+                           decode_loop="eager")
+    np.testing.assert_array_equal(np.asarray(r_scan.tokens),
+                                  np.asarray(r_eager.tokens))
+
+
+def test_generate_is_single_dispatch(dense_setup):
+    """The O(1)-dispatch contract: one jitted execution per generate call,
+    independent of max_new_tokens; the eager loop pays one per token."""
+    cfg, params, batch = dense_setup
+    eng = Engine(params, cfg, max_len=40)
+    for t in (4, 12):
+        eng.generate(batch, max_new_tokens=t)
+        assert eng.last_dispatch_count == 1, t
+    eng.generate(batch, max_new_tokens=4, decode_loop="eager")
+    assert eng.last_dispatch_count == 2 + 4   # prefill + sample + 4 steps
+
+
+def test_stop_tokens_pad_and_early_exit(dense_setup):
+    cfg, params, batch = dense_setup
+    eng = Engine(params, cfg, max_len=32)
+    base = np.asarray(eng.generate(batch, max_new_tokens=8).tokens)
+    stop = int(base[0, 2])                       # row 0 stops after step 2
+    r = eng.generate(batch, max_new_tokens=8, stop_tokens=(stop,),
+                     pad_token=-1)
+    r_e = eng.generate(batch, max_new_tokens=8, stop_tokens=(stop,),
+                       pad_token=-1, decode_loop="eager")
+    toks, lps = np.asarray(r.tokens), np.asarray(r.logprobs)
+    np.testing.assert_array_equal(toks, np.asarray(r_e.tokens))
+    np.testing.assert_array_equal(np.asarray(r.done), np.asarray(r_e.done))
+    assert r.steps == r_e.steps
+    # The stop token itself is emitted; everything after is pad w/ lp 0.
+    row = toks[0]
+    hit = int(np.argmax(row == stop))
+    assert row[hit] == stop
+    assert np.all(row[hit + 1:] == -1)
+    assert np.all(lps[0, hit + 1:] == 0.0)
+    assert bool(np.asarray(r.done)[0])
+    # Rows that never emit the stop token run to max_new_tokens unpadded.
+    for b in range(1, base.shape[0]):
+        if stop not in base[b]:
+            np.testing.assert_array_equal(toks[b], base[b])
+
+
+def test_stop_all_rows_early_exit(dense_setup):
+    """When every row stops, the while_loop exits before max_new_tokens."""
+    cfg, params, batch = dense_setup
+    eng = Engine(params, cfg, max_len=64)
+    base = np.asarray(eng.generate(batch, max_new_tokens=4).tokens)
+    stops = tuple(int(t) for t in base[:, 0])    # every row's first token
+    r = eng.generate(batch, max_new_tokens=32, stop_tokens=stops,
+                     pad_token=-1)
+    assert r.steps < 32
+    assert bool(np.all(np.asarray(r.done)))
+    toks = np.asarray(r.tokens)
+    assert np.all(toks[:, 1:] == -1) or np.all(toks[:, 2:] == -1)
+
+
+def test_residency_plan_generate_parity(dense_setup):
+    """int8-resident decode (shared q/k/v and gate/up conversions) is
+    token-identical to the per-layer-conversion path when the deployed
+    activation scales agree (the default freeze)."""
+    cfg, params, batch = dense_setup
+    frozen = M.freeze_params(params, a_scale=0.05)
+    plain = backend_lib.DeploymentPlan(default="w8a8")
+    res = backend_lib.DeploymentPlan(default="w8a8", residency=True)
+    e1 = Engine(frozen, cfg, max_len=32, plan=plain)
+    e2 = Engine(frozen, cfg, max_len=32, plan=res)
+    r1 = e1.generate(batch, max_new_tokens=5)
+    r2 = e2.generate(batch, max_new_tokens=5)
+    np.testing.assert_array_equal(np.asarray(r1.tokens),
+                                  np.asarray(r2.tokens))
+    np.testing.assert_allclose(np.asarray(r1.logprobs),
+                               np.asarray(r2.logprobs), rtol=1e-5, atol=1e-5)
+
+
+def test_residency_vs_exact_tolerance(dense_setup):
+    """Resident int8 decode stays within calibrated-quant distance of the
+    float (exact) path: greedy prefill logits track within the usual W8A8
+    tolerance."""
+    cfg, params, batch = dense_setup
+    frozen = M.freeze_params(params, a_scale=0.05)
+    res = backend_lib.DeploymentPlan(default="w8a8", residency=True)
+    l_exact, _ = M.prefill(params, batch, cfg, max_len=32, mode="exact")
+    l_res, _ = M.prefill(frozen, batch, cfg, max_len=32, mode=res)
+    a = np.asarray(l_exact, np.float32)
+    b = np.asarray(l_res, np.float32)
+    rel = np.linalg.norm(a - b) / np.linalg.norm(a)
+    assert rel < 0.15, rel
+
+
+def test_qtensor_dense_chain_matches_two_step():
+    """dense(out_scale=...) -> QTensor -> next dense == the two-step
+    quantize-between-layers path, bit-exactly."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p1 = {"w": jax.random.normal(k1, (64, 32))}
+    p2 = {"w": jax.random.normal(k2, (32, 16))}
+    x = jax.random.normal(k3, (8, 64))
+    b = backend_lib.get_backend("w8a8")
+    s1 = backend_lib.LinearSpec(64, 32, relu=True, mode="w8a8")
+    s2 = backend_lib.LinearSpec(32, 16, mode="w8a8")
+    f1 = b.freeze(p1, s1, a_scale=0.05)
+    mid_scale = jnp.float32(0.11)
+    f2 = b.freeze(p2, s2, a_scale=mid_scale)
+    # two-step: f32 out, re-quantized by layer 2's input conversion
+    y_mid = layers.dense(f1, x, "w8a8", relu=True, dtype=jnp.float32)
+    y_ref = layers.dense(f2, y_mid, "w8a8", dtype=jnp.float32)
+    # resident: requant epilogue emits a QTensor on layer 2's grid
+    y_q = layers.dense(f1, x, "w8a8", relu=True, out_scale=mid_scale)
+    assert isinstance(y_q, quant.QTensor)
+    assert y_q.q.dtype == jnp.int8
+    y_res = layers.dense(f2, y_q, "w8a8", dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_res))
+
+
+def test_engine_rejects_bad_decode_loop(dense_setup):
+    cfg, params, batch = dense_setup
+    eng = Engine(params, cfg, max_len=16)
+    with pytest.raises(ValueError):
+        eng.generate(batch, max_new_tokens=2, decode_loop="nope")
