@@ -2,17 +2,25 @@
 # ruff runs only when installed (the CI image always installs it).
 PY ?= python
 
-.PHONY: ci test lint bench-smoke
+.PHONY: ci test lint bench-smoke serve-sim
 
 ci: lint test
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# Smoke-size serving benchmark (interpret-mode kernels on CPU); emits the
-# machine-readable BENCH_PR2.json that CI uploads as an artifact.
+# Smoke-size serving benchmarks (interpret-mode kernels on CPU); emit the
+# machine-readable BENCH_PR2.json / BENCH_PR3.json that CI uploads as
+# artifacts.  BENCH_PR3 additionally asserts continuous batching sustains
+# >= static-batch decode throughput on a heavy-tailed Poisson workload.
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/serve_decode.py --smoke --out BENCH_PR2.json
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
+
+# 50-request continuous-batching traffic sim (scheduler + paged KV pool
+# smoke: completion, O(1) dispatch/segment, and no-leak invariants).
+serve-sim:
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --requests 50 --sim-only
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

@@ -85,12 +85,12 @@ def main() -> None:
         key, (args.batch, args.prompt_len), 0, cfg.vocab)}
 
     # Prefill alone (bucketed), steady state.
-    prefill = eng._prefill_fn(plan)
-    jax.block_until_ready(prefill(frozen, eng._bucket(batch))[0])
+    prefill = eng.prefill_fn(plan)
+    jax.block_until_ready(prefill(frozen, eng.bucket(batch))[0])
     ts = []
     for _ in range(args.iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(prefill(frozen, eng._bucket(batch))[0])
+        jax.block_until_ready(prefill(frozen, eng.bucket(batch))[0])
         ts.append(time.perf_counter() - t0)
     ts.sort()
     t_prefill = ts[len(ts) // 2]

@@ -1,0 +1,273 @@
+"""Continuous-batching traffic benchmark: Poisson arrivals vs static batching.
+
+Drives `serve.ContinuousEngine` with a Poisson arrival stream of
+mixed-length requests (prompt length, output budget, and arrival time all
+drawn per request) and reports, in one JSON (BENCH_PR3.json):
+
+  * sustained decode tok/s (useful tokens / wall clock, steady state)
+  * per-request latency in sim decode steps (p50 / p99 of
+    arrival -> completion)
+  * KV-pool occupancy (mean / max over the run)
+  * host dispatches: segments, prefills, and dispatches-per-segment (the
+    O(1)-dispatch contract, asserted)
+  * a static-batch `Engine.generate` baseline measured in the SAME run on
+    the SAME workload: requests grouped FCFS into max_batch batches, every
+    prompt padded to the group max and every row decoded to the group's
+    largest max_new — the padding and tail-idling the continuous engine
+    exists to remove.
+
+On CPU absolute numbers are structural, not silicon (kernels run in
+interpret mode); the headline fields are the continuous/static ratio and
+the dispatch counts, which transfer.
+
+Usage:
+  PYTHONPATH=src python benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
+  PYTHONPATH=src python benchmarks/serve_traffic.py --requests 50 --sim-only
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfg_lib
+from repro.core import backend as backend_lib
+from repro.models import model as model_lib
+from repro.serve import ContinuousEngine, Engine, Request
+
+
+def make_workload(n: int, *, vocab: int, mean_interarrival: float,
+                  prompt_lo: int, prompt_hi: int, new_lo: int, new_hi: int,
+                  tail_frac: float, seed: int) -> list[Request]:
+    """Poisson arrivals with heavy-tailed output budgets.
+
+    Real decode traffic is short-mostly with a long tail (chat turns vs
+    document generations); `tail_frac` of requests draw max_new from the
+    top quarter of [new_lo, new_hi], the rest from the bottom quarter.
+    The tail is what static batching pays for: every group decodes to its
+    longest member, so one long request pads the whole batch.  Long
+    requests are assigned on a deterministic stride (every
+    round(1/tail_frac)-th) so the short/long mix is a property of the
+    workload, not of the seed — lengths and arrivals stay random."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.poisson(mean_interarrival, size=n))
+    arrivals[0] = 0                      # the stream starts immediately
+    span = max((new_hi - new_lo) // 4, 1)
+    stride = max(int(round(1.0 / tail_frac)), 1) if tail_frac > 0 else 0
+    reqs = []
+    for i, t in enumerate(arrivals):
+        if stride and i % stride == 0:
+            new = int(rng.integers(new_hi - span, new_hi + 1))
+        else:
+            new = int(rng.integers(new_lo, new_lo + span + 1))
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, int(rng.integers(prompt_lo,
+                                                           prompt_hi + 1))),
+            max_new=new,
+            arrival_step=int(t)))
+    return reqs
+
+
+def run_continuous(ce: ContinuousEngine, reqs, *, iters: int):
+    """(best-of-iters (wall, prefill) seconds, results, metrics) — first
+    run warms the jit caches (every prompt bucket + the segment fn), then
+    `iters` timed.  iters=0 (--sim-only) skips the timed passes and
+    returns NaN timings."""
+    res = ce.run(reqs)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        ce.run(reqs)
+        ts.append((time.perf_counter() - t0, ce.last_run_prefill_seconds))
+    ts.sort()                            # best-of-N: timing noise only adds
+    if not ts:
+        ts = [(float("nan"), float("nan"))]
+    occ = [o for _, o in ce.occupancy_trace]
+    metrics = {
+        "segments": ce.last_run_segments,
+        "prefills": ce.last_run_prefills,
+        "dispatches": ce.last_run_dispatches,
+        "dispatches_per_segment":
+            (ce.last_run_dispatches - ce.last_run_prefills)
+            / max(ce.last_run_segments, 1),
+        "kv_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+        "kv_occupancy_max": float(np.max(occ)) if occ else 0.0,
+    }
+    return ts[0], res, metrics
+
+
+def run_static_baseline(eng: Engine, reqs, max_batch: int, *, iters: int):
+    """FCFS groups of max_batch through Engine.generate: prompts padded to
+    the group max, decode runs to the group's largest max_new.  Returns
+    (best-of-iters wall seconds, prefill-only seconds, decode steps
+    executed)."""
+    groups = [reqs[i:i + max_batch] for i in range(0, len(reqs), max_batch)]
+    batches, steps = [], 0
+    for g in groups:
+        s = max(r.prompt_len for r in g)
+        toks = np.zeros((len(g), s), np.int32)
+        for j, r in enumerate(g):
+            toks[j, :r.prompt_len] = r.prompt
+        batches.append(({"tokens": jnp.asarray(toks)},
+                        max(r.max_new for r in g),
+                        [r.rid for r in g]))
+        steps += max(r.max_new for r in g)
+
+    def once():
+        for batch, new, rids in batches:
+            res = eng.generate(batch, max_new_tokens=new, request_ids=rids)
+            jax.block_until_ready(res.tokens)
+
+    # Prefill-only cost (same accounting as the continuous engine, which
+    # reports its prefill dispatch time separately).
+    prefill = eng.prefill_fn(eng.plan)
+    for batch, _, _ in batches:
+        jax.block_until_ready(prefill(eng.params, eng.bucket(batch))[0])
+    t_pf = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for batch, _, _ in batches:
+            jax.block_until_ready(prefill(eng.params, eng.bucket(batch))[0])
+        t_pf.append(time.perf_counter() - t0)
+    t_pf.sort()
+
+    once()                               # warm the jit caches
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        once()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[0], t_pf[0], steps
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kv-blocks", type=int, default=96)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--segment-len", type=int, default=8)
+    ap.add_argument("--seq-bucket", type=int, default=8)
+    ap.add_argument("--mean-interarrival", type=float, default=1.0,
+                    help="Poisson mean decode-steps between arrivals "
+                    "(default saturates the batch: arrival token rate >> "
+                    "per-step service rate)")
+    ap.add_argument("--prompt-lens", default="4,20",
+                    help="lo,hi inclusive prompt-length range")
+    ap.add_argument("--new-tokens", default="8,128",
+                    help="lo,hi inclusive max_new range (heavy-tailed "
+                    "mixture, see make_workload)")
+    ap.add_argument("--tail-frac", type=float, default=0.25,
+                    help="fraction of requests drawing a long output budget")
+    ap.add_argument("--plan", default="w8a8")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: tiny model, small workload")
+    ap.add_argument("--sim-only", action="store_true",
+                    help="run the traffic sim as a smoke test (no static "
+                    "baseline, no JSON) and assert pool/dispatch invariants")
+    ap.add_argument("--out", default="BENCH_PR3.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.requests, args.iters = 12, 3
+    p_lo, p_hi = (int(x) for x in args.prompt_lens.split(","))
+    n_lo, n_hi = (int(x) for x in args.new_tokens.split(","))
+
+    cfg = cfg_lib.reduced_config(args.arch, n_layers=args.layers)
+    plan = backend_lib.load_plan(args.plan)
+    params = model_lib.init(jax.random.PRNGKey(0), cfg)
+    frozen = model_lib.freeze_params(params, a_scale=0.05, plan=plan)
+    max_blocks_per_req = -(-(p_hi + n_hi + args.seq_bucket)
+                           // args.block_size)
+    ce = ContinuousEngine(
+        frozen, cfg, plan=plan, max_batch=args.max_batch,
+        kv_blocks=args.kv_blocks, block_size=args.block_size,
+        max_blocks_per_req=max_blocks_per_req,
+        segment_len=args.segment_len, seq_bucket=args.seq_bucket)
+    reqs = make_workload(
+        args.requests, vocab=cfg.vocab,
+        mean_interarrival=args.mean_interarrival, prompt_lo=p_lo,
+        prompt_hi=p_hi, new_lo=n_lo, new_hi=n_hi,
+        tail_frac=args.tail_frac, seed=args.seed)
+    useful_tokens = sum(r.max_new for r in reqs)
+
+    (t_cont, t_cont_pf), res, metrics = run_continuous(
+        ce, reqs, iters=0 if args.sim_only else args.iters)
+    assert len(res) == len(reqs), "not every request completed"
+    assert all(len(res[r.rid].tokens) == r.max_new for r in reqs)
+    assert ce.allocator.live_blocks == 0, "KV pool leaked blocks"
+    assert metrics["dispatches_per_segment"] == 1.0, \
+        "continuous decode must stay O(1) dispatches per segment"
+    lat = np.asarray([res[r.rid].latency_steps for r in reqs], np.float64)
+
+    if args.sim_only:
+        print(f"[serve-sim] {len(reqs)} requests, "
+              f"{useful_tokens} tokens, {metrics['segments']} segments, "
+              f"{metrics['dispatches_per_segment']:.0f} dispatch/segment, "
+              f"p50 latency {np.percentile(lat, 50):.0f} steps, "
+              f"occupancy max {metrics['kv_occupancy_max']:.2f} — OK")
+        return
+
+    eng = Engine(frozen, cfg, max_len=ce.max_seq_len, plan=plan,
+                 seq_bucket=args.seq_bucket)
+    t_stat, t_stat_pf, static_steps = run_static_baseline(
+        eng, reqs, args.max_batch, iters=args.iters)
+
+    # Decode-only rates: subtract each side's measured prefill time (the
+    # same accounting serve_decode.py uses).  If noise makes a wall time
+    # not exceed its prefill share, fall back to raw wall for BOTH sides.
+    decode_excludes_prefill = t_cont > t_cont_pf and t_stat > t_stat_pf
+    if decode_excludes_prefill:
+        dec_cont, dec_stat = t_cont - t_cont_pf, t_stat - t_stat_pf
+    else:
+        dec_cont, dec_stat = t_cont, t_stat
+
+    report = {
+        "bench": "serve_traffic",
+        "arch": args.arch,
+        "n_layers": args.layers,
+        "plan": plan.to_json(),
+        "backend": jax.default_backend(),
+        "interpret_kernels": jax.default_backend() != "tpu",
+        "requests": len(reqs),
+        "max_batch": args.max_batch,
+        "kv_blocks": args.kv_blocks,
+        "block_size": args.block_size,
+        "segment_len": args.segment_len,
+        "mean_interarrival_steps": args.mean_interarrival,
+        "prompt_len_range": [p_lo, p_hi],
+        "max_new_range": [n_lo, n_hi],
+        "useful_tokens": useful_tokens,
+        "decode_time_excludes_prefill": decode_excludes_prefill,
+        "decode_tok_s_continuous": useful_tokens / dec_cont,
+        "decode_tok_s_static": useful_tokens / dec_stat,
+        "decode_speedup_continuous_vs_static": dec_stat / dec_cont,
+        "wall_tok_s_continuous": useful_tokens / t_cont,
+        "wall_tok_s_static": useful_tokens / t_stat,
+        "prefill_seconds_continuous": t_cont_pf,
+        "prefill_seconds_static": t_stat_pf,
+        "static_decode_steps": static_steps,
+        "latency_steps_p50": float(np.percentile(lat, 50)),
+        "latency_steps_p99": float(np.percentile(lat, 99)),
+        **metrics,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    assert report["decode_tok_s_continuous"] >= report["decode_tok_s_static"], \
+        "continuous batching must sustain >= static-batch decode " \
+        "throughput on a mixed-length workload"
+
+
+if __name__ == "__main__":
+    main()

@@ -93,6 +93,24 @@ class QTensor:
     def reshape(self, *shape):
         return QTensor(self.q.reshape(*shape), self.scale)
 
+    def __getitem__(self, idx):
+        """Joint gather of codes and scale along leading axes.
+
+        Valid only while the scale broadcasts against the codes on the
+        indexed axes (per-block / per-token scales, e.g. the paged KV pool's
+        [NB, BS, KVH, 1] scale vs [NB, BS, KVH, HD] codes); a scalar scale
+        passes through unindexed."""
+        if self.scale.ndim == 0:
+            return QTensor(self.q[idx], self.scale)
+        return QTensor(self.q[idx], self.scale[idx])
+
+    def at_set(self, idx, other: "QTensor") -> "QTensor":
+        """Functional scatter: codes and scale written together (the paged
+        KV pool's per-position insert)."""
+        scale = (self.scale if self.scale.ndim == 0
+                 else self.scale.at[idx].set(other.scale))
+        return QTensor(self.q.at[idx].set(other.q), scale)
+
     def dequant(self) -> jax.Array:
         return dequantize(self.q, self.scale)
 

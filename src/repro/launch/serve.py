@@ -4,10 +4,18 @@ the W8A8 (CiM) datapath.
 Usage:
   python -m repro.launch.serve --arch qwen3-8b --devices 8 --mesh-shape 4,2 \
       --batch 8 --tokens 16 [--quant w8a8] [--plan plan.json]
+  python -m repro.launch.serve --arch qwen3-8b --continuous --devices 1 \
+      --batch 16 --max-batch 8 --kv-blocks 128 --segment-len 8
 
 --plan takes a DeploymentPlan (backend name, inline JSON, or a JSON file)
 for per-layer mixed deployment; --quant w8a8 is shorthand for the default
 all-w8a8 plan.
+
+--continuous serves a synthetic Poisson request stream through the
+continuous-batching engine (serve/server.py): paged KV pool of --kv-blocks
+x --block-size tokens, up to --max-batch concurrent requests, decode in
+jitted segments of --segment-len steps (single-device data path for now;
+--batch is the number of requests in the stream).
 """
 import argparse
 import os
@@ -25,6 +33,16 @@ def main():
     ap.add_argument("--quant", default="none", choices=["none", "w8a8"])
     ap.add_argument("--plan", default=None,
                     help="DeploymentPlan: backend name, inline JSON, or path")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a paged KV pool")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="continuous: concurrent request rows")
+    ap.add_argument("--kv-blocks", type=int, default=128,
+                    help="continuous: KV pool blocks (incl. null block)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="continuous: tokens per KV block")
+    ap.add_argument("--segment-len", type=int, default=8,
+                    help="continuous: decode steps per jitted segment")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
@@ -40,10 +58,6 @@ def main():
     from repro.distributed import sharding as shard_lib
     from repro.models import model as M
 
-    shape = tuple(int(x) for x in args.mesh_shape.split(","))
-    axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
-    mesh = jax.make_mesh(shape, axes)
-
     from repro.core import backend as backend_lib
 
     cfg = cfg_lib.reduced_config(args.arch)
@@ -57,6 +71,43 @@ def main():
     if plan is not None:
         params = M.freeze_params(params, a_scale=0.05, plan=plan)
         pspec = M.freeze_pspec(pspec, plan=plan)
+
+    if args.continuous:
+        # Continuous batching: paged KV pool + request scheduler (single
+        # device; the pjit'd mesh path below remains the static engine).
+        import numpy as np
+
+        from repro.serve import ContinuousEngine, Request
+
+        ce = ContinuousEngine(
+            params, cfg, plan=plan, max_batch=args.max_batch,
+            kv_blocks=args.kv_blocks, block_size=args.block_size,
+            segment_len=args.segment_len)
+        rng = np.random.default_rng(0)
+        arrivals = np.cumsum(rng.poisson(2.0, size=args.batch))
+        reqs = [
+            Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, args.prompt_len),
+                    max_new=args.tokens, arrival_step=int(t))
+            for i, t in enumerate(arrivals)
+        ]
+        t0 = time.perf_counter()
+        res = ce.run(reqs)
+        dt = time.perf_counter() - t0
+        total = sum(len(r.tokens) for r in res.values())
+        lat = sorted(r.latency_steps for r in res.values())
+        tag = "plan" if args.plan is not None else args.quant
+        print(f"[{tag}|continuous] served {len(reqs)} requests / {total} "
+              f"tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. compile); "
+              f"{ce.last_run_segments} segments, "
+              f"{ce.last_run_dispatches} dispatches, p50 latency "
+              f"{lat[len(lat)//2]} steps, peak pool occupancy "
+              f"{max(o for _, o in ce.occupancy_trace):.2f}")
+        return
+
+    shape = tuple(int(x) for x in args.mesh_shape.split(","))
+    axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
+    mesh = jax.make_mesh(shape, axes)
     param_sh = shard_lib.resolve_param_specs(pspec, mesh)
     params = jax.tree.map(jax.device_put, params, param_sh)
 

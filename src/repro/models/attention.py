@@ -252,6 +252,50 @@ def attend_decode_int8(q, k_q, k_s, v_q, v_s, kv_len_mask=None) -> jax.Array:
     return out.astype(q.dtype)
 
 
+def gather_pages(pages, block_tables):
+    """pages [NB, BS, ...] (array or int8 QTensor), block_tables [B, NBR]
+    -> each request's cache as a contiguous [B, NBR*BS, ...] view.
+
+    Pure data movement: position p of request b lives at
+    pages[block_tables[b, p // BS], p % BS], so the gathered view holds
+    exactly the written tokens in order (padding-table entries point at the
+    null block and are excluded by the caller's length mask)."""
+    from repro.core import quant
+    if isinstance(pages, quant.QTensor):
+        g = pages[block_tables]
+        b, nbr, bs = g.q.shape[:3]
+        return quant.QTensor(
+            g.q.reshape(b, nbr * bs, *g.q.shape[3:]),
+            g.scale.reshape(b, nbr * bs, *g.scale.shape[3:]))
+    g = pages[block_tables]
+    b, nbr, bs = g.shape[:3]
+    return g.reshape(b, nbr * bs, *g.shape[3:])
+
+
+def attend_decode_paged(q, k_pages, v_pages, block_tables, n_valid
+                        ) -> jax.Array:
+    """Decode attention over a paged KV pool.
+
+    q: [B, 1, H, D]; pages: [NB, BS, KVH, HD] arrays (fp cache) or int8
+    QTensors (scale [NB, BS, KVH, 1]); block_tables: [B, NBR] int32;
+    n_valid: [B] int32 live positions per request.
+
+    Numerically identical to :func:`attend_decode` /
+    :func:`attend_decode_int8` over a dense [B, NBR*BS] cache holding the
+    same tokens: the gather is pure data movement and masked positions are
+    forced to NEG_INF before the softmax in both paths.
+    """
+    from repro.core import quant
+    kg = gather_pages(k_pages, block_tables)
+    vg = gather_pages(v_pages, block_tables)
+    s = kg.shape[1]
+    mask = jnp.arange(s)[None, :] < n_valid[:, None]
+    if isinstance(kg, quant.QTensor):
+        return attend_decode_int8(q, kg.q, kg.scale[..., 0], vg.q,
+                                  vg.scale[..., 0], mask)
+    return attend_decode(q, kg, vg, mask)
+
+
 def attend_decode(q, k_cache, v_cache, kv_len_mask=None) -> jax.Array:
     """q: [B, Sq, H, D] vs given K/V [B, S, KVH, D]; no causal constraint
     (decode: Sq == 1; cross-attention: any Sq).
@@ -349,7 +393,11 @@ def attention(
             # [B_global, S, hd/2] buffer.
             base = jnp.arange(s)[None, :]
             if kv_cache is not None:
-                base = base + kv_cache["len"]
+                if "lens" in kv_cache:
+                    # Paged pool: per-request lengths -> per-row positions.
+                    base = base + kv_cache["lens"][:, None]
+                else:
+                    base = base + kv_cache["len"]
             positions = base
             if cfg.mrope_sections is not None:
                 positions = jnp.broadcast_to(positions[None], (3, 1, s))
@@ -359,6 +407,47 @@ def attention(
         k = layers.apply_rope(k, ang_q)
 
     new_cache = None
+    if kv_cache is not None and "block_tables" in kv_cache:
+        # Paged KV pool (continuous batching): per-request block tables and
+        # lengths; single-token decode only.  The new K/V is written into
+        # the page slot holding position lens[b]; rows with write_mask False
+        # (finished / idle) write into the reserved null block 0 instead so
+        # their tables never overflow and all shapes stay static.
+        assert s == 1 and xattn_kv is None, \
+            "paged KV caches serve single-token decode only"
+        assert cfg.sliding_window is None, \
+            "paged KV caches do not model sliding windows (no ring blocks)"
+        assert cfg.mrope_sections is None, \
+            "paged KV caches are single-axis-RoPE only (per-row lens " \
+            "positions have no t/h/w M-RoPE layout)"
+        from repro.core import quant as quant_lib
+        bt = kv_cache["block_tables"]
+        lens = kv_cache["lens"]
+        wm = kv_cache.get("write_mask")
+        k_pages, v_pages = kv_cache["k"], kv_cache["v"]
+        int8_pool = isinstance(k_pages, quant_lib.QTensor)
+        bs_blk = (k_pages.q if int8_pool else k_pages).shape[1]
+        slot = jnp.minimum(lens // bs_blk, bt.shape[1] - 1)
+        page = jnp.take_along_axis(bt, slot[:, None], axis=1)[:, 0]
+        off = lens % bs_blk
+        if wm is not None:
+            page = jnp.where(wm, page, 0)
+        if int8_pool:
+            k_q, k_s = quantize_kv(k)
+            v_q, v_s = quantize_kv(v)
+            k_pages = k_pages.at_set(
+                (page, off), quant_lib.QTensor(k_q[:, 0], k_s[:, 0][..., None]))
+            v_pages = v_pages.at_set(
+                (page, off), quant_lib.QTensor(v_q[:, 0], v_s[:, 0][..., None]))
+        else:
+            k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype))
+            v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype))
+        wrote = (jnp.ones_like(lens) if wm is None
+                 else wm.astype(jnp.int32))
+        out = attend_decode_paged(q, k_pages, v_pages, bt, lens + wrote)
+        y = layers.dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), mode,
+                         path="attn/o")
+        return y.astype(dt), {"k": k_pages, "v": v_pages}
     if kv_cache is not None:
         s_cache = kv_cache["k"].shape[1]
         ring = (

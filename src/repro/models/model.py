@@ -317,6 +317,26 @@ def prefill(params, batch, cfg, *, max_len: int, mode=None):
     return logits, caches
 
 
+def prefill_paged(params, batch, cfg, *, pages, block_table, max_len: int,
+                  mode=None):
+    """Prefill ONE request and pack its K/V into a paged pool.
+
+    The dense per-request cache built by :func:`prefill` is a [1, max_len]
+    scratch view that never leaves this function — the pool pages are the
+    only cache that survives into decode (serve/kv_pool.py).  `batch` holds
+    a single bucketed prompt ([1, S] tokens, optional scalar 'length');
+    `block_table` is [max_len // block_size] int32 (tail entries past the
+    allocated prompt blocks point at the null block).  Returns
+    (last_logits, packed pages).  Dense-attention archs only, like bucketed
+    prefill itself.
+    """
+    assert cfg.arch_type == "dense", \
+        "paged KV pools serve dense-attention archs only"
+    from repro.serve import kv_pool  # local import: serve layers on models
+    logits, caches = prefill(params, batch, cfg, max_len=max_len, mode=mode)
+    return logits, kv_pool.pack_prompt(pages, caches["kv"], block_table)
+
+
 def _prefill_stack(params, x, cfg, caches, *, positions, mode, enc_out):
     """Forward + cache fill.  Mirrors transformer.apply_stack but emits the
     K/V (or SSM state) of every layer."""

@@ -301,6 +301,28 @@ def decode_stack(params, x, cfg, caches: dict, *, positions=None, mode=None):
     per-layer states; returns (hidden, new_caches)."""
     at = cfg.arch_type
 
+    if at in ("dense", "moe") and "block_tables" in caches:
+        # Paged KV pool: caches["kv"] holds per-layer pages (leading L axis,
+        # scanned like the dense cache); the block tables / per-request
+        # lengths / write mask are layer-invariant and close over the scan.
+        shared = {key: caches[key]
+                  for key in ("block_tables", "lens", "write_mask")
+                  if key in caches}
+
+        def body(h, xs):
+            blk_p, cache = xs
+            kv = dict(cache, **shared)
+            if at == "dense":
+                h, nc = dense_block(blk_p, h, cfg, cache=kv,
+                                    positions=positions, mode=mode)
+            else:
+                h, nc, _ = moe_block(blk_p, h, cfg, cache=kv,
+                                     positions=positions, mode=mode)
+            return h, {key: nc[key] for key in cache}
+
+        x, new_kv = jax.lax.scan(body, x, (params["blocks"], caches["kv"]))
+        return x, dict(caches, kv=new_kv)
+
     if at in ("dense", "moe"):
         def body(h, xs):
             blk_p, cache = xs

@@ -1,0 +1,16 @@
+"""Serving layer: batched engine + continuous-batching subsystem.
+
+- engine.Engine           — static-batch generate (bucketed prefill, ONE
+                            jitted prefill+decode dispatch per call)
+- kv_pool                 — paged KV-cache pool (blocks, tables, allocator)
+- scheduler               — request lifecycle + FCFS admission control
+- server.ContinuousEngine — continuous batching over the pool
+"""
+from repro.serve.engine import Engine, GenerationResult
+from repro.serve.scheduler import Request, Scheduler, State
+from repro.serve.server import ContinuousEngine, RequestResult
+
+__all__ = [
+    "Engine", "GenerationResult", "Request", "Scheduler", "State",
+    "ContinuousEngine", "RequestResult",
+]

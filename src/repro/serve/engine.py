@@ -22,6 +22,12 @@ greedy/temperature sampler:
 * **Stop tokens** — ``stop_tokens=`` marks sequences done once they emit
   any of the given ids; finished rows emit ``pad_token`` with logprob 0
   and the loop stops as soon as every row is done.
+* **Batch-composition-independent sampling** — each row's sampler key is
+  ``fold_in(fold_in(key, request_id), step)`` (``request_ids=``, default
+  arange(B)), never a positional split of a batch key: the same request
+  draws the same tokens whatever batch it shares.  This is what lets the
+  continuous-batching driver (serve/server.py) join and retire requests
+  mid-flight while staying token-identical to isolated `generate` calls.
 * **Deployment plans** — the engine takes a
   :class:`~repro.core.backend.DeploymentPlan` (or a legacy mode string,
   which resolves through the same registry) and threads it through prefill
@@ -79,8 +85,9 @@ class Engine:
 
     # ------------------------------------------------------------------ jit
 
-    def _prefill_fn(self, plan):
-        """Prefill is greedy-agnostic: jit once per plan."""
+    def prefill_fn(self, plan):
+        """Jitted model.prefill for this engine (once per plan).  Public:
+        the continuous-batching driver and benchmarks reuse it."""
         key = ("prefill", plan)
         if key not in self._fn_cache:
             self._fn_cache[key] = jax.jit(functools.partial(
@@ -88,31 +95,47 @@ class Engine:
                 mode=plan))
         return self._fn_cache[key]
 
-    def _make_sample(self, plan, greedy: bool):
+    def make_sample(self, plan, greedy: bool):
+        """sample(logits [B,V], rng, rids [B], t, temperature) -> [B] int32.
+
+        Each row's key is fold_in(fold_in(rng, request_id), t): the draw
+        depends only on (run key, request id, step), NEVER on the row's
+        position or its batch neighbors — the same request sampled in any
+        batch mix produces identical tokens.  `t` may be a scalar (static
+        batch: all rows on the same step) or a [B] per-row step vector
+        (continuous batching)."""
         del plan
 
-        def sample(logits, rng, t, temperature):
+        def sample(logits, rng, rids, t, temperature):
             if greedy:
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            k = jax.random.fold_in(rng, t)
-            return jax.random.categorical(
-                k, logits.astype(jnp.float32) / temperature, axis=-1
-            ).astype(jnp.int32)
+            t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), rids.shape)
+
+            def row(lg, rid, tr):
+                k = jax.random.fold_in(jax.random.fold_in(rng, rid), tr)
+                return jax.random.categorical(
+                    k, lg.astype(jnp.float32) / temperature)
+
+            return jax.vmap(row)(logits, rids, t).astype(jnp.int32)
 
         return sample
 
-    def _make_step(self, plan, greedy: bool):
+    def make_step(self, plan, greedy: bool):
+        """One fused decode+sample step.  Public: the continuous-batching
+        segment loop reuses it verbatim — `caches` may be the dense per-call
+        cache OR a paged-pool cache dict (block_tables/lens/write_mask), and
+        `t` may be scalar or per-row."""
         cfg = self.cfg
-        sample = self._make_sample(plan, greedy)
+        sample = self.make_sample(plan, greedy)
 
-        def step(params, tok, caches, rng, t, temperature):
+        def step(params, tok, caches, rng, rids, t, temperature):
             """decode + logprob-of-tok + next-token sample, all on device."""
             logits, caches = model_lib.decode_step(
                 params, {"tokens": tok[:, None]}, caches, cfg, mode=plan)
             last = logits[:, -1]
             lp = jax.nn.log_softmax(last.astype(jnp.float32))
             lp_tok = jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
-            nxt = sample(last, rng, t, temperature)
+            nxt = sample(last, rng, rids, t, temperature)
             return nxt, lp_tok, caches
 
         return step
@@ -120,13 +143,13 @@ class Engine:
     def _fns(self, plan, greedy: bool):
         """(prefill, sample, step) for the eager loop; jitted per
         (plan, greedy)."""
-        prefill = self._prefill_fn(plan)
+        prefill = self.prefill_fn(plan)
         key = ("eager", plan, greedy)
         if key not in self._fn_cache:
             self._fn_cache[key] = (
                 prefill,
-                jax.jit(self._make_sample(plan, greedy)),
-                jax.jit(self._make_step(plan, greedy)),
+                jax.jit(self.make_sample(plan, greedy)),
+                jax.jit(self.make_step(plan, greedy)),
             )
         return self._fn_cache[key]
 
@@ -145,14 +168,14 @@ class Engine:
         if key in self._fn_cache:
             return self._fn_cache[key]
         cfg, max_len = self.cfg, self.max_len
-        sample = self._make_sample(plan, greedy)
-        step = self._make_step(plan, greedy)
+        sample = self.make_sample(plan, greedy)
+        step = self.make_step(plan, greedy)
 
-        def gen(params, batch, rng, temperature, pad_token):
+        def gen(params, batch, rng, rids, temperature, pad_token):
             logits, caches = model_lib.prefill(
                 params, batch, cfg, max_len=max_len, mode=plan)
-            tok = sample(logits[:, -1], rng, jnp.asarray(0, jnp.int32),
-                         temperature)
+            tok = sample(logits[:, -1], rng, rids,
+                         jnp.asarray(0, jnp.int32), temperature)
             b = tok.shape[0]
             toks = jnp.full((b, max_new), pad_token, jnp.int32)
             lps = jnp.zeros((b, max_new), jnp.float32)
@@ -173,7 +196,7 @@ class Engine:
                 # masked; once ALL rows finish the while predicate stops
                 # the loop entirely.
                 toks = toks.at[:, t].set(jnp.where(done, pad_token, tok))
-                nxt, lp, caches = step(params, tok, caches, rng,
+                nxt, lp, caches = step(params, tok, caches, rng, rids,
                                        t + 1, temperature)
                 lps = lps.at[:, t].set(jnp.where(done, 0.0, lp))
                 if stop is not None:
@@ -191,7 +214,7 @@ class Engine:
 
     # ------------------------------------------------------------- prefill
 
-    def _bucket(self, batch: dict) -> dict:
+    def bucket(self, batch: dict) -> dict:
         """Right-pad the prompt to a seq_bucket multiple when the arch
         supports length-aware prefill; otherwise return batch unchanged.
 
@@ -217,7 +240,7 @@ class Engine:
     def generate(self, batch: dict, *, max_new_tokens: int = 32,
                  temperature: float = 0.0, key=None, plan=None,
                  stop_tokens: Sequence[int] | None = None,
-                 pad_token: int = 0,
+                 pad_token: int = 0, request_ids=None,
                  decode_loop: str = "scan") -> GenerationResult:
         """Generate up to `max_new_tokens` per sequence.
 
@@ -226,11 +249,26 @@ class Engine:
         loop (one dispatch per token), kept as the parity/benchmark
         reference.  `stop_tokens` marks a row done once it emits any of
         the ids; finished rows emit `pad_token` with logprob 0.
+
+        `request_ids` ([B] ints, default arange(B)) seed each row's
+        sampler: row keys are fold_in(fold_in(key, request_id), step), so a
+        request's tokens depend only on (key, its id) — not on which batch
+        it happens to share (see make_sample).
         """
         plan = self.plan if plan is None else backend_lib.as_plan(plan)
         greedy = temperature <= 0 or key is None
         rng = key if key is not None else jax.random.PRNGKey(0)
         temp = jnp.asarray(max(temperature, 1e-6), jnp.float32)
+        # Batch size from the token/embedding leaf — NOT an arbitrary tree
+        # leaf: a pre-bucketed batch also carries a scalar 'length'.
+        for lead in ("tokens", "embeds", "frames"):
+            if lead in batch:
+                b = batch[lead].shape[0]
+                break
+        else:
+            raise ValueError(f"batch has no sequence input: {set(batch)}")
+        rids = (jnp.arange(b, dtype=jnp.int32) if request_ids is None
+                else jnp.asarray(request_ids, jnp.int32))
         stops = None if stop_tokens is None else \
             tuple(int(t) for t in stop_tokens)
         self.last_dispatch_count = 0
@@ -238,7 +276,7 @@ class Engine:
         if decode_loop == "scan":
             fn = self._gen_fn(plan, greedy, max_new_tokens, stops)
             toks, lps, done, t = self._dispatch(
-                fn, self.params, self._bucket(batch), rng, temp,
+                fn, self.params, self.bucket(batch), rng, rids, temp,
                 jnp.asarray(pad_token, jnp.int32))
             # Without stop tokens the loop always runs to max_new_tokens;
             # reading `t` would force a host sync and make the one-dispatch
@@ -254,10 +292,9 @@ class Engine:
         # ---- eager reference loop (one jitted dispatch per token) --------
         prefill, sample, step = self._fns(plan, greedy)
         logits, caches = self._dispatch(prefill, self.params,
-                                        self._bucket(batch))
-        tok = self._dispatch(sample, logits[:, -1], rng,
+                                        self.bucket(batch))
+        tok = self._dispatch(sample, logits[:, -1], rng, rids,
                              jnp.asarray(0, jnp.int32), temp)
-        b = tok.shape[0]
         done = jnp.zeros((b,), bool)
         stop = None if stops is None else jnp.asarray(stops, jnp.int32)
         toks, lps = [], []
@@ -269,7 +306,7 @@ class Engine:
             toks.append(tok if stop is None
                         else jnp.where(done, pad_token, tok))
             nxt, lp, caches = self._dispatch(
-                step, self.params, tok, caches, rng,
+                step, self.params, tok, caches, rng, rids,
                 jnp.asarray(t + 1, jnp.int32), temp)
             lps.append(lp if stop is None else jnp.where(done, 0.0, lp))
             if stop is not None:

@@ -1,0 +1,188 @@
+"""Paged KV-cache pool for continuous-batching serve.
+
+The pool is the serving-layer analog of the paper's array organization: a
+fixed budget of SRAM-sized blocks, kept full by the scheduler the way the
+fully-parallel adder network keeps every bitline busy.  It has two halves:
+
+* **Device pages** — one pytree ``{"k": pages, "v": pages}`` with layout
+  ``[L, num_blocks, block_size, KVH, HD]`` (leading layer axis so the
+  per-layer ``lax.scan`` in ``transformer.decode_stack`` slices it like the
+  dense cache).  An int8 pool (``cfg.kv_cache_dtype == "int8"``) stores each
+  half as a :class:`~repro.core.quant.QTensor` — int8 codes plus the
+  per-token-head scale the codes carry — so the paged cache reads from HBM
+  at half the bytes of bf16, exactly like the dense int8-resident cache.
+
+* **Host allocator** — :class:`BlockAllocator`, a free-list over block ids.
+  Block 0 is the reserved **null block**: masked writes (finished / idle
+  batch rows) and the padding tail of every block table land there, so all
+  device-side shapes stay static.  The null block is never handed out and
+  never read unmasked.
+
+Requests own blocks only through *block tables* ([max_blocks_per_req] int32
+rows); physical placement is irrelevant to correctness, which is what makes
+:func:`BlockAllocator.defrag` a pure bookkeeping move (permute pages, remap
+tables) rather than a copy of live state through the host.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+
+NULL_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold `n_tokens` cache positions."""
+    return -(-n_tokens // block_size)
+
+
+# ---------------------------------------------------------------------------
+# Device pages
+# ---------------------------------------------------------------------------
+
+def init_pages(cfg, num_blocks: int, block_size: int, dtype=jnp.bfloat16):
+    """Zero page pool shaped for `cfg`'s stack: {'k','v'} with leaves
+    [L, num_blocks, block_size, KVH, HD].  int8 pools store QTensors whose
+    scale leaf is [L, num_blocks, block_size, KVH, 1] (broadcast against the
+    trailing head dim, same per-token-head grid as the dense int8 cache)."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
+    int8 = (getattr(cfg, "kv_cache_dtype", "bf16") == "int8"
+            and cfg.sliding_window is None)
+    if int8:
+        def qt():
+            return quant.QTensor(
+                jnp.zeros(shape, jnp.int8),
+                jnp.zeros((*shape[:-1], 1), jnp.bfloat16))
+        return {"k": qt(), "v": qt()}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def pages_block_size(pages) -> int:
+    k = pages["k"]
+    return (k.q if isinstance(k, quant.QTensor) else k).shape[2]
+
+
+def pages_num_blocks(pages) -> int:
+    k = pages["k"]
+    return (k.q if isinstance(k, quant.QTensor) else k).shape[1]
+
+
+def pack_prompt(pages, dense_kv, block_table):
+    """Scatter a one-request dense prefill cache into pool pages.
+
+    dense_kv is ``model.prefill``'s ``caches['kv']`` for a batch of ONE:
+    k/v ``[L, 1, S, KVH, HD]`` (+ ``k_scale``/``v_scale`` ``[L, 1, S, KVH]``
+    for the int8 cache) with S a block_size multiple.  ``block_table`` is
+    [S // block_size] int32; entries past the request's allocated prompt
+    blocks point at the null block (the corresponding chunks hold only
+    bucket padding, which the per-row length masks exclude anyway)."""
+    bs = pages_block_size(pages)
+
+    def chunk(a):
+        lyr, _, s = a.shape[:3]
+        return a.reshape(lyr, s // bs, bs, *a.shape[3:])
+
+    out = {}
+    for name in ("k", "v"):
+        page = pages[name]
+        if isinstance(page, quant.QTensor):
+            codes = chunk(dense_kv[name])
+            scale = chunk(dense_kv[f"{name}_scale"][..., None])
+            out[name] = page.at_set(
+                (slice(None), block_table), quant.QTensor(codes, scale))
+        else:
+            out[name] = page.at[:, block_table].set(
+                chunk(dense_kv[name]).astype(page.dtype))
+    return out
+
+
+def apply_defrag(pages, block_tables, remap: dict[int, int]):
+    """Apply a :meth:`BlockAllocator.defrag` remap: permute the pool's block
+    axis and rewrite every block table.  Returns (pages, block_tables);
+    tables are taken and returned as host numpy [.., NBR] int32."""
+    nb = pages_num_blocks(pages)
+    perm = np.arange(nb)
+    lut = np.arange(nb)
+    for old, new in remap.items():
+        perm[new] = old
+        lut[old] = new
+    perm_d = jnp.asarray(perm)
+    pages = jax.tree.map(lambda p: p[:, perm_d], pages)
+    return pages, lut[np.asarray(block_tables)].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host allocator
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Free-list allocator over the pool's blocks (block 0 reserved null).
+
+    Capacity accounting is exact: every block is free, live, or the null
+    block, and `alloc` is all-or-nothing (returns None when the request
+    cannot be satisfied — the scheduler's admission backpressure signal)."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (block 0 is the "
+                             f"reserved null block), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free: collections.deque[int] = collections.deque(
+            range(1, num_blocks))
+        self._live: set[int] = set()
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        return len(self._live)
+
+    def occupancy(self) -> float:
+        return len(self._live) / self.capacity
+
+    @property
+    def fragmented(self) -> bool:
+        """True when live blocks are not a contiguous prefix (a defrag
+        would move something)."""
+        return bool(self._live) and max(self._live) > len(self._live)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n blocks, or None (all-or-nothing) when fewer than n are free."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        blocks = [self._free.popleft() for _ in range(n)]
+        self._live.update(blocks)
+        return blocks
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if b not in self._live:
+                raise ValueError(f"double free / unknown block {b}")
+            self._live.discard(b)
+            self._free.append(b)
+
+    def defrag(self) -> dict[int, int]:
+        """Compact live blocks onto the lowest ids; returns {old: new} for
+        every moved block (identity moves are omitted).  The caller must
+        apply :func:`apply_defrag` to the pages and ALL live block tables
+        before the next device step."""
+        live = sorted(self._live)
+        remap = {old: new for new, old in enumerate(live, start=1)
+                 if old != new}
+        self._live = set(range(1, len(live) + 1))
+        self._free = collections.deque(range(len(live) + 1, self.num_blocks))
+        return remap

@@ -1,0 +1,183 @@
+"""Request-lifecycle scheduler for continuous batching.
+
+State machine (one :class:`ScheduledRequest` per admitted request):
+
+    WAITING --admit--> PREFILL --pack+join--> DECODE --stop/length--> DONE
+
+* **FCFS** — the arrival queue is strictly ordered; the head is admitted as
+  soon as (a) a batch row is free and (b) the pool can commit its worst
+  case.  A blocked head blocks the queue (no reordering: later short
+  requests never starve an earlier long one).
+* **Admission by free blocks** — preemption-free v1: nothing is ever
+  evicted, so admission must guarantee the request can always grow to its
+  worst case, ``blocks_for(prompt_len + max_new)``.  The worst case is
+  *reserved* at admission (counted in ``outstanding``) but *allocated*
+  lazily — prompt blocks at admission, decode blocks segment by segment via
+  :meth:`Scheduler.ensure_capacity` — so the pool's occupancy tracks real
+  usage while growth can never fail.  The invariant
+  ``allocator.free_blocks >= outstanding`` holds at all times; admission
+  backpressures (leaves the head WAITING) exactly when admitting would
+  break it.
+* **No eviction, no leaks** — :meth:`finish` returns every allocated block
+  and releases the unallocated remainder of the reservation; after all
+  requests finish the allocator is exactly full again (tested).
+
+The scheduler is pure host bookkeeping: it never touches device arrays.
+The driver (serve/server.py) owns pages and block tables and asks the
+scheduler what to admit, grow, and retire between decode segments.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+
+import numpy as np
+
+from repro.serve.kv_pool import BlockAllocator, blocks_for
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request as submitted by the client."""
+    rid: int
+    prompt: np.ndarray            # [S] int32 token ids
+    max_new: int
+    arrival_step: int = 0         # sim time (decode steps) when it arrives
+    stop_tokens: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt_len < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.rid}: max_new must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class ScheduledRequest:
+    """Scheduler-side record: lifecycle state + block ownership + progress."""
+    req: Request
+    state: State
+    row: int                      # batch row while PREFILL/DECODE, else -1
+    blocks: list[int]             # allocated pool blocks (in table order)
+    total_blocks: int             # worst-case reservation
+    ctx_len: int = 0              # cache positions written (prompt + decoded)
+    n_out: int = 0                # tokens emitted
+    admitted_step: int = -1
+    first_token_step: int = -1
+    finished_step: int = -1
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+
+class Scheduler:
+    def __init__(self, allocator: BlockAllocator, max_batch: int,
+                 block_size: int):
+        self.allocator = allocator
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.running: dict[int, ScheduledRequest] = {}   # row -> record
+        self.finished: list[ScheduledRequest] = []
+        self._free_rows = list(range(max_batch - 1, -1, -1))
+        self.outstanding = 0      # reserved-but-not-yet-allocated blocks
+        self._last_arrival = None
+
+    # ----------------------------------------------------------- submission
+
+    def total_blocks_for(self, req: Request) -> int:
+        return blocks_for(req.prompt_len + req.max_new, self.block_size)
+
+    def submit(self, req: Request) -> None:
+        total = self.total_blocks_for(req)
+        if total > self.allocator.capacity:
+            raise ValueError(
+                f"request {req.rid} needs {total} blocks "
+                f"(prompt {req.prompt_len} + max_new {req.max_new}) but the "
+                f"pool holds {self.allocator.capacity}")
+        if self._last_arrival is not None \
+                and req.arrival_step < self._last_arrival:
+            raise ValueError("submit requests in arrival order "
+                             f"(request {req.rid} arrives at "
+                             f"{req.arrival_step} < {self._last_arrival})")
+        self._last_arrival = req.arrival_step
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def next_arrival(self) -> int | None:
+        return self.waiting[0].arrival_step if self.waiting else None
+
+    # ------------------------------------------------------------ admission
+
+    def admit_ready(self, now: int) -> list[ScheduledRequest]:
+        """Admit arrived requests FCFS while a row is free and the pool can
+        commit each one's worst case.  Allocates the prompt blocks and books
+        the growth reservation; returns the new records in PREFILL state."""
+        admitted = []
+        while self.waiting and self.waiting[0].arrival_step <= now \
+                and self._free_rows:
+            req = self.waiting[0]
+            total = self.total_blocks_for(req)
+            if self.allocator.free_blocks - self.outstanding < total:
+                break                      # backpressure: head waits (FCFS)
+            init = blocks_for(req.prompt_len, self.block_size)
+            blocks = self.allocator.alloc(init)
+            assert blocks is not None     # free >= total >= init
+            sr = ScheduledRequest(
+                req=req, state=State.PREFILL, row=self._free_rows.pop(),
+                blocks=blocks, total_blocks=total, ctx_len=req.prompt_len,
+                admitted_step=now)
+            self.outstanding += total - init
+            self.running[sr.row] = sr
+            self.waiting.popleft()
+            admitted.append(sr)
+        return admitted
+
+    def ensure_capacity(self, sr: ScheduledRequest,
+                        target_len: int) -> list[int]:
+        """Grow sr's allocation to cover `target_len` cache positions (capped
+        at its reservation).  Draws on blocks reserved at admission, so it
+        cannot fail while the admission invariant holds.  Returns the new
+        blocks (to be appended to the request's block table)."""
+        want = min(blocks_for(target_len, self.block_size), sr.total_blocks)
+        need = want - len(sr.blocks)
+        if need <= 0:
+            return []
+        got = self.allocator.alloc(need)
+        assert got is not None, \
+            "admission reservation violated: pool exhausted mid-decode"
+        sr.blocks.extend(got)
+        self.outstanding -= need
+        return got
+
+    # -------------------------------------------------------------- retire
+
+    def finish(self, sr: ScheduledRequest, now: int) -> None:
+        """DECODE -> DONE: free all blocks and the unallocated remainder of
+        the reservation, release the batch row."""
+        self.allocator.free(sr.blocks)
+        self.outstanding -= sr.total_blocks - len(sr.blocks)
+        sr.blocks = []
+        sr.state = State.DONE
+        sr.finished_step = now
+        del self.running[sr.row]
+        self._free_rows.append(sr.row)
+        sr.row = -1
+        self.finished.append(sr)

@@ -1,0 +1,411 @@
+"""Continuous-batching serve driver: segment-scanned decode over a paged
+KV pool.
+
+``ContinuousEngine.run`` is a synchronous traffic simulator with real model
+execution: requests carry an ``arrival_step`` (sim time, measured in decode
+steps), join the running batch as soon as the scheduler admits them, and
+retire the moment they emit a stop token or hit ``max_new`` — no request
+ever idles behind a slower batch neighbor, which is the whole point: the
+serving layer keeps every batch row busy the way the paper's fully-parallel
+adder network keeps every bitline busy.
+
+Execution shape:
+
+* **Prefill** (one jitted dispatch per admitted request, cached per prompt
+  bucket) — ``model.prefill_paged`` runs the bucketed prompt forward,
+  packs its K/V straight into the request's pool blocks, and samples the
+  first token with the request-id-folded RNG.
+* **Decode segments** (ONE jitted dispatch each) — a ``lax.while_loop`` of
+  up to ``segment_len`` fused decode+sample steps over the whole batch,
+  carrying (pages, per-row tokens/steps/lengths/done) on device and
+  early-exiting when every row is done.  PR 2's O(1)-dispatch property is
+  preserved *per segment* instead of per call: the host syncs once per
+  segment to harvest tokens, retire finished rows, and join newly
+  prefilled ones.  ``segment_len`` is the join/retire granularity knob —
+  larger segments amortize dispatch overhead, smaller ones admit faster.
+* **Deterministic per-request RNG** — row keys fold the request id
+  (``Engine.make_sample``), so every request's token stream is independent
+  of batch composition and *token-identical* to ``Engine.generate`` run on
+  that request alone with the same key (tested, greedy and sampled).
+
+Finished and idle rows still occupy compute lanes within a segment (static
+shapes); their writes are masked to the pool's null block and their outputs
+discarded on the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as backend_lib
+from repro.models import model as model_lib
+from repro.serve import kv_pool
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Request, ScheduledRequest, Scheduler, State
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray            # [n_out] int32
+    logprobs: np.ndarray          # [n_out] float32
+    finish_reason: str            # 'stop' | 'length'
+    arrival_step: int
+    admitted_step: int
+    first_token_step: int
+    finished_step: int
+
+    @property
+    def latency_steps(self) -> int:
+        """Arrival -> completion, in sim decode steps."""
+        return self.finished_step - self.arrival_step
+
+
+class ContinuousEngine:
+    """Continuous-batching engine over a paged KV pool.
+
+    Wraps a :class:`~repro.serve.engine.Engine` (whose bucketed prefill,
+    fused decode+sample step, and request-id RNG it reuses) with a
+    :class:`~repro.serve.scheduler.Scheduler` and a
+    :class:`~repro.serve.kv_pool.BlockAllocator` over ``kv_blocks`` pool
+    blocks of ``block_size`` tokens.  Dense-attention archs only (same
+    restriction as bucketed prefill; the int8 KV pool follows
+    ``cfg.kv_cache_dtype``).
+    """
+
+    def __init__(self, params, cfg, *, plan=None, mode=None,
+                 max_batch: int = 8, kv_blocks: int = 64,
+                 block_size: int = 16, max_blocks_per_req: int | None = None,
+                 segment_len: int = 8, seq_bucket: int = 32,
+                 defrag_interval: int | None = None):
+        if cfg.arch_type != "dense" or cfg.sliding_window is not None:
+            raise ValueError(
+                "continuous batching serves dense-attention archs without "
+                f"sliding windows (got {cfg.arch_type!r}, "
+                f"window={cfg.sliding_window})")
+        if cfg.mrope_sections is not None:
+            raise ValueError(
+                "continuous batching does not support M-RoPE archs: paged "
+                "decode derives per-row positions from the pool lengths, "
+                "which has no 3-axis (t/h/w) position layout")
+        if plan is None and mode is not None:
+            plan = backend_lib.as_plan(mode)
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.segment_len = segment_len
+        self.defrag_interval = defrag_interval
+        self.max_blocks_per_req = (kv_blocks - 1 if max_blocks_per_req is None
+                                   else max_blocks_per_req)
+        self.max_seq_len = self.max_blocks_per_req * block_size
+        # The inner engine's max_len bounds prompt bucketing AND is the
+        # dense-cache geometry isolated `generate` parity runs against.
+        self.engine = Engine(params, cfg, max_len=self.max_seq_len,
+                             plan=plan, seq_bucket=seq_bucket)
+        self.allocator = kv_pool.BlockAllocator(kv_blocks)
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.pages = kv_pool.init_pages(cfg, kv_blocks, block_size, dtype)
+        self._fn_cache: dict = {}
+        # Host->device dispatch accounting (jitted executions).
+        self.dispatch_count = 0
+        self.last_run_segments = 0
+        self.last_run_prefills = 0
+        self.last_run_dispatches = 0
+        self.last_run_prefill_seconds = 0.0
+        self.occupancy_trace: list[tuple[int, float]] = []
+
+    def _dispatch(self, fn, *args):
+        self.dispatch_count += 1
+        self.last_run_dispatches += 1
+        return fn(*args)
+
+    # ------------------------------------------------------------------ jit
+
+    def _prefill_fn(self, plan, greedy: bool, bucket_len: int,
+                    with_length: bool):
+        """Jitted prefill+pack+first-sample, cached per prompt bucket."""
+        key = ("cb_prefill", plan, greedy, bucket_len, with_length)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        cfg = self.cfg
+        sample = self.engine.make_sample(plan, greedy)
+        pf_len = kv_pool.blocks_for(bucket_len, self.block_size) \
+            * self.block_size
+
+        def f(params, pages, tokens, length, block_table, rid, rng,
+              temperature):
+            batch = {"tokens": tokens}
+            if with_length:
+                batch["length"] = length
+            logits, pages = model_lib.prefill_paged(
+                params, batch, cfg, pages=pages, block_table=block_table,
+                max_len=pf_len, mode=plan)
+            tok0 = sample(logits[:, -1], rng, rid,
+                          jnp.asarray(0, jnp.int32), temperature)
+            return tok0, pages
+
+        fn = jax.jit(f)
+        self._fn_cache[key] = fn
+        return fn
+
+    def _segment_fn(self, plan, greedy: bool, seg_len: int, stop_w: int):
+        """ONE jitted dispatch: up to `seg_len` decode steps for the whole
+        batch, early-exiting when every row is done.  Reuses the inner
+        engine's fused decode+sample step over the paged-pool cache view."""
+        key = ("cb_segment", plan, greedy, seg_len, stop_w)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        step = self.engine.make_step(plan, greedy)
+
+        def seg(params, pages, tables, tok, n_out, lens, done, rids,
+                max_new, stops, rng, temperature, pad_token):
+            mb = tok.shape[0]
+            out_t = jnp.full((mb, seg_len), pad_token, jnp.int32)
+            out_lp = jnp.zeros((mb, seg_len), jnp.float32)
+
+            def cond(carry):
+                i, _, _, _, done = carry[:5]
+                return (i < seg_len) & ~jnp.all(done)
+
+            def body(carry):
+                i, tok, n_out, lens, done, pages, out_t, out_lp = carry
+                # Emit the pending token (per-row position n_out -> column
+                # i: a live row emits every iteration until done, so its
+                # segment output is a column prefix).
+                out_t = out_t.at[:, i].set(jnp.where(done, pad_token, tok))
+                caches = {"kv": pages, "block_tables": tables, "lens": lens,
+                          "write_mask": ~done}
+                nxt, lp, caches = step(params, tok, caches, rng, rids,
+                                       n_out + 1, temperature)
+                out_lp = out_lp.at[:, i].set(jnp.where(done, 0.0, lp))
+                live = (~done).astype(jnp.int32)
+                lens = lens + live
+                n_out = n_out + live
+                done = done | jnp.any(tok[:, None] == stops, axis=-1) \
+                    | (n_out >= max_new)
+                return (i + 1, nxt, n_out, lens, done, caches["kv"],
+                        out_t, out_lp)
+
+            i, tok, n_out, lens, done, pages, out_t, out_lp = \
+                jax.lax.while_loop(
+                    cond, body,
+                    (jnp.asarray(0, jnp.int32), tok, n_out, lens, done,
+                     pages, out_t, out_lp))
+            return pages, tok, n_out, lens, done, out_t, out_lp, i
+
+        fn = jax.jit(seg)
+        self._fn_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------ run
+
+    def _maybe_defrag(self, sched: Scheduler,
+                      tables: np.ndarray) -> np.ndarray:
+        """Compact live blocks onto the lowest page slots (maintenance;
+        correctness never depends on placement, tested).  Rewrites the row
+        block tables AND every running request's scheduler-side block list
+        so later growth/free operate on the moved ids."""
+        if not self.allocator.fragmented:
+            return tables
+        remap = self.allocator.defrag()
+        if remap:
+            self.pages, tables = kv_pool.apply_defrag(
+                self.pages, tables, remap)
+            for sr in sched.running.values():
+                sr.blocks = [remap.get(b, b) for b in sr.blocks]
+        return tables
+
+    def run(self, requests: Sequence[Request], *, key=None,
+            temperature: float = 0.0) -> dict[int, RequestResult]:
+        """Serve a request stream to completion; returns {rid: result}."""
+        results: dict[int, RequestResult] = {}
+        for ev in self.run_stream(requests, key=key,
+                                  temperature=temperature):
+            if ev["event"] == "finish":
+                results[ev["rid"]] = ev["result"]
+        return results
+
+    def run_stream(self, requests: Sequence[Request], *, key=None,
+                   temperature: float = 0.0) -> Iterator[dict]:
+        """Generator form of :meth:`run`: yields per-request events as the
+        sim advances — {'event': 'admit'|'tokens'|'finish', 'rid': ...,
+        'step': sim_time, ...}.  'tokens' events carry the new tokens and
+        logprobs harvested after each decode segment."""
+        requests = list(requests)
+        rid_set = {r.rid for r in requests}
+        if len(rid_set) != len(requests):
+            raise ValueError("request ids must be unique within a run "
+                             "(they seed the per-request RNG)")
+        for r in requests:
+            if r.prompt_len + r.max_new > self.max_seq_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {r.prompt_len} + max_new "
+                    f"{r.max_new} exceeds max_blocks_per_req * block_size "
+                    f"= {self.max_seq_len}")
+        greedy = temperature <= 0 or key is None
+        rng = key if key is not None else jax.random.PRNGKey(0)
+        temp = jnp.asarray(max(temperature, 1e-6), jnp.float32)
+        plan = self.plan
+        seg_len = self.segment_len
+        stop_w = max((len(r.stop_tokens) for r in requests), default=0) or 1
+
+        sched = Scheduler(self.allocator, self.max_batch, self.block_size)
+        for r in sorted(requests, key=lambda r: r.arrival_step):
+            sched.submit(r)
+
+        mb, nbr = self.max_batch, self.max_blocks_per_req
+        tok = np.zeros(mb, np.int32)
+        n_out = np.zeros(mb, np.int32)
+        lens = np.zeros(mb, np.int32)
+        done = np.ones(mb, bool)            # idle rows are 'done'
+        rids = np.zeros(mb, np.int32)
+        max_new = np.zeros(mb, np.int32)
+        stops = np.full((mb, stop_w), -1, np.int32)
+        tables = np.zeros((mb, nbr), np.int32)
+        streams: dict[int, tuple[list, list]] = {}
+
+        self.last_run_segments = 0
+        self.last_run_prefills = 0
+        self.last_run_dispatches = 0
+        self.last_run_prefill_seconds = 0.0
+        self.occupancy_trace = []
+
+        seg_fn = self._segment_fn(plan, greedy, seg_len, stop_w)
+        pad = jnp.asarray(-1, jnp.int32)
+
+        try:
+            yield from self._serve_loop(
+                sched, seg_fn, pad, rng, temp, plan, greedy,
+                tok, n_out, lens, done, rids, max_new, stops, tables,
+                streams)
+        finally:
+            # The generator may be abandoned mid-run (client cancels the
+            # stream): release every in-flight request's blocks so the
+            # shared allocator returns to steady state for the next run.
+            for sr in list(sched.running.values()):
+                sched.finish(sr, -1)
+
+    def _serve_loop(self, sched, seg_fn, pad, rng, temp, plan, greedy,
+                    tok, n_out, lens, done, rids, max_new, stops, tables,
+                    streams) -> Iterator[dict]:
+        now = 0
+        n_loops = 0
+        while sched.has_work:
+            n_loops += 1
+            if self.defrag_interval and n_loops % self.defrag_interval == 0:
+                tables = self._maybe_defrag(sched, tables)
+            for sr in sched.admit_ready(now):
+                self._admit(sr, plan, greedy, rng, temp)
+                row, req = sr.row, sr.req
+                lens[row] = req.prompt_len
+                n_out[row] = 0
+                done[row] = False
+                rids[row] = req.rid
+                max_new[row] = req.max_new
+                stops[row] = -1
+                stops[row, :len(req.stop_tokens)] = req.stop_tokens
+                tables[row] = kv_pool.NULL_BLOCK
+                tables[row, :len(sr.blocks)] = sr.blocks
+                tok[row] = sr._tok0
+                streams[req.rid] = ([], [])
+                yield {"event": "admit", "rid": req.rid, "step": now}
+            self.occupancy_trace.append((now, self.allocator.occupancy()))
+
+            if not sched.running:
+                nxt = sched.next_arrival()
+                assert nxt is not None and nxt > now, "scheduler stalled"
+                now = nxt                   # idle pool: jump to next arrival
+                continue
+
+            # Grow block tables to cover this segment's worst-case writes.
+            for row, sr in sched.running.items():
+                new_blocks = sched.ensure_capacity(
+                    sr, sr.ctx_len + self.segment_len)
+                if new_blocks:
+                    n_have = len(sr.blocks)
+                    tables[row, n_have - len(new_blocks):n_have] = new_blocks
+
+            pages, tok_d, n_out_d, lens_d, done_d, out_t, out_lp, i_exec = \
+                self._dispatch(seg_fn, self.params, self.pages, tables, tok,
+                               n_out, lens, done, rids, max_new, stops, rng,
+                               temp, pad)
+            self.pages = pages
+            self.last_run_segments += 1
+            # ONE device->host transfer for the whole harvest (np.array
+            # copies: the row state is mutated on admit/finish and raw jax
+            # buffers are read-only); the pages stay device-resident.
+            tok, n_out_new, lens, done, out_t, out_lp, i_exec = (
+                np.array(a) for a in jax.device_get(
+                    (tok_d, n_out_d, lens_d, done_d, out_t, out_lp, i_exec)))
+            n_out = n_out_new          # sr.n_out still holds the pre-segment
+            #                            count until each row is harvested
+
+            for row, sr in list(sched.running.items()):
+                cnt = int(n_out_new[row]) - sr.n_out
+                if cnt > 0:
+                    if sr.n_out == 0:
+                        sr.first_token_step = now + 1
+                        sr.state = State.DECODE
+                    streams[sr.rid][0].extend(
+                        int(t) for t in out_t[row, :cnt])
+                    streams[sr.rid][1].extend(
+                        float(x) for x in out_lp[row, :cnt])
+                    yield {"event": "tokens", "rid": sr.rid,
+                           "step": now + cnt,
+                           "tokens": list(out_t[row, :cnt]),
+                           "logprobs": list(out_lp[row, :cnt])}
+                sr.n_out = int(n_out_new[row])
+                sr.ctx_len = int(lens[row])
+                if done[row]:
+                    toks, lps = streams.pop(sr.rid)
+                    # Stop wins ties (a stop token emitted ON the last
+                    # allowed step), matching Engine.generate's done flag.
+                    reason = ("stop" if toks and
+                              toks[-1] in sr.req.stop_tokens else "length")
+                    sched.finish(sr, now + cnt)
+                    # Hygiene: retired rows point at the null block with no
+                    # valid positions until the row is reused.
+                    tables[row] = kv_pool.NULL_BLOCK
+                    lens[row] = 0
+                    result = RequestResult(
+                        rid=sr.rid,
+                        tokens=np.asarray(toks, np.int32),
+                        logprobs=np.asarray(lps, np.float32),
+                        finish_reason=reason,
+                        arrival_step=sr.req.arrival_step,
+                        admitted_step=sr.admitted_step,
+                        first_token_step=sr.first_token_step,
+                        finished_step=sr.finished_step)
+                    yield {"event": "finish", "rid": sr.rid,
+                           "step": sr.finished_step, "result": result}
+            now += int(i_exec)
+
+    # ---------------------------------------------------------------- admit
+
+    def _admit(self, sr: ScheduledRequest, plan, greedy, rng, temp) -> None:
+        """PREFILL: bucketed prompt forward packed into the pool + first
+        token (one jitted dispatch, cached per bucket)."""
+        req = sr.req
+        batch = self.engine.bucket(
+            {"tokens": jnp.asarray(req.prompt[None, :])})
+        bucket_len = int(batch["tokens"].shape[1])
+        with_length = "length" in batch
+        bt_pf = np.zeros(kv_pool.blocks_for(bucket_len, self.block_size),
+                         np.int32)
+        bt_pf[:len(sr.blocks)] = sr.blocks
+        fn = self._prefill_fn(plan, greedy, bucket_len, with_length)
+        t0 = time.perf_counter()
+        tok0, self.pages = self._dispatch(
+            fn, self.params, self.pages, batch["tokens"],
+            jnp.asarray(req.prompt_len, jnp.int32), bt_pf,
+            jnp.asarray([req.rid], jnp.int32), rng, temp)
+        sr._tok0 = int(tok0[0])          # blocks on the prefill
+        self.last_run_prefill_seconds += time.perf_counter() - t0
+        self.last_run_prefills += 1

@@ -1,0 +1,237 @@
+"""Paged KV pool: allocator invariants, backpressure, defrag, and
+paged-vs-dense attention bit-exactness (fp and int8 pools)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+from repro.models import attention as A
+from repro.models import model as M
+from repro.serve import kv_pool
+from repro.serve.scheduler import Request, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(seed=st.integers(0, 2**16), blocks=st.integers(4, 40))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_allocator_no_leaks_random_cycles(seed, blocks):
+    """Random admit/finish cycles: allocated == sum of live tables, every
+    block is free xor live, and the pool drains back to full capacity."""
+    rnd = np.random.default_rng(seed)
+    alloc = kv_pool.BlockAllocator(blocks)
+    tables: dict[int, list[int]] = {}
+    for step in range(50):
+        if tables and rnd.random() < 0.4:
+            rid = int(rnd.choice(list(tables)))
+            alloc.free(tables.pop(rid))
+        else:
+            n = int(rnd.integers(1, 4))
+            got = alloc.alloc(n)
+            if got is None:
+                assert alloc.free_blocks < n   # backpressure is honest
+            else:
+                assert len(got) == n
+                tables[step] = got
+        live = [b for t in tables.values() for b in t]
+        assert len(live) == len(set(live)), "block handed out twice"
+        assert kv_pool.NULL_BLOCK not in live
+        assert alloc.live_blocks == len(live)
+        assert alloc.free_blocks + alloc.live_blocks == alloc.capacity
+    for t in tables.values():
+        alloc.free(t)
+    assert alloc.free_blocks == alloc.capacity
+    assert alloc.occupancy() == 0.0
+
+
+def test_allocator_rejects_double_free_and_exhaustion():
+    alloc = kv_pool.BlockAllocator(4)
+    got = alloc.alloc(3)
+    assert sorted(got) == [1, 2, 3]
+    assert alloc.alloc(1) is None          # exhausted: all-or-nothing None
+    alloc.free(got[:1])
+    with pytest.raises(ValueError):
+        alloc.free(got[:1])                # double free
+    assert alloc.alloc(2) is None          # only 1 free
+    assert alloc.alloc(1) == got[:1]
+
+
+def test_defrag_compacts_and_remaps():
+    alloc = kv_pool.BlockAllocator(10)
+    a = alloc.alloc(3)          # [1,2,3]
+    alloc.alloc(3)              # [4,5,6]
+    alloc.free(a)
+    remap = alloc.defrag()      # live {4,5,6} -> {1,2,3}
+    assert remap == {4: 1, 5: 2, 6: 3}
+    assert alloc.live_blocks == 3 and alloc.free_blocks == 6
+    # the free list is the contiguous tail: next allocs start at 4
+    assert alloc.alloc(2) == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler admission / backpressure
+# ---------------------------------------------------------------------------
+
+def _req(rid, prompt_len, max_new, arrival=0):
+    return Request(rid=rid, prompt=np.zeros(prompt_len, np.int32),
+                   max_new=max_new, arrival_step=arrival)
+
+
+def test_scheduler_backpressure_and_fcfs():
+    """Admission is bounded by worst-case (prompt + max_new) blocks; the
+    FCFS head blocks the queue; finishing releases capacity."""
+    alloc = kv_pool.BlockAllocator(9)      # capacity 8, block_size 4
+    sched = Scheduler(alloc, max_batch=4, block_size=4)
+    sched.submit(_req(0, 8, 8))            # worst case 4 blocks
+    sched.submit(_req(1, 8, 8))            # worst case 4 blocks
+    sched.submit(_req(2, 4, 4))            # worst case 2 blocks
+    admitted = sched.admit_ready(0)
+    assert [sr.rid for sr in admitted] == [0, 1]
+    # head (rid 2) backpressured: free - outstanding < 2; FCFS holds it
+    assert sched.admit_ready(0) == []
+    assert sched.next_arrival() == 0
+    # growth draws on the reservation and can never fail
+    sr0 = admitted[0]
+    grown = sched.ensure_capacity(sr0, 16)
+    assert len(sr0.blocks) == 4 and len(grown) == 2
+    sched.finish(sr0, now=5)
+    assert sr0.blocks == [] and sr0.finished_step == 5
+    admitted2 = sched.admit_ready(6)
+    assert [sr.rid for sr in admitted2] == [2]
+    for sr in [admitted[1], admitted2[0]]:
+        sched.finish(sr, now=9)
+    assert alloc.free_blocks == alloc.capacity
+    assert sched.outstanding == 0 and not sched.has_work
+
+
+def test_scheduler_rejects_oversized_request():
+    sched = Scheduler(kv_pool.BlockAllocator(4), max_batch=2, block_size=4)
+    with pytest.raises(ValueError):
+        sched.submit(_req(0, 8, 8))        # needs 4 blocks, capacity 3
+
+
+# ---------------------------------------------------------------------------
+# Paged attention: bit-exact vs the dense cache
+# ---------------------------------------------------------------------------
+
+def _paged_from_dense(k, v, block_size, n_blocks, int8):
+    """Scatter dense [B, S, KVH, D] K/V into pages + per-request tables."""
+    b, s, kvh, d = k.shape
+    nbr = s // block_size
+    shape = (n_blocks, block_size, kvh, d)
+    if int8:
+        from repro.core import quant
+        pk = quant.QTensor(jnp.zeros(shape, jnp.int8),
+                           jnp.zeros((*shape[:-1], 1), jnp.bfloat16))
+        pv = quant.QTensor(jnp.zeros(shape, jnp.int8),
+                           jnp.zeros((*shape[:-1], 1), jnp.bfloat16))
+    else:
+        pk = jnp.zeros(shape, k.dtype)
+        pv = jnp.zeros(shape, v.dtype)
+    tables = np.zeros((b, nbr), np.int32)
+    nxt = 1
+    for row in range(b):
+        for j in range(nbr):
+            tables[row, j] = nxt
+            sl = slice(j * block_size, (j + 1) * block_size)
+            if int8:
+                from repro.core import quant
+                kq, ks = A.quantize_kv(k[row:row + 1, sl])
+                vq, vs = A.quantize_kv(v[row:row + 1, sl])
+                pk = pk.at_set(nxt, quant.QTensor(kq[0], ks[0][..., None]))
+                pv = pv.at_set(nxt, quant.QTensor(vq[0], vs[0][..., None]))
+            else:
+                pk = pk.at[nxt].set(k[row, sl])
+                pv = pv.at[nxt].set(v[row, sl])
+            nxt += 1
+    return pk, pv, jnp.asarray(tables)
+
+
+@hypothesis.given(seed=st.integers(0, 2**16), l0=st.integers(0, 16),
+                  l1=st.integers(1, 16))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_attend_decode_paged_bit_exact_fp(seed, l0, l1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, s, h, kvh, d, bs = 2, 16, 4, 2, 8, 4
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    lens = jnp.asarray([l0, l1])
+    want = A.attend_decode(q, k, v, jnp.arange(s)[None] < lens[:, None])
+    pk, pv, tables = _paged_from_dense(k, v, bs, 1 + b * (s // bs), False)
+    got = A.attend_decode_paged(q, pk, pv, tables, lens)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@hypothesis.given(seed=st.integers(0, 2**16), l0=st.integers(1, 16))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_attend_decode_paged_bit_exact_int8(seed, l0):
+    """int8 pool (QTensor pages: codes + per-token-head scales) matches the
+    dense int8 cache path bit-exactly given identical quantized values."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, s, h, kvh, d, bs = 2, 16, 4, 2, 8, 4
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    lens = jnp.asarray([l0, 12])
+    kq, ksc = A.quantize_kv(k)
+    vq, vsc = A.quantize_kv(v)
+    want = A.attend_decode_int8(q, kq, ksc, vq, vsc,
+                                jnp.arange(s)[None] < lens[:, None])
+    pk, pv, tables = _paged_from_dense(k, v, bs, 1 + b * (s // bs), True)
+    got = A.attend_decode_paged(q, pk, pv, tables, lens)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_pack_prompt_roundtrip_and_defrag():
+    """model.prefill_paged packs the dense prefill cache into pages; the
+    gathered view reproduces it, and stays identical after a defrag."""
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=2)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    bs, pf_len, prompt_len = 4, 16, 9
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                          (1, prompt_len), 0, cfg.vocab)}
+    logits_d, caches = M.prefill(params, batch, cfg, max_len=pf_len)
+
+    alloc = kv_pool.BlockAllocator(12)
+    pages = kv_pool.init_pages(cfg, 12, bs, jnp.float32)
+    blocks = alloc.alloc(kv_pool.blocks_for(prompt_len, bs))
+    bt = np.zeros(pf_len // bs, np.int32)
+    bt[:len(blocks)] = blocks
+    logits_p, pages = M.prefill_paged(params, batch, cfg, pages=pages,
+                                      block_table=jnp.asarray(bt),
+                                      max_len=pf_len)
+    np.testing.assert_array_equal(np.asarray(logits_d), np.asarray(logits_p))
+
+    def gathered(pages, table):
+        return np.asarray(A.gather_pages(pages["k"][0], table[None]))
+
+    table = jnp.asarray(np.concatenate([np.asarray(blocks, np.int32),
+                                        np.zeros(1, np.int32)]))
+    before = gathered(pages, table)
+    np.testing.assert_array_equal(
+        before[0, :prompt_len], np.asarray(caches["kv"]["k"][0, 0,
+                                                             :prompt_len]))
+    # defrag bookkeeping: a freed hole below live blocks compacts them
+    alloc2 = kv_pool.BlockAllocator(12)
+    hole = alloc2.alloc(2)
+    alloc2.alloc(3)
+    alloc2.free(hole)
+    assert alloc2.defrag() == {3: 1, 4: 2, 5: 3}
+    # an identity remap is a no-op on pages and tables
+    tbl = np.asarray(blocks, np.int32)[None]
+    _, tbl2 = kv_pool.apply_defrag(pages, tbl, {})
+    np.testing.assert_array_equal(tbl, tbl2)
+    # a real move: relocate every live block and verify the gathered view
+    # (what attention reads) is unchanged
+    remap3 = {int(b): int(b) + 5 for b in blocks}
+    pages3, tbl3 = kv_pool.apply_defrag(pages, tbl, remap3)
+    table3 = jnp.asarray(np.concatenate([tbl3[0], np.zeros(1, np.int32)]))
+    after = gathered(pages3, table3)
+    np.testing.assert_array_equal(before[0, :prompt_len],
+                                  after[0, :prompt_len])

@@ -1,0 +1,277 @@
+"""Continuous batching: token-identical parity with isolated generate,
+O(1) dispatches per segment, batch-mix-independent sampling, stop tokens,
+backpressure, and pool hygiene."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+from repro.models import model as M
+from repro.serve import ContinuousEngine, Engine, Request
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=2)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, *, n=4, seed=0, arrivals=(0, 0, 3, 5),
+              max_new=(6, 9, 4, 7), stop_tokens=()):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=10 + i,
+                prompt=rng.integers(0, cfg.vocab,
+                                    int(rng.integers(3, 12))),
+                max_new=max_new[i % len(max_new)],
+                arrival_step=arrivals[i % len(arrivals)],
+                stop_tokens=stop_tokens)
+        for i in range(n)
+    ]
+
+
+def _engine_reference(ce, req, *, temperature=0.0, key=None):
+    """The request alone through the static engine with the SAME cache
+    geometry (ce.engine: max_len == max_blocks_per_req * block_size)."""
+    return ce.engine.generate(
+        {"tokens": jnp.asarray(req.prompt[None, :])},
+        max_new_tokens=req.max_new, temperature=temperature, key=key,
+        request_ids=[req.rid],
+        stop_tokens=req.stop_tokens or None)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_continuous_token_identical_to_isolated(dense_setup, temperature):
+    """Acceptance: for any request set, ContinuousEngine.run produces
+    exactly the tokens Engine.generate produces for each request in
+    isolation — greedy and seeded sampling, staggered arrivals."""
+    cfg, params = dense_setup
+    ce = ContinuousEngine(params, cfg, max_batch=3, kv_blocks=32,
+                          block_size=4, max_blocks_per_req=8,
+                          segment_len=4, seq_bucket=8)
+    key = None if temperature == 0 else jax.random.PRNGKey(7)
+    reqs = _requests(cfg)
+    res = ce.run(reqs, temperature=temperature, key=key)
+    assert set(res) == {r.rid for r in reqs}
+    for r in reqs:
+        ref = _engine_reference(ce, r, temperature=temperature, key=key)
+        got = res[r.rid]
+        assert got.finish_reason == "length"
+        np.testing.assert_array_equal(got.tokens,
+                                      np.asarray(ref.tokens)[0])
+        np.testing.assert_allclose(got.logprobs,
+                                   np.asarray(ref.logprobs)[0],
+                                   rtol=1e-5, atol=1e-5)
+    # pool hygiene: every block returned
+    assert ce.allocator.live_blocks == 0
+    assert ce.allocator.free_blocks == ce.allocator.capacity
+
+
+def test_continuous_int8_kv_pool_parity(dense_setup):
+    """The int8 paged pool (QTensor pages) is token-identical to the dense
+    int8 KV cache path."""
+    cfg, params = dense_setup
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    ce = ContinuousEngine(params, cfg8, max_batch=2, kv_blocks=32,
+                          block_size=4, max_blocks_per_req=8,
+                          segment_len=4, seq_bucket=8)
+    from repro.core import quant
+    assert isinstance(ce.pages["k"], quant.QTensor)
+    reqs = _requests(cfg8, n=3, arrivals=(0, 1, 4), max_new=(5, 8, 6))
+    res = ce.run(reqs)
+    for r in reqs:
+        ref = _engine_reference(ce, r)
+        np.testing.assert_array_equal(res[r.rid].tokens,
+                                      np.asarray(ref.tokens)[0])
+
+
+def test_continuous_stop_tokens(dense_setup):
+    """Per-request stop tokens truncate the stream exactly where the
+    isolated engine stops (the stop token itself is emitted)."""
+    cfg, params = dense_setup
+    ce = ContinuousEngine(params, cfg, max_batch=2, kv_blocks=32,
+                          block_size=4, max_blocks_per_req=8,
+                          segment_len=4, seq_bucket=8)
+    probe = _requests(cfg, n=1, arrivals=(0,), max_new=(8,))[0]
+    base = ce.run([probe])[probe.rid].tokens
+    stop = int(base[2])                     # stops after 3 tokens
+    req = dataclasses.replace(probe, stop_tokens=(stop,))
+    res = ce.run([req])[req.rid]
+    ref = _engine_reference(ce, req)
+    toks_ref = np.asarray(ref.tokens)[0]
+    assert bool(np.asarray(ref.done)[0])
+    n_ref = int(np.argmax(toks_ref == stop)) + 1
+    assert res.finish_reason == "stop"
+    assert len(res.tokens) == n_ref
+    np.testing.assert_array_equal(res.tokens, toks_ref[:n_ref])
+
+
+def test_dispatches_per_segment_O1(dense_setup):
+    """Acceptance: host dispatches per segment stay O(1) — one jitted call
+    per decode segment (plus one per admitted request's prefill),
+    independent of segment length and token count."""
+    cfg, params = dense_setup
+    for seg_len in (2, 6):
+        ce = ContinuousEngine(params, cfg, max_batch=2, kv_blocks=32,
+                              block_size=4, max_blocks_per_req=8,
+                              segment_len=seg_len, seq_bucket=8)
+        reqs = _requests(cfg, n=3, arrivals=(0, 0, 2), max_new=(6, 9, 5))
+        ce.run(reqs)
+        assert ce.last_run_prefills == len(reqs)
+        assert ce.last_run_dispatches == \
+            ce.last_run_segments + ce.last_run_prefills
+        # more than one token came out of each segment dispatch on average
+        total = sum(r.max_new for r in reqs)
+        assert ce.last_run_segments <= -(-total // seg_len) + len(reqs)
+
+
+def test_engine_sampling_independent_of_batch_mix(dense_setup):
+    """Satellite: the same request samples identically in two different
+    batch mixes (fold_in(key, request_id) RNG, not positional splits)."""
+    cfg, params = dense_setup
+    eng = Engine(params, cfg, max_len=32, seq_bucket=8)
+    key = jax.random.PRNGKey(3)
+    rng = np.random.default_rng(1)
+    target = rng.integers(0, cfg.vocab, (1, 6))
+    other_a = rng.integers(0, cfg.vocab, (1, 6))
+    other_b = rng.integers(0, cfg.vocab, (2, 6))
+    mix_a = np.concatenate([target, other_a])           # row 0 of 2
+    mix_b = np.concatenate([other_b, target])           # row 2 of 3
+    r_a = eng.generate({"tokens": jnp.asarray(mix_a)}, max_new_tokens=6,
+                       temperature=0.9, key=key, request_ids=[42, 7])
+    r_b = eng.generate({"tokens": jnp.asarray(mix_b)}, max_new_tokens=6,
+                       temperature=0.9, key=key, request_ids=[1, 2, 42])
+    np.testing.assert_array_equal(np.asarray(r_a.tokens)[0],
+                                  np.asarray(r_b.tokens)[2])
+
+
+def test_backpressure_small_pool_all_complete(dense_setup):
+    """A pool far smaller than the workload forces queuing (admission
+    backpressure), but every request still completes with parity and no
+    blocks leak."""
+    cfg, params = dense_setup
+    ce = ContinuousEngine(params, cfg, max_batch=2, kv_blocks=9,
+                          block_size=4, max_blocks_per_req=8,
+                          segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg, n=5, arrivals=(0, 0, 0, 1, 2),
+                     max_new=(6, 5, 7, 4, 6))
+    res = ce.run(reqs)
+    assert set(res) == {r.rid for r in reqs}
+    # with capacity 8 blocks and ~4 per request, someone had to wait
+    assert any(res[r.rid].admitted_step > r.arrival_step for r in reqs)
+    for r in reqs:
+        ref = _engine_reference(ce, r)
+        np.testing.assert_array_equal(res[r.rid].tokens,
+                                      np.asarray(ref.tokens)[0])
+    assert ce.allocator.live_blocks == 0
+
+
+def test_run_stream_event_order_and_latency_fields(dense_setup):
+    cfg, params = dense_setup
+    ce = ContinuousEngine(params, cfg, max_batch=2, kv_blocks=32,
+                          block_size=4, max_blocks_per_req=8,
+                          segment_len=4, seq_bucket=8)
+    req = _requests(cfg, n=1, arrivals=(2,), max_new=(5,))[0]
+    kinds = []
+    for ev in ce.run_stream([req]):
+        kinds.append(ev["event"])
+        if ev["event"] == "finish":
+            r = ev["result"]
+    assert kinds[0] == "admit" and kinds[-1] == "finish"
+    assert r.arrival_step == 2 and r.admitted_step >= 2
+    assert r.first_token_step > r.admitted_step
+    assert r.finished_step >= r.first_token_step
+    assert r.latency_steps == r.finished_step - 2
+
+
+def test_abandoned_stream_releases_pool(dense_setup):
+    """Cancelling a run_stream mid-flight must return every in-flight
+    request's blocks to the shared allocator; the next run works."""
+    cfg, params = dense_setup
+    ce = ContinuousEngine(params, cfg, max_batch=2, kv_blocks=16,
+                          block_size=4, max_blocks_per_req=8,
+                          segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg, n=3, arrivals=(0, 0, 1), max_new=(6, 6, 6))
+    for ev in ce.run_stream(reqs):
+        if ev["event"] == "tokens":
+            break                           # client cancels the stream
+    assert ce.allocator.live_blocks == 0
+    assert ce.allocator.free_blocks == ce.allocator.capacity
+    res = ce.run(reqs)                      # pool is reusable afterwards
+    assert set(res) == {r.rid for r in reqs}
+
+
+def test_stop_on_last_allowed_step_reports_stop(dense_setup):
+    """A stop token emitted exactly on the max_new-th step is
+    finish_reason='stop' (parity with Engine.generate's done flag)."""
+    cfg, params = dense_setup
+    ce = ContinuousEngine(params, cfg, max_batch=2, kv_blocks=32,
+                          block_size=4, max_blocks_per_req=8,
+                          segment_len=4, seq_bucket=8)
+    probe = _requests(cfg, n=1, arrivals=(0,), max_new=(6,))[0]
+    last = int(ce.run([probe])[probe.rid].tokens[-1])
+    req = dataclasses.replace(probe, stop_tokens=(last,))
+    res = ce.run([req])[req.rid]
+    ref = _engine_reference(ce, req)
+    if len(res.tokens) == req.max_new:      # the tie case this test targets
+        assert bool(np.asarray(ref.done)[0])
+        assert res.finish_reason == "stop"
+
+
+def test_engine_generate_accepts_prebucketed_length(dense_setup):
+    """generate() on a pre-bucketed batch (padded tokens + scalar 'length',
+    the format bucket() emits) matches the unpadded call."""
+    cfg, params = dense_setup
+    eng = Engine(params, cfg, max_len=32, seq_bucket=8)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 5), 0, cfg.vocab)
+    padded = {"tokens": jnp.pad(toks, ((0, 0), (0, 3))),
+              "length": jnp.asarray(5, jnp.int32)}
+    r_pad = eng.generate(padded, max_new_tokens=4)
+    r_raw = eng.generate({"tokens": toks}, max_new_tokens=4)
+    np.testing.assert_array_equal(np.asarray(r_pad.tokens),
+                                  np.asarray(r_raw.tokens))
+    with pytest.raises(ValueError):
+        eng.generate({"length": jnp.asarray(5, jnp.int32)},
+                     max_new_tokens=2)
+
+
+def test_continuous_with_defrag_parity(dense_setup):
+    """defrag_interval=1 compacts the pool between every scheduler round
+    (pages permuted, row tables AND scheduler block lists remapped) —
+    token streams stay identical and nothing leaks."""
+    cfg, params = dense_setup
+    kwargs = dict(max_batch=2, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg, n=4, arrivals=(0, 0, 2, 4), max_new=(6, 4, 7, 5))
+    ce0 = ContinuousEngine(params, cfg, **kwargs)
+    ce1 = ContinuousEngine(params, cfg, defrag_interval=1, **kwargs)
+    res0, res1 = ce0.run(reqs), ce1.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(res0[r.rid].tokens,
+                                      res1[r.rid].tokens)
+    assert ce1.allocator.live_blocks == 0
+    assert not ce1.allocator.fragmented
+
+
+def test_continuous_rejects_bad_requests(dense_setup):
+    cfg, params = dense_setup
+    ce = ContinuousEngine(params, cfg, max_batch=2, kv_blocks=16,
+                          block_size=4, max_blocks_per_req=4,
+                          segment_len=4, seq_bucket=8)
+    big = Request(rid=0, prompt=np.zeros(12, np.int32), max_new=8)
+    with pytest.raises(ValueError):
+        ce.run([big])                       # 12 + 8 > 4 * 4
+    dup = _requests(cfg, n=2, arrivals=(0, 0), max_new=(4, 4))
+    dup[1] = dataclasses.replace(dup[1], rid=dup[0].rid)
+    with pytest.raises(ValueError):
+        ce.run(dup)                         # duplicate rids seed the RNG
+    ssm = cfg_lib.reduced_config("mamba2-1.3b")
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, ssm)       # dense-attention only
+    mrope = cfg_lib.reduced_config("qwen2-vl-72b")
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, mrope)     # no 3-axis M-RoPE positions
