@@ -2,7 +2,7 @@
 # ruff runs only when installed (the CI image always installs it).
 PY ?= python
 
-.PHONY: ci test lint bench-smoke serve-sim
+.PHONY: ci test lint bench-smoke bench-paged serve-sim
 
 ci: lint test
 
@@ -10,12 +10,23 @@ test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # Smoke-size serving benchmarks (interpret-mode kernels on CPU); emit the
-# machine-readable BENCH_PR2.json / BENCH_PR3.json that CI uploads as
-# artifacts.  BENCH_PR3 additionally asserts continuous batching sustains
-# >= static-batch decode throughput on a heavy-tailed Poisson workload.
+# machine-readable BENCH_PR2.json / BENCH_PR3.json / BENCH_PR4.json that CI
+# uploads as artifacts.  BENCH_PR3 additionally asserts continuous batching
+# sustains >= static-batch decode throughput on a heavy-tailed Poisson
+# workload; BENCH_PR4 asserts the fused paged-attention path beats the
+# gather-dense path at >= 50% pool occupancy.
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/serve_decode.py --smoke --out BENCH_PR2.json
 	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
+	PYTHONPATH=src $(PY) benchmarks/paged_attention.py --smoke --check --out BENCH_PR4.json
+
+# Paged-attention gate: measures fresh (never trusts a checked-in JSON)
+# and asserts the fused path's decode tok/s >= the gather-dense path at
+# >= 50% pool occupancy (interpret mode on CPU) plus pool-size-independent
+# fused bytes/throughput.  CI re-asserts the artifact bench-smoke just
+# produced via --check-file instead of re-running the scan.
+bench-paged:
+	PYTHONPATH=src $(PY) benchmarks/paged_attention.py --smoke --check --no-serve --out /tmp/BENCH_PR4_gate.json
 
 # 50-request continuous-batching traffic sim (scheduler + paged KV pool
 # smoke: completion, O(1) dispatch/segment, and no-leak invariants).

@@ -88,6 +88,7 @@ def run_continuous(ce: ContinuousEngine, reqs, *, iters: int):
     if not ts:
         ts = [(float("nan"), float("nan"))]
     occ = [o for _, o in ce.occupancy_trace]
+    frag = [f for _, f in ce.fragmentation_trace]
     metrics = {
         "segments": ce.last_run_segments,
         "prefills": ce.last_run_prefills,
@@ -95,8 +96,11 @@ def run_continuous(ce: ContinuousEngine, reqs, *, iters: int):
         "dispatches_per_segment":
             (ce.last_run_dispatches - ce.last_run_prefills)
             / max(ce.last_run_segments, 1),
+        "defrags": ce.last_run_defrags,
         "kv_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
         "kv_occupancy_max": float(np.max(occ)) if occ else 0.0,
+        "fragmentation_mean": float(np.mean(frag)) if frag else 0.0,
+        "fragmentation_max": float(np.max(frag)) if frag else 0.0,
     }
     return ts[0], res, metrics
 
@@ -168,6 +172,9 @@ def main() -> None:
     ap.add_argument("--tail-frac", type=float, default=0.25,
                     help="fraction of requests drawing a long output budget")
     ap.add_argument("--plan", default="w8a8")
+    ap.add_argument("--paged-attn", action="store_true",
+                    help="serve decode through the fused paged-attention "
+                    "kernel (kernels/paged_attention)")
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
@@ -193,7 +200,8 @@ def main() -> None:
         frozen, cfg, plan=plan, max_batch=args.max_batch,
         kv_blocks=args.kv_blocks, block_size=args.block_size,
         max_blocks_per_req=max_blocks_per_req,
-        segment_len=args.segment_len, seq_bucket=args.seq_bucket)
+        segment_len=args.segment_len, seq_bucket=args.seq_bucket,
+        paged_attn=args.paged_attn)
     reqs = make_workload(
         args.requests, vocab=cfg.vocab,
         mean_interarrival=args.mean_interarrival, prompt_lo=p_lo,
@@ -239,6 +247,7 @@ def main() -> None:
         "plan": plan.to_json(),
         "backend": jax.default_backend(),
         "interpret_kernels": jax.default_backend() != "tpu",
+        "paged_attn": args.paged_attn,
         "requests": len(reqs),
         "max_batch": args.max_batch,
         "kv_blocks": args.kv_blocks,

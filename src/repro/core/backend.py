@@ -544,10 +544,18 @@ class DeploymentPlan:
     chains whose producer can requantize in its epilogue (conv->relu->conv
     in VGG-8) thread a :class:`~repro.core.quant.QTensor` straight into the
     next layer's kernel — the activation never round-trips through f32 HBM.
+
+    ``paged_attn=True`` routes the paged-KV decode branch of
+    ``models.attention`` through the fused flash-decoding kernel
+    (kernels/paged_attention: in-kernel int8 dequant, split-KV, no dense
+    gathered cache) instead of the gather-then-attend reference.  Like the
+    kernel backends it is compiled on TPU and falls back to an equivalent
+    interpretable path on CPU, so plans carrying it stay portable.
     """
     rules: tuple[tuple[str, LayerRule], ...] = ()
     default: str = "w8a8"
     residency: bool = False
+    paged_attn: bool = False
 
     def __post_init__(self):
         norm = tuple(
@@ -587,6 +595,8 @@ class DeploymentPlan:
         }
         if self.residency:
             obj["residency"] = True
+        if self.paged_attn:
+            obj["paged_attn"] = True
         return json.dumps(obj)
 
     @classmethod
@@ -595,7 +605,8 @@ class DeploymentPlan:
         rules = tuple(
             (pat, LayerRule(**rd)) for pat, rd in obj.get("rules", ()))
         return cls(rules=rules, default=obj.get("default", "w8a8"),
-                   residency=obj.get("residency", False)).validate()
+                   residency=obj.get("residency", False),
+                   paged_attn=obj.get("paged_attn", False)).validate()
 
 
 jax.tree_util.register_static(DeploymentPlan)
@@ -630,6 +641,11 @@ def load_plan(spec: str) -> DeploymentPlan:
 def residency_enabled(mode: ModeLike) -> bool:
     """Does this mode/plan ask for network-wide int8 residency?"""
     return isinstance(mode, DeploymentPlan) and mode.residency
+
+
+def paged_attn_enabled(mode: ModeLike) -> bool:
+    """Does this mode/plan route paged decode through the fused kernel?"""
+    return isinstance(mode, DeploymentPlan) and mode.paged_attn
 
 
 def shared_quant(params_seq, x):

@@ -36,6 +36,17 @@ CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 _TABLE: dict[tuple[int, int, int, str], tuple[int, int, int]] = {}
 _MEASURED: set[tuple[int, int, int, str]] = set()
 
+# Paged-attention decode shapes: (batch_bucket, kvh, width, block_size,
+# head_dim, groups, dtype) -> kv_splits.  The tuned axes are the split
+# count and, implicitly, pages-per-program = ceil(width / kv_splits): each
+# kernel program walks one split's slice of the block table sequentially,
+# so more splits trade sequential page walking for cross-core parallelism
+# (and a slightly larger logsumexp merge).  The key is shape-complete
+# (head_dim and GQA group count included, like the matmul table's (m, k,
+# n)) so dumped fleet tables never collide across models.
+_PAGED_TABLE: dict[tuple[int, int, int, int, int, int, str], int] = {}
+_PAGED_MEASURED: set[tuple[int, int, int, int, int, int, str]] = set()
+
 
 def next_pow2(x: int) -> int:
     return 1 << max(0, int(x) - 1).bit_length()
@@ -99,6 +110,24 @@ def record(m: int, k: int, n: int, dtype,
         _MEASURED.add(key)
 
 
+def time_median_us(fn, iters: int = 3) -> float:
+    """Compile (one warmup call), then median wall time of `iters` runs of
+    the zero-arg thunk, in microseconds.  The one timing methodology every
+    measure path and benchmark shares."""
+    import time
+
+    import jax
+
+    jax.block_until_ready(fn())  # compile / warm caches
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
 def candidate_blocks(m: int, k: int, n: int,
                      dtype=jnp.int8) -> list[tuple[int, int, int]]:
     """Small MXU-aligned candidate grid around the heuristic choice."""
@@ -126,8 +155,6 @@ def measure(m: int, k: int, n: int, dtype=jnp.int8, *,
     TPU the same call tunes the compiled kernel.  Returns
     ``(best_blocks, {blocks: median_us})``.
     """
-    import time
-
     import jax
 
     from repro.kernels.cim_matmul import ops as kops  # lazy: avoid cycle
@@ -148,16 +175,107 @@ def measure(m: int, k: int, n: int, dtype=jnp.int8, *,
         def run(bm=bm, bn=bn, bk=bk):
             return kops.cim_matmul(a, w, a_s, w_s, bm=bm, bn=bn, bk=bk,
                                    interpret=interpret)
-        jax.block_until_ready(run())  # compile
-        ts = []
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            jax.block_until_ready(run())
-            ts.append(time.perf_counter() - t0)
-        ts.sort()
-        timings[(bm, bn, bk)] = ts[len(ts) // 2] * 1e6
+        timings[(bm, bn, bk)] = time_median_us(run, iters)
     best = min(timings, key=timings.get)
     record(m, k, n, dtype, best)
+    return best, timings
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention decode: kv_splits / pages-per-program
+# ---------------------------------------------------------------------------
+
+def _paged_key(batch: int, kvh: int, width: int, block_size: int,
+               head_dim: int, groups: int,
+               dtype) -> tuple[int, int, int, int, int, int, str]:
+    return (m_bucket(batch), int(kvh), int(width), int(block_size),
+            int(head_dim), int(groups), jnp.dtype(dtype).name)
+
+
+def heuristic_paged_splits(batch: int, kvh: int, width: int,
+                           block_size: int, dtype=jnp.int8) -> int:
+    """Split count from the decode shape alone.
+
+    (batch x kv_heads) programs already run in parallel; splits only add
+    value when that grid underfills the cores, so target ~8 concurrent
+    programs and never split below one page per program."""
+    del block_size, dtype
+    par = max(1, batch * kvh)
+    want = max(1, -(-8 // par))
+    return min(width, next_pow2(want))
+
+
+def choose_paged_splits(batch: int, kvh: int, width: int, block_size: int,
+                        dtype=jnp.int8, *, head_dim: int = 0,
+                        groups: int = 1) -> int:
+    """kv_splits for one paged decode shape: measured when available,
+    else the deterministic heuristic (memoized, like choose_blocks)."""
+    key = _paged_key(batch, kvh, width, block_size, head_dim, groups,
+                     dtype)
+    if key not in _PAGED_TABLE:
+        _PAGED_TABLE[key] = heuristic_paged_splits(batch, kvh, width,
+                                                   block_size, dtype)
+    return _PAGED_TABLE[key]
+
+
+def record_paged(batch: int, kvh: int, width: int, block_size: int, dtype,
+                 kv_splits: int, *, head_dim: int = 0, groups: int = 1,
+                 measured: bool = True) -> None:
+    key = _paged_key(batch, kvh, width, block_size, head_dim, groups,
+                     dtype)
+    _PAGED_TABLE[key] = int(kv_splits)
+    if measured:
+        _PAGED_MEASURED.add(key)
+
+
+def paged_split_candidates(width: int) -> list[int]:
+    """Pow2 split counts from 1 (whole table per program) up to one page
+    per program."""
+    cands, s = [], 1
+    while s <= width:
+        cands.append(s)
+        s *= 2
+    return cands
+
+
+def measure_paged(batch: int, kvh: int, width: int, block_size: int,
+                  dtype=jnp.int8, *, head_dim: int = 64, groups: int = 2,
+                  candidates: Iterable[int] | None = None, iters: int = 3,
+                  backend: str | None = None) -> tuple[int, dict]:
+    """Time `paged_attention` over candidate split counts on a synthetic
+    pool; record + return the best.  On CPU this times the vectorized
+    emulation (structural); on TPU the compiled kernel.  Returns
+    ``(best_kv_splits, {kv_splits: median_us})``."""
+    import jax
+
+    from repro.kernels.paged_attention import ops as pops  # lazy: no cycle
+
+    key = jax.random.PRNGKey(0)
+    nb = width + 1
+    shape = (nb, block_size, kvh, head_dim)
+    if jnp.dtype(dtype) == jnp.int8:
+        from repro.core import quant
+        codes = jax.random.randint(key, shape, -127, 128, jnp.int32).astype(
+            jnp.int8)
+        scale = jnp.full((*shape[:-1], 1), 0.05, jnp.bfloat16)
+        pages = quant.QTensor(codes, scale)
+    else:
+        pages = jax.random.normal(key, shape, jnp.dtype(dtype))
+    q = jax.random.normal(key, (batch, 1, kvh * groups, head_dim),
+                          jnp.float32)
+    tables = jnp.tile(jnp.arange(1, width + 1, dtype=jnp.int32)[None],
+                      (batch, 1))
+    n_valid = jnp.full((batch,), width * block_size, jnp.int32)
+
+    timings: dict[int, float] = {}
+    for s in (candidates or paged_split_candidates(width)):
+        def run(s=s):
+            return pops.paged_attention(q, pages, pages, tables, n_valid,
+                                        kv_splits=s, backend=backend)
+        timings[s] = time_median_us(run, iters)
+    best = min(timings, key=timings.get)
+    record_paged(batch, kvh, width, block_size, dtype, best,
+                 head_dim=head_dim, groups=groups)
     return best, timings
 
 
@@ -173,7 +291,16 @@ def dump(path: str | None = None) -> str:
          "blocks": list(_TABLE[key])}
         for key in sorted(_MEASURED)
     ]
-    text = json.dumps({"version": 1, "entries": entries}, indent=2)
+    paged = [
+        {"batch_bucket": key[0], "kvh": key[1], "width": key[2],
+         "block_size": key[3], "head_dim": key[4], "groups": key[5],
+         "dtype": key[6], "kv_splits": _PAGED_TABLE[key]}
+        for key in sorted(_PAGED_MEASURED)
+    ]
+    obj: dict = {"version": 1, "entries": entries}
+    if paged:
+        obj["paged_entries"] = paged
+    text = json.dumps(obj, indent=2)
     path = path or os.environ.get(CACHE_ENV)
     if path:
         with open(path, "w") as f:
@@ -191,10 +318,17 @@ def load(path_or_text: str) -> int:
     for e in obj.get("entries", ()):
         record(e["m_bucket"], e["k"], e["n"], e["dtype"],
                tuple(e["blocks"]))
-    return len(obj.get("entries", ()))
+    for e in obj.get("paged_entries", ()):
+        record_paged(e["batch_bucket"], e["kvh"], e["width"],
+                     e["block_size"], e["dtype"], e["kv_splits"],
+                     head_dim=e.get("head_dim", 0),
+                     groups=e.get("groups", 1))
+    return len(obj.get("entries", ())) + len(obj.get("paged_entries", ()))
 
 
 def clear() -> None:
     """Drop every cached decision (tests)."""
     _TABLE.clear()
     _MEASURED.clear()
+    _PAGED_TABLE.clear()
+    _PAGED_MEASURED.clear()

@@ -1,0 +1,217 @@
+"""Fused paged-attention flash-decoding Pallas TPU kernel.
+
+Serving-cache form of the paper's single-conversion principle: the decode
+attention for one token reads the int8 KV pages *as stored* (half the HBM
+bytes of bf16), applies the per-token-head scales in-registers, and carries
+the softmax in online (running max / sum) form so the only "conversion" —
+the normalization acc / l — happens exactly once per head, after the whole
+context has been accumulated.  No dense [B, S, KVH, D] gathered cache is
+ever materialized and no dequantized fp copy of the pool ever touches HBM;
+compare ``attention.attend_decode_paged``'s gather-then-attend reference,
+which pays both per decode step per layer.
+
+Layout (flash decoding, split-KV):
+
+* grid ``(B, KVH, kv_splits, pages_per_split)`` — the innermost dimension
+  walks one split's slice of the request's block table sequentially
+  ("arbitrary"); batch / kv-head / split are parallel.
+* The block tables and per-request lengths ride in as **scalar prefetch**
+  (``PrefetchScalarGridSpec``): the page index map reads
+  ``block_tables[b, split*P + p]`` before the body runs, so the pipeline
+  DMAs exactly the referenced page — pages are fetched through the table
+  indirection, never through a gathered copy.
+* Pages past the request's live length are **clamped to the last live
+  page** in the index map.  Consecutive grid steps with an identical block
+  index skip the re-fetch, so HBM traffic per request scales with its live
+  tokens, not with the pool size or the table width; the clamped steps'
+  compute is skipped with ``pl.when``.
+* Each program keeps ``(m, l, acc)`` carry in VMEM scratch and emits its
+  split's partial ``(acc, m, l)``; the cross-split combine is a tiny
+  logsumexp merge done by the wrapper (:func:`..ops.merge_splits`).
+
+The int8 variant streams ``[BS, D]`` int8 codes plus the ``[BS]``
+per-token-head scale lane and dequantizes in-registers (KIVI-style grid,
+identical to ``attention.dequantize_kv``).  Unlike the gather reference's
+fully-integer path it keeps q and the probabilities in f32 — the int8 win
+here is HBM bytes, not MXU width — so parity with the int8 reference is
+close-not-bitwise (the reference additionally quantizes q and p; see
+tests/test_paged_attention.py).
+
+TPU notes: block shapes follow the model's (G, D) head geometry; on real
+hardware D is the 128-lane dim (head_dim 64/128) while G stays small —
+fine for VPU-bound decode.  CPU CI runs the kernel in interpret mode for
+parity only (per-grid-step interpreter overhead makes it slow); the fast
+CPU path is :func:`..ops.flash_decode_jnp`, the same math vectorized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    bt_ref,       # [B, W] int32  (scalar prefetch)
+    nv_ref,       # [B]    int32  (scalar prefetch)
+    q_ref,        # [1, 1, G, D]
+    k_ref,        # [1, BS, 1, D] (int8 or fp page slice for this kv head)
+    *rest,        # (k_scale, v, v_scale | v), out, m, l, scratches
+    bs: int,
+    pages_per_split: int,
+    width: int,
+    d: int,
+    int8: bool,
+):
+    if int8:
+        ks_ref, v_ref, vs_ref = rest[0], rest[1], rest[2]
+        rest = rest[3:]
+    else:
+        v_ref = rest[0]
+        rest = rest[1:]
+    out_ref, m_ref, l_ref, acc_scr, m_scr, l_scr = rest
+
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    p = pl.program_id(3)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    page = s * pages_per_split + p
+    nv = nv_ref[b]
+    live = (page * bs < nv) & (page < width)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [BS, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if int8:
+            # In-register dequant: the page never exists in fp outside VMEM.
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+        srs = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) / np.sqrt(d)   # [G, BS]
+        pos = page * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = pos < nv                                        # [1, BS]
+        srs = jnp.where(valid, srs, NEG_INF)
+        m_prev = m_scr[...]                                     # [G, 1]
+        m_new = jnp.maximum(m_prev, srs.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # Explicit zeroing of masked probabilities: for a live page m_new is
+        # a real score, so exp(NEG_INF - m_new) underflows to 0 anyway —
+        # this just keeps fully-masked tails exact.
+        prob = jnp.where(valid, jnp.exp(srs - m_new), 0.0)
+        l_scr[...] = l_scr[...] * alpha + prob.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            prob, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(p == pages_per_split - 1)
+    def _flush():
+        out_ref[0, 0, 0] = acc_scr[...]
+        m_ref[0, 0, 0] = m_scr[...]
+        l_ref[0, 0, 0] = l_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kv_splits", "interpret"))
+def paged_attention_kernel(
+    q: jax.Array,             # [B, KVH, G, D] (any float dtype)
+    k_pages: jax.Array,       # [NB, BS, KVH, D] fp or int8
+    v_pages: jax.Array,       # [NB, BS, KVH, D]
+    k_scale: jax.Array | None,  # [NB, BS, KVH] (int8 pools), else None
+    v_scale: jax.Array | None,
+    block_tables: jax.Array,  # [B, W] int32
+    n_valid: jax.Array,       # [B] int32
+    *,
+    kv_splits: int = 1,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-KV partials ``(acc, m, l)`` with shapes
+    ``([B,KVH,S,G,D], [B,KVH,S,G,1], [B,KVH,S,G,1])``; combine with
+    :func:`..ops.merge_splits`."""
+    b, kvh, g, d = q.shape
+    _, bs, _, _ = k_pages.shape
+    width = block_tables.shape[1]
+    int8 = k_pages.dtype == jnp.int8
+    assert (k_scale is not None) == int8, "int8 pages need scales"
+    ns = max(1, min(kv_splits, width))
+    pps = -(-width // ns)
+
+    def page_map(bi, hi, si, pi, bt, nv):
+        gidx = si * pps + pi
+        # Clamp to the request's last live page: repeated block indices on
+        # consecutive steps elide the DMA, so dead table tail entries cost
+        # no HBM traffic (their compute is pl.when-skipped too).
+        live_last = jnp.maximum(jax.lax.div(nv[bi] - 1, bs), 0)
+        gidx = jnp.minimum(jnp.minimum(gidx, live_last), width - 1)
+        return (bt[bi, gidx], 0, hi, 0)
+
+    def scale_map(bi, hi, si, pi, bt, nv):
+        return page_map(bi, hi, si, pi, bt, nv)[:3]
+
+    def out_map(bi, hi, si, pi, bt, nv):
+        return (bi, hi, si, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bi, hi, si, pi, bt, nv:
+                     (bi, hi, 0, 0)),
+        pl.BlockSpec((1, bs, 1, d), page_map),
+    ]
+    args = [block_tables, n_valid, q, k_pages]
+    if int8:
+        in_specs.append(pl.BlockSpec((1, bs, 1), scale_map))
+        args.append(k_scale)
+    in_specs.append(pl.BlockSpec((1, bs, 1, d), page_map))
+    args.append(v_pages)
+    if int8:
+        in_specs.append(pl.BlockSpec((1, bs, 1), scale_map))
+        args.append(v_scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, ns, pps),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d), out_map),
+            pl.BlockSpec((1, 1, 1, g, 1), out_map),
+            pl.BlockSpec((1, 1, 1, g, 1), out_map),
+        ],
+        scratch_shapes=[
+            compat.VMEM((g, d), jnp.float32),
+            compat.VMEM((g, 1), jnp.float32),
+            compat.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, bs=bs, pages_per_split=pps,
+                             width=width, d=d, int8=int8)
+    acc, m, l = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, ns, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, ns, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, ns, g, 1), jnp.float32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+        name="paged_attention_decode",
+    )(*args)
+    return acc, m, l

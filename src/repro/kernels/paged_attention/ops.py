@@ -1,0 +1,158 @@
+"""Public wrapper for the fused paged-attention decode kernel.
+
+``paged_attention`` is what the model layer calls (the paged branch of
+``attention()`` behind ``DeploymentPlan.paged_attn``).  It accepts the
+pool's native page pytrees — fp arrays or int8
+:class:`~repro.core.quant.QTensor` pages — GQA-reshapes the query, resolves
+the split count from :mod:`repro.kernels.autotune`, and dispatches one of
+three backends:
+
+* ``"pallas"``    — the compiled TPU kernel (scalar-prefetch page walk).
+* ``"interpret"`` — the same kernel through the Pallas interpreter.  This
+  is the CPU *correctness* path (CI parity tests); the interpreter costs
+  ~1 ms per grid step, so it is not the CPU serving path.
+* ``"emulate"``   — the identical split-KV flash-decoding math as
+  vectorized jnp (:func:`flash_decode_jnp`): per-split two-pass softmax
+  over the table-referenced pages, merged with the same
+  :func:`merge_splits`.  This is the fast interpret-mode fallback the
+  serve loop uses on CPU; it agrees with the kernel to fp rounding
+  (~1e-7, tested) and with the gather reference likewise.
+
+``backend=None`` resolves to ``"pallas"`` on TPU and ``"emulate"``
+elsewhere, mirroring ``cim_matmul``'s compiled-or-interpret selection.
+
+Traffic contract: with a width-``W`` block table the kernel touches only
+live pages (index-map clamping) and the emulate path gathers only the
+``W`` table columns it is handed — the serve loop truncates tables to a
+power-of-two bucket of the live maximum each segment, so decode attention
+bytes scale with live tokens, never with ``kv_blocks``
+(benchmarks/paged_attention.py measures exactly this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.kernels import autotune
+from repro.kernels.paged_attention.kernel import NEG_INF, paged_attention_kernel
+
+
+def merge_splits(acc, m, l):
+    """Logsumexp-combine split-KV partials over the split axis (axis 2).
+
+    acc [B,KVH,S,G,D], m/l [B,KVH,S,G,1] -> [B,KVH,G,D].  Dead splits
+    carry (acc=0, m=NEG_INF, l=0) and contribute nothing; a request with
+    no live positions at all returns zeros (finite — the gather reference
+    returns a mean-of-garbage value there; serve discards both)."""
+    m_g = m.max(axis=2, keepdims=True)
+    alpha = jnp.exp(m - m_g)
+    l_g = (l * alpha).sum(axis=2)                       # [B,KVH,G,1]
+    acc_g = (acc * alpha).sum(axis=2)                   # [B,KVH,G,D]
+    return acc_g / jnp.maximum(l_g, 1e-30)
+
+
+def _split_pages(pages):
+    """QTensor pages -> (codes, [NB,BS,KVH] scales); fp pages -> (pages,
+    None)."""
+    if isinstance(pages, quant.QTensor):
+        return pages.q, pages.scale[..., 0]
+    return pages, None
+
+
+def flash_decode_jnp(q, k_pages, k_scale, v_pages, v_scale, block_tables,
+                     n_valid, *, kv_splits: int = 1) -> jax.Array:
+    """The kernel's math as vectorized jnp (the fast CPU path).
+
+    q [B,KVH,G,D]; pages [NB,BS,KVH,D] (+ [NB,BS,KVH] scales for int8);
+    block_tables [B,W]; n_valid [B].  Gathers the W referenced pages,
+    computes per-split two-pass softmax partials, and merges them with the
+    same :func:`merge_splits` the kernel outputs feed — identical
+    semantics, fp-rounding-level agreement with the kernel (tested).
+    """
+    b, kvh, g, d = q.shape
+    bs = k_pages.shape[1]
+    w = block_tables.shape[1]
+    ns = max(1, min(kv_splits, w))
+    pps = -(-w // ns)
+    pad = ns * pps - w
+
+    def gather(pages, scale):
+        gp = pages[block_tables]                        # [B, W, BS, KVH, D]
+        gp = gp.astype(jnp.float32)
+        if scale is not None:
+            gp = gp * scale[block_tables].astype(jnp.float32)[..., None]
+        if pad:
+            gp = jnp.pad(gp, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        # [B, ns, pps*BS, KVH, D]
+        return gp.reshape(b, ns, pps * bs, kvh, d)
+
+    kg = gather(k_pages, k_scale)
+    vg = gather(v_pages, v_scale)
+    srs = jnp.einsum("bkgd,bsnkd->bksgn", q.astype(jnp.float32), kg) \
+        / np.sqrt(d)                                    # [B,KVH,ns,G,pps*BS]
+    # positions are global: split s covers [s*pps*bs, (s+1)*pps*bs).  The
+    # w*bs bound clamps n_valid to the table like the kernel's page <
+    # width check — split padding and out-of-table positions never attend.
+    pos = (jnp.arange(ns)[:, None] * pps * bs
+           + jnp.arange(pps * bs)[None, :])             # [ns, pps*BS]
+    valid = (pos[None] < n_valid[:, None, None]) \
+        & (pos[None] < w * bs)                          # [B, ns, pps*BS]
+    srs = jnp.where(valid[:, None, :, None, :], srs, NEG_INF)
+    m = srs.max(-1, keepdims=True)                      # [B,KVH,ns,G,1]
+    prob = jnp.where(valid[:, None, :, None, :],
+                     jnp.exp(srs - m), 0.0)
+    l = prob.sum(-1, keepdims=True)
+    acc = jnp.einsum("bksgn,bsnkd->bksgd", prob, vg)
+    return merge_splits(acc, m, l)
+
+
+def paged_attention(
+    q: jax.Array,              # [B, 1, H, D]
+    k_pages, v_pages,          # [NB, BS, KVH, D] arrays or QTensors
+    block_tables: jax.Array,   # [B, W] int32
+    n_valid: jax.Array,        # [B] int32
+    *,
+    kv_splits: int | None = None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Fused paged decode attention; drop-in for
+    :func:`repro.models.attention.attend_decode_paged` (same signature up
+    to the keywords, same [B, 1, H, D] output).
+
+    ``kv_splits`` defaults to the autotuner's choice for this
+    (batch, kv_heads, table width, block size) — resolved here, outside
+    any jit boundary, like ``cim_matmul``'s block resolution.
+
+    ``n_valid`` is clamped to the table capacity ``W * BS`` (positions
+    beyond the handed-in table do not exist); every backend applies the
+    same clamp, so truncated-table callers agree across backends."""
+    b, sq, h, d = q.shape
+    assert sq == 1, "paged flash decoding serves single-token queries"
+    k_q, k_s = _split_pages(k_pages)
+    v_q, v_s = _split_pages(v_pages)
+    bs = k_q.shape[1]
+    kvh = k_q.shape[2]
+    g = h // kvh
+    width = block_tables.shape[1]
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "emulate"
+    if kv_splits is None:
+        kv_splits = autotune.choose_paged_splits(
+            b, kvh, width, bs, k_q.dtype, head_dim=d, groups=g)
+    qr = q.reshape(b, kvh, g, d)
+    if backend == "emulate":
+        out = flash_decode_jnp(qr, k_q, k_s, v_q, v_s, block_tables,
+                               n_valid, kv_splits=kv_splits)
+    elif backend in ("pallas", "interpret"):
+        acc, m, l = paged_attention_kernel(
+            qr, k_q, v_q, k_s, v_s,
+            jnp.asarray(block_tables, jnp.int32),
+            jnp.asarray(n_valid, jnp.int32),
+            kv_splits=kv_splits, interpret=backend == "interpret")
+        out = merge_splits(acc, m, l)
+    else:
+        raise ValueError(f"backend must be 'pallas', 'interpret', or "
+                         f"'emulate', got {backend!r}")
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Oracle for the fused paged-attention kernel.
+
+The kept reference is the serve path's gather-then-attend implementation,
+``attention.attend_decode_paged``: gather the table-referenced pages into a
+dense [B, W*BS] cache view, then run the (fp or fully-integer int8) decode
+attention over it.  The kernel is compared against it in
+tests/test_paged_attention.py:
+
+* fp pools     — fp-rounding-level agreement (the kernel's online softmax
+  reorders the same f32 ops; single-split partials match the two-pass
+  reference to ~1e-6).
+* int8 pools   — the kernel dequantizes KV in-registers and keeps q and
+  the probabilities in f32, so it is *more* accurate than the reference's
+  q-quantize / p-requantize integer pipeline; parity vs the int8 reference
+  is loose (~q/p quantization error), parity vs fp attention over the
+  dequantized pages is tight.  Both bounds are asserted.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, n_valid
+                        ) -> jax.Array:
+    """Gather-then-attend reference (bit-identical to the serve path)."""
+    from repro.models import attention  # lazy: models layers on kernels
+    return attention.attend_decode_paged(q, k_pages, v_pages, block_tables,
+                                         n_valid, impl="reference")
+
+
+def dequant_attention_ref(q, k_pages, v_pages, block_tables, n_valid
+                          ) -> jax.Array:
+    """fp attention over the dequantized pages: the tight oracle for the
+    int8 kernel (which runs the same f32 math on in-register-dequantized
+    pages)."""
+    from repro.core import quant
+    from repro.models import attention
+    if isinstance(k_pages, quant.QTensor):
+        k_pages = k_pages.dequant()
+        v_pages = v_pages.dequant()
+    return attention.attend_decode_paged(q, k_pages, v_pages, block_tables,
+                                         n_valid, impl="reference")

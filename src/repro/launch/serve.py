@@ -43,6 +43,10 @@ def main():
                     help="continuous: tokens per KV block")
     ap.add_argument("--segment-len", type=int, default=8,
                     help="continuous: decode steps per jitted segment")
+    ap.add_argument("--paged-attn", action="store_true",
+                    help="continuous: fused flash-decoding paged-attention "
+                    "kernel (in-kernel int8 KV dequant, split-KV) instead "
+                    "of gather+attend")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
@@ -82,7 +86,7 @@ def main():
         ce = ContinuousEngine(
             params, cfg, plan=plan, max_batch=args.max_batch,
             kv_blocks=args.kv_blocks, block_size=args.block_size,
-            segment_len=args.segment_len)
+            segment_len=args.segment_len, paged_attn=args.paged_attn)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.poisson(2.0, size=args.batch))
         reqs = [
@@ -97,10 +101,12 @@ def main():
         total = sum(len(r.tokens) for r in res.values())
         lat = sorted(r.latency_steps for r in res.values())
         tag = "plan" if args.plan is not None else args.quant
-        print(f"[{tag}|continuous] served {len(reqs)} requests / {total} "
-              f"tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. compile); "
-              f"{ce.last_run_segments} segments, "
-              f"{ce.last_run_dispatches} dispatches, p50 latency "
+        attn = "paged-attn" if args.paged_attn else "gather"
+        print(f"[{tag}|continuous|{attn}] served {len(reqs)} requests / "
+              f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. "
+              f"compile); {ce.last_run_segments} segments, "
+              f"{ce.last_run_dispatches} dispatches, "
+              f"{ce.last_run_defrags} defrags, p50 latency "
               f"{lat[len(lat)//2]} steps, peak pool occupancy "
               f"{max(o for _, o in ce.occupancy_trace):.2f}")
         return

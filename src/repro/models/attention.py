@@ -16,6 +16,14 @@ Three execution regimes, all numerically the same attention:
                          lowers it to small per-head collectives instead of
                          gathering the cache (see distributed/collectives.py
                          for the shard_map variant and the equivalence test).
+* ``attend_decode_paged`` — decode over the continuous-batching paged KV
+                         pool.  ``impl="reference"`` gathers the block-
+                         table-referenced pages into a dense view and
+                         reuses ``attend_decode``/``attend_decode_int8``;
+                         ``impl="fused"`` (``DeploymentPlan(paged_attn=
+                         True)``) runs the flash-decoding Pallas kernel in
+                         kernels/paged_attention — no gathered cache, int8
+                         pages dequantized in-registers, split-KV merge.
 
 Score x value matmuls are activation x activation, so they stay in bf16 —
 the CiM datapath applies to the projections only (DESIGN.md §5).
@@ -252,15 +260,33 @@ def attend_decode_int8(q, k_q, k_s, v_q, v_s, kv_len_mask=None) -> jax.Array:
     return out.astype(q.dtype)
 
 
-def gather_pages(pages, block_tables):
+def gather_pages(pages, block_tables, n_valid=None):
     """pages [NB, BS, ...] (array or int8 QTensor), block_tables [B, NBR]
-    -> each request's cache as a contiguous [B, NBR*BS, ...] view.
+    -> each request's cache as a contiguous [B, W*BS, ...] view.
 
     Pure data movement: position p of request b lives at
     pages[block_tables[b, p // BS], p % BS], so the gathered view holds
     exactly the written tokens in order (padding-table entries point at the
-    null block and are excluded by the caller's length mask)."""
+    null block and are excluded by the caller's length mask).
+
+    With ``n_valid`` ([B] live positions) *concretely* known, only the
+    first ``ceil(max(n_valid) / BS)`` table columns are gathered — the
+    tight upper bound, so the gathered view scales with live tokens
+    instead of the table width.  Under a jit trace n_valid is abstract and
+    the full table is gathered (shapes must be static); the serve loop
+    gets the same effect by truncating the tables it dispatches to a
+    bucketed live width (serve/server.py)."""
     from repro.core import quant
+    if n_valid is not None:
+        bs = (pages.q if isinstance(pages, quant.QTensor)
+              else pages).shape[1]
+        try:
+            nmax = int(np.max(np.asarray(n_valid)))
+        except (TypeError, jax.errors.ConcretizationTypeError):
+            nmax = None                    # traced: full-width gather
+        if nmax is not None:
+            w = min(max(-(-nmax // bs), 1), block_tables.shape[1])
+            block_tables = block_tables[:, :w]
     if isinstance(pages, quant.QTensor):
         g = pages[block_tables]
         b, nbr, bs = g.q.shape[:3]
@@ -272,7 +298,8 @@ def gather_pages(pages, block_tables):
     return g.reshape(b, nbr * bs, *g.shape[3:])
 
 
-def attend_decode_paged(q, k_pages, v_pages, block_tables, n_valid
+def attend_decode_paged(q, k_pages, v_pages, block_tables, n_valid, *,
+                        impl: str = "reference", kv_splits: int | None = None
                         ) -> jax.Array:
     """Decode attention over a paged KV pool.
 
@@ -280,14 +307,28 @@ def attend_decode_paged(q, k_pages, v_pages, block_tables, n_valid
     QTensors (scale [NB, BS, KVH, 1]); block_tables: [B, NBR] int32;
     n_valid: [B] int32 live positions per request.
 
-    Numerically identical to :func:`attend_decode` /
-    :func:`attend_decode_int8` over a dense [B, NBR*BS] cache holding the
-    same tokens: the gather is pure data movement and masked positions are
-    forced to NEG_INF before the softmax in both paths.
+    ``impl="reference"`` (default) gathers the table-referenced pages into
+    a dense cache view and attends over it — numerically identical to
+    :func:`attend_decode` / :func:`attend_decode_int8` over a dense
+    [B, W*BS] cache holding the same tokens: the gather is pure data
+    movement and masked positions are forced to NEG_INF before the softmax
+    in both paths.
+
+    ``impl="fused"`` runs the flash-decoding kernel
+    (:func:`repro.kernels.paged_attention.paged_attention`): no gathered
+    cache, int8 pages dequantized in-registers, split-KV logsumexp merge.
+    Selected by ``DeploymentPlan(paged_attn=True)`` in :func:`attention`.
     """
+    if impl == "fused":
+        from repro.kernels.paged_attention import ops as paged_ops
+        return paged_ops.paged_attention(q, k_pages, v_pages, block_tables,
+                                         n_valid, kv_splits=kv_splits)
+    if impl != "reference":
+        raise ValueError(f"impl must be 'reference' or 'fused', got "
+                         f"{impl!r}")
     from repro.core import quant
-    kg = gather_pages(k_pages, block_tables)
-    vg = gather_pages(v_pages, block_tables)
+    kg = gather_pages(k_pages, block_tables, n_valid)
+    vg = gather_pages(v_pages, block_tables, n_valid)
     s = kg.shape[1]
     mask = jnp.arange(s)[None, :] < n_valid[:, None]
     if isinstance(kg, quant.QTensor):
@@ -444,7 +485,12 @@ def attention(
             v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype))
         wrote = (jnp.ones_like(lens) if wm is None
                  else wm.astype(jnp.int32))
-        out = attend_decode_paged(q, k_pages, v_pages, bt, lens + wrote)
+        # DeploymentPlan(paged_attn=True) routes through the fused
+        # flash-decoding kernel; default stays the gather reference.
+        impl = ("fused" if backend_lib.paged_attn_enabled(mode)
+                else "reference")
+        out = attend_decode_paged(q, k_pages, v_pages, bt, lens + wrote,
+                                  impl=impl)
         y = layers.dense(p["o"], out.reshape(b, s, cfg.n_heads * hd), mode,
                          path="attn/o")
         return y.astype(dt), {"k": k_pages, "v": v_pages}

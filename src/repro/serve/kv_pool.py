@@ -158,6 +158,27 @@ class BlockAllocator:
         would move something)."""
         return bool(self._live) and max(self._live) > len(self._live)
 
+    @property
+    def hole_blocks(self) -> int:
+        """Free slots inside the live span: max(live) - #live (0 when
+        contiguous or empty)."""
+        if not self._live:
+            return 0
+        return max(self._live) - len(self._live)
+
+    def fragmentation(self) -> float:
+        """Hole fraction of the live span: (max(live) - #live) / max(live).
+
+        0.0 when the live blocks are a contiguous prefix (or the pool is
+        empty); approaches 1.0 as live blocks scatter across a mostly-free
+        span.  The continuous engine defrags adaptively when this crosses
+        its threshold (and the absolute hole count is worth a pool
+        permutation), keeping block tables contiguous for the fused
+        kernel's sequential page walks."""
+        if not self._live:
+            return 0.0
+        return self.hole_blocks / max(self._live)
+
     def alloc(self, n: int) -> list[int] | None:
         """n blocks, or None (all-or-nothing) when fewer than n are free."""
         if n < 0:

@@ -31,6 +31,15 @@ Execution shape:
 Finished and idle rows still occupy compute lanes within a segment (static
 shapes); their writes are masked to the pool's null block and their outputs
 discarded on the host.
+
+Decode-attention traffic scales with live tokens, not the pool: each
+segment dispatches only the power-of-two-bucketed live-width prefix of the
+block tables, and ``paged_attn=True`` additionally routes the attention
+read through the fused flash-decoding kernel (kernels/paged_attention —
+no gathered cache, int8 pages dequantized in-registers).  The engine
+defrags adaptively (``defrag_threshold``: live-span hole fraction) so the
+kernel's sequential page walks stay contiguous; ``defrag_interval`` still
+forces a fixed cadence when set.
 """
 from __future__ import annotations
 
@@ -43,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as backend_lib
+from repro.kernels import autotune
 from repro.models import model as model_lib
 from repro.serve import kv_pool
 from repro.serve.engine import Engine
@@ -82,7 +92,10 @@ class ContinuousEngine:
                  max_batch: int = 8, kv_blocks: int = 64,
                  block_size: int = 16, max_blocks_per_req: int | None = None,
                  segment_len: int = 8, seq_bucket: int = 32,
-                 defrag_interval: int | None = None):
+                 defrag_interval: int | None = None,
+                 defrag_threshold: float | None = 0.5,
+                 defrag_min_holes: int = 4,
+                 paged_attn: bool = False):
         if cfg.arch_type != "dense" or cfg.sliding_window is not None:
             raise ValueError(
                 "continuous batching serves dense-attention archs without "
@@ -95,6 +108,11 @@ class ContinuousEngine:
                 "which has no 3-axis (t/h/w) position layout")
         if plan is None and mode is not None:
             plan = backend_lib.as_plan(mode)
+        if paged_attn:
+            # Route paged decode attention through the fused flash-decoding
+            # kernel (kernels/paged_attention) instead of gather+attend.
+            plan = dataclasses.replace(
+                backend_lib.as_plan(plan), paged_attn=True)
         self.cfg = cfg
         self.params = params
         self.plan = plan
@@ -102,6 +120,8 @@ class ContinuousEngine:
         self.block_size = block_size
         self.segment_len = segment_len
         self.defrag_interval = defrag_interval
+        self.defrag_threshold = defrag_threshold
+        self.defrag_min_holes = defrag_min_holes
         self.max_blocks_per_req = (kv_blocks - 1 if max_blocks_per_req is None
                                    else max_blocks_per_req)
         self.max_seq_len = self.max_blocks_per_req * block_size
@@ -118,8 +138,10 @@ class ContinuousEngine:
         self.last_run_segments = 0
         self.last_run_prefills = 0
         self.last_run_dispatches = 0
+        self.last_run_defrags = 0
         self.last_run_prefill_seconds = 0.0
         self.occupancy_trace: list[tuple[int, float]] = []
+        self.fragmentation_trace: list[tuple[int, float]] = []
 
     def _dispatch(self, fn, *args):
         self.dispatch_count += 1
@@ -220,6 +242,7 @@ class ContinuousEngine:
                 self.pages, tables, remap)
             for sr in sched.running.values():
                 sr.blocks = [remap.get(b, b) for b in sr.blocks]
+            self.last_run_defrags += 1
         return tables
 
     def run(self, requests: Sequence[Request], *, key=None,
@@ -274,8 +297,10 @@ class ContinuousEngine:
         self.last_run_segments = 0
         self.last_run_prefills = 0
         self.last_run_dispatches = 0
+        self.last_run_defrags = 0
         self.last_run_prefill_seconds = 0.0
         self.occupancy_trace = []
+        self.fragmentation_trace = []
 
         seg_fn = self._segment_fn(plan, greedy, seg_len, stop_w)
         pad = jnp.asarray(-1, jnp.int32)
@@ -299,7 +324,21 @@ class ContinuousEngine:
         n_loops = 0
         while sched.has_work:
             n_loops += 1
-            if self.defrag_interval and n_loops % self.defrag_interval == 0:
+            # Defrag policy: a fixed interval when configured (tests /
+            # worst-case bounding), else adaptively whenever the live span's
+            # hole fraction crosses the threshold — keeps block tables
+            # contiguous for the fused kernel's sequential page walks
+            # without paying a page permutation on every round.  The
+            # absolute hole-count floor stops a near-empty pool (one live
+            # block at slot 2 -> ratio 0.5) from buying a full-pool page
+            # permutation to relocate a couple of blocks.
+            if self.defrag_interval:
+                if n_loops % self.defrag_interval == 0:
+                    tables = self._maybe_defrag(sched, tables)
+            elif (self.defrag_threshold is not None
+                  and self.allocator.hole_blocks >= self.defrag_min_holes
+                  and self.allocator.fragmentation()
+                  >= self.defrag_threshold):
                 tables = self._maybe_defrag(sched, tables)
             for sr in sched.admit_ready(now):
                 self._admit(sr, plan, greedy, rng, temp)
@@ -317,6 +356,8 @@ class ContinuousEngine:
                 streams[req.rid] = ([], [])
                 yield {"event": "admit", "rid": req.rid, "step": now}
             self.occupancy_trace.append((now, self.allocator.occupancy()))
+            self.fragmentation_trace.append(
+                (now, self.allocator.fragmentation()))
 
             if not sched.running:
                 nxt = sched.next_arrival()
@@ -332,10 +373,22 @@ class ContinuousEngine:
                     n_have = len(sr.blocks)
                     tables[row, n_have - len(new_blocks):n_have] = new_blocks
 
+            # Dispatch only the live-width prefix of the tables: every
+            # row's blocks (incl. this segment's growth) sit in the first
+            # ceil((max lens + segment_len) / block_size) columns, so the
+            # device never sees the pool-sized table tail.  The width is
+            # bucketed to a power of two, bounding recompiles at O(log
+            # max_blocks_per_req) while both the gather reference and the
+            # fused kernel scale with live tokens instead of kv_blocks.
+            w_need = kv_pool.blocks_for(
+                int(lens.max()) + self.segment_len, self.block_size)
+            w = min(tables.shape[1], autotune.next_pow2(max(w_need, 1)))
+            seg_tables = np.ascontiguousarray(tables[:, :w])
+
             pages, tok_d, n_out_d, lens_d, done_d, out_t, out_lp, i_exec = \
-                self._dispatch(seg_fn, self.params, self.pages, tables, tok,
-                               n_out, lens, done, rids, max_new, stops, rng,
-                               temp, pad)
+                self._dispatch(seg_fn, self.params, self.pages, seg_tables,
+                               tok, n_out, lens, done, rids, max_new, stops,
+                               rng, temp, pad)
             self.pages = pages
             self.last_run_segments += 1
             # ONE device->host transfer for the whole harvest (np.array

@@ -257,6 +257,79 @@ def test_continuous_with_defrag_parity(dense_setup):
     assert not ce1.allocator.fragmented
 
 
+def test_continuous_fused_paged_attention_token_identical(dense_setup):
+    """Tentpole acceptance: the fused flash-decoding kernel
+    (paged_attn=True) serves the same request stream token-identically to
+    the gather-dense reference engine — greedy AND seeded sampling."""
+    cfg, params = dense_setup
+    kwargs = dict(max_batch=3, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg)
+    for temperature, key in ((0.0, None), (0.8, jax.random.PRNGKey(7))):
+        ce_ref = ContinuousEngine(params, cfg, **kwargs)
+        ce_fus = ContinuousEngine(params, cfg, paged_attn=True, **kwargs)
+        r0 = ce_ref.run(reqs, temperature=temperature, key=key)
+        r1 = ce_fus.run(reqs, temperature=temperature, key=key)
+        for r in reqs:
+            np.testing.assert_array_equal(r1[r.rid].tokens,
+                                          r0[r.rid].tokens)
+            np.testing.assert_allclose(r1[r.rid].logprobs,
+                                       r0[r.rid].logprobs,
+                                       rtol=1e-4, atol=1e-4)
+        assert ce_fus.allocator.live_blocks == 0
+
+
+def test_continuous_fused_int8_pool(dense_setup):
+    """The fused kernel over the int8 paged pool (in-kernel dequant)
+    serves every request to completion; tokens match the gather reference
+    at this seed (the kernel skips the reference's q/p requantization, so
+    logprobs agree only to int8 quantization error)."""
+    cfg, params = dense_setup
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    kwargs = dict(max_batch=2, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg8, n=3, arrivals=(0, 1, 4), max_new=(5, 8, 6))
+    res_ref = ContinuousEngine(params, cfg8, **kwargs).run(reqs)
+    ce = ContinuousEngine(params, cfg8, paged_attn=True, **kwargs)
+    from repro.core import quant
+    assert isinstance(ce.pages["k"], quant.QTensor)
+    res = ce.run(reqs)
+    assert set(res) == {r.rid for r in reqs}
+    for r in reqs:
+        assert res[r.rid].finish_reason == "length"
+        np.testing.assert_array_equal(res[r.rid].tokens,
+                                      res_ref[r.rid].tokens)
+    assert ce.allocator.live_blocks == 0
+
+
+def test_continuous_adaptive_defrag(dense_setup):
+    """Satellite: with no fixed interval, the engine defrags when the live
+    span's hole fraction crosses defrag_threshold — token streams stay
+    identical, fragmentation is reported in the run stats, and a
+    threshold of None disables the adaptive path."""
+    cfg, params = dense_setup
+    kwargs = dict(max_batch=2, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    # staggered finishes leave holes below live blocks
+    reqs = _requests(cfg, n=5, arrivals=(0, 0, 2, 4, 6),
+                     max_new=(4, 9, 5, 8, 6))
+    ce_off = ContinuousEngine(params, cfg, defrag_threshold=None, **kwargs)
+    ce_on = ContinuousEngine(params, cfg, defrag_threshold=0.01,
+                             defrag_min_holes=1, **kwargs)
+    res_off, res_on = ce_off.run(reqs), ce_on.run(reqs)
+    assert ce_off.last_run_defrags == 0
+    assert ce_on.last_run_defrags > 0
+    for r in reqs:
+        np.testing.assert_array_equal(res_on[r.rid].tokens,
+                                      res_off[r.rid].tokens)
+    assert len(ce_on.fragmentation_trace) > 0
+    assert all(0.0 <= f <= 1.0 for _, f in ce_on.fragmentation_trace)
+    # an aggressive threshold keeps the pool compact at retire points
+    assert max(f for _, f in ce_on.fragmentation_trace) <= \
+        max((f for _, f in ce_off.fragmentation_trace), default=0.0) + 1e-9
+    assert ce_on.allocator.live_blocks == 0
+
+
 def test_continuous_rejects_bad_requests(dense_setup):
     cfg, params = dense_setup
     ce = ContinuousEngine(params, cfg, max_batch=2, kv_blocks=16,
