@@ -2,7 +2,7 @@
 # ruff runs only when installed (the CI image always installs it).
 PY ?= python
 
-.PHONY: ci test lint bench-smoke bench-paged serve-sim
+.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim
 
 ci: lint test
 
@@ -19,6 +19,7 @@ bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/serve_decode.py --smoke --out BENCH_PR2.json
 	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
 	PYTHONPATH=src $(PY) benchmarks/paged_attention.py --smoke --check --out BENCH_PR4.json
+	PYTHONPATH=src $(PY) benchmarks/prefill.py --smoke --check --out BENCH_PR5.json
 
 # Paged-attention gate: measures fresh (never trusts a checked-in JSON)
 # and asserts the fused path's decode tok/s >= the gather-dense path at
@@ -27,6 +28,15 @@ bench-smoke:
 # produced via --check-file instead of re-running the scan.
 bench-paged:
 	PYTHONPATH=src $(PY) benchmarks/paged_attention.py --smoke --check --no-serve --out /tmp/BENCH_PR4_gate.json
+
+# Chunked-prefill gate: measures fresh and asserts chunked prefill keeps
+# decode flowing during long-prompt admission (strictly beating blocking's
+# during-prefill decode tok/s), improves interactive TTFT p50 under the
+# co-arrival burst mix, sustains steady-mix aggregate throughput, and
+# leaves zero per-admission dispatches/host syncs.  CI re-asserts the
+# artifact bench-smoke just produced via --check-file.
+bench-prefill:
+	PYTHONPATH=src $(PY) benchmarks/prefill.py --smoke --check --out /tmp/BENCH_PR5_gate.json
 
 # 50-request continuous-batching traffic sim (scheduler + paged KV pool
 # smoke: completion, O(1) dispatch/segment, and no-leak invariants).

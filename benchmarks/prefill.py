@@ -1,0 +1,385 @@
+"""Chunked-prefill serve benchmark: TTFT and decode flow under prompt
+arrivals, chunked vs blocking prefill (BENCH_PR5.json).
+
+Two scenarios, both running the PR 4 baseline serve configuration (fused
+paged-attention decode) on identical request streams per arm:
+
+1. **steady** — the BENCH_PR3/PR4-style heavy-tailed Poisson mix.  Checks
+   that chunked prefill SUSTAINS aggregate throughput (wall tok/s within
+   tolerance of blocking) while replacing per-admission prefill dispatches
+   + host syncs with one dispatch per segment.
+
+2. **burst** — the head-of-line-blocking mix chunked prefill exists to
+   fix: bursts where two LONG prompts (hundreds of tokens, quadratic
+   attention) arrive together with interactive short requests.  Blocking
+   prefill runs one B=1 full-prompt forward per admission, back to back —
+   every in-flight request's next tokens and every co-arriving short's
+   first token wait out the whole stack.  Chunked prefill batches the
+   co-arriving prompts' chunks into one ``[pb, chunk]`` prologue per
+   mixed segment, so decode keeps flowing.  Reported per arm:
+
+   * ``decode_tok_s_during_prefill`` — tokens flowing to OTHER requests
+     inside each long prompt's admission -> first-token window (measured
+     from ``run_stream`` event timestamps).  The head-of-line metric: a
+     blocking engine stalls here, a chunked one does not.
+   * short-class (interactive) TTFT p50/p99 alongside the all-requests
+     percentiles — the victims of head-of-line blocking are the shorts.
+
+On CPU absolute numbers are structural (kernels emulated, decode segments
+dispatch-latency-bound, so full-prompt B=1 prefills are artificially cheap
+relative to decode steps — on real accelerators with real prompt lengths
+the prefill stall is far larger and chunked wins TTFT outright).  The
+headline fields are the chunked/blocking ratios, which transfer.
+
+``--check`` asserts the CI gate:
+  * burst: chunked ``decode_tok_s_during_prefill`` strictly beats
+    blocking AND interactive TTFT p50 improves (p99 within a noise bound);
+  * steady: chunked wall tok/s >= 0.85x blocking;
+  * both: zero per-admission prefill dispatches / host syncs remain.
+
+Usage:
+  PYTHONPATH=src python benchmarks/prefill.py --smoke --check --out BENCH_PR5.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import configs as cfg_lib
+from repro.core import backend as backend_lib
+from repro.models import model as model_lib
+from repro.serve import ContinuousEngine, Request
+
+
+def make_prompt_workload(n: int, *, vocab: int, mean_interarrival: float,
+                         prompt_lo: int, prompt_hi: int, new_lo: int,
+                         new_hi: int, tail_frac: float,
+                         seed: int) -> list[Request]:
+    """Poisson arrivals with heavy-tailed PROMPT lengths (cf.
+    serve_traffic.make_workload, whose tail is on the output budget).
+    Every round(1/tail_frac)-th request draws its prompt from the top
+    quarter of [prompt_lo, prompt_hi]; the rest from the bottom
+    quarter."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.poisson(mean_interarrival, size=n))
+    arrivals[0] = 0
+    span = max((prompt_hi - prompt_lo) // 4, 1)
+    stride = max(int(round(1.0 / tail_frac)), 1) if tail_frac > 0 else 0
+    reqs = []
+    for i, t in enumerate(arrivals):
+        if stride and i % stride == 0:
+            plen = int(rng.integers(prompt_hi - span, prompt_hi + 1))
+        else:
+            plen = int(rng.integers(prompt_lo, prompt_lo + span + 1))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, plen),
+            max_new=int(rng.integers(new_lo, new_hi + 1)),
+            arrival_step=int(t)))
+    return reqs
+
+
+def make_burst_workload(n_bursts: int, *, vocab: int, gap: int,
+                        long_lo: int, long_hi: int, short_lo: int,
+                        short_hi: int, new_lo: int, new_hi: int,
+                        seed: int) -> tuple[list[Request], set[int]]:
+    """Co-arrival bursts: two long prompts + two shorts per burst, all at
+    the same arrival step.  Returns (requests, long rids)."""
+    rng = np.random.default_rng(seed)
+    reqs, long_rids, rid = [], set(), 0
+    for b in range(n_bursts):
+        t = b * gap
+        for _ in range(2):
+            reqs.append(Request(
+                rid=rid,
+                prompt=rng.integers(0, vocab,
+                                    int(rng.integers(long_lo, long_hi + 1))),
+                max_new=int(rng.integers(new_lo, new_hi + 1)),
+                arrival_step=t))
+            long_rids.add(rid)
+            rid += 1
+        for _ in range(2):
+            reqs.append(Request(
+                rid=rid,
+                prompt=rng.integers(0, vocab, int(rng.integers(short_lo,
+                                                               short_hi + 1))),
+                max_new=int(rng.integers(new_lo, new_hi + 1)),
+                arrival_step=t))
+            rid += 1
+    return reqs, long_rids
+
+
+def decode_during_prefill(ce: ContinuousEngine, reqs,
+                          long_rids: set[int]) -> float:
+    """Tokens/second flowing to OTHER requests inside each long request's
+    admission -> first-token window (one streamed pass, warm caches)."""
+    events = []
+    for ev in ce.run_stream(reqs):
+        events.append((time.perf_counter(), ev))
+    admit, first, toks = {}, {}, []
+    for t, ev in events:
+        if ev["event"] == "admit":
+            admit[ev["rid"]] = t
+        elif ev["event"] == "tokens":
+            first.setdefault(ev["rid"], t)
+            toks.append((t, ev["rid"], len(ev["tokens"])))
+    win_tokens = win_time = 0.0
+    for rid in long_rids:
+        a, f = admit[rid], first[rid]
+        win_time += f - a
+        win_tokens += sum(n for t, r, n in toks if r != rid and a < t <= f)
+    return win_tokens / max(win_time, 1e-9)
+
+
+def run_arm(ce: ContinuousEngine, reqs, *, iters: int,
+            long_rids: set[int] | None = None):
+    """Warm run + `iters` timed runs (+ streamed window passes when
+    `long_rids` is given).  TTFT is best-of-iters per request."""
+    res = ce.run(reqs)
+    assert len(res) == len(reqs), "not every request completed"
+    assert ce.allocator.live_blocks == 0, "KV pool leaked blocks"
+    walls, ttft, rates = [], {}, []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        ce.run(reqs)
+        walls.append(time.perf_counter() - t0)
+        for rid, t in ce.last_run_ttft_seconds.items():
+            ttft[rid] = min(ttft.get(rid, float("inf")), t)
+        if long_rids:
+            rates.append(decode_during_prefill(ce, reqs, long_rids))
+    metrics = {
+        "segments": ce.last_run_segments,
+        "prefills": ce.last_run_prefills,
+        "prefill_chunks": ce.last_run_prefill_chunks,
+        "dispatches": ce.last_run_dispatches,
+        "host_syncs": ce.last_run_host_syncs,
+    }
+    if long_rids:
+        metrics["decode_tok_s_during_prefill"] = max(rates)
+    return min(walls), ttft, metrics
+
+
+def pct(vals, p):
+    return float(np.percentile(np.asarray(sorted(vals), np.float64), p))
+
+
+def arm_report(name, wall, ttft, metrics, useful,
+               long_rids: set[int] | None = None):
+    row = {
+        "arm": name,
+        "wall_seconds": wall,
+        "wall_tok_s": useful / wall,
+        "ttft_p50_seconds": pct(ttft.values(), 50),
+        "ttft_p99_seconds": pct(ttft.values(), 99),
+        **metrics,
+    }
+    extra = ""
+    if long_rids is not None:
+        shorts = [t for rid, t in ttft.items() if rid not in long_rids]
+        row["ttft_p50_seconds_short"] = pct(shorts, 50)
+        row["ttft_p99_seconds_short"] = pct(shorts, 99)
+        extra = (f"  short-TTFT p50 {row['ttft_p50_seconds_short']*1e3:6.1f}"
+                 f"ms p99 {row['ttft_p99_seconds_short']*1e3:6.1f}ms"
+                 f"  during-prefill "
+                 f"{metrics['decode_tok_s_during_prefill']:7.1f} tok/s")
+    print(f"[{name:>16s}] wall {row['wall_tok_s']:8.1f} tok/s  TTFT p50 "
+          f"{row['ttft_p50_seconds']*1e3:6.1f}ms p99 "
+          f"{row['ttft_p99_seconds']*1e3:6.1f}ms  "
+          f"({metrics['dispatches']} dispatches, "
+          f"{metrics['host_syncs']} syncs){extra}")
+    return row
+
+
+def run_check(report) -> None:
+    """The CI gate (fresh report or --check-file): the head-of-line stall
+    is gone (burst scenario) and aggregate throughput is sustained
+    (steady scenario), with zero per-admission dispatches/syncs left."""
+    for scen in ("steady", "burst"):
+        arms = {r["arm"]: r for r in report[scen]["arms"]}
+        for r in arms.values():
+            if r["arm"].startswith("chunked"):
+                assert r["prefills"] == 0 \
+                    and r["host_syncs"] == r["segments"], \
+                    "chunked serve must not dispatch or sync per admission"
+    steady = {r["arm"]: r for r in report["steady"]["arms"]}
+    blocking = steady["blocking"]
+    best = max((r for r in steady.values()
+                if r["arm"].startswith("chunked")),
+               key=lambda r: r["wall_tok_s"])
+    assert best["wall_tok_s"] >= 0.85 * blocking["wall_tok_s"], (
+        f"chunked prefill must sustain aggregate throughput on the steady "
+        f"mix: {best['wall_tok_s']:.1f} < 0.85 * "
+        f"{blocking['wall_tok_s']:.1f} tok/s")
+    burst = {r["arm"]: r for r in report["burst"]["arms"]}
+    b_blk = burst["blocking"]
+    b_chk = max((r for r in burst.values()
+                 if r["arm"].startswith("chunked")),
+                key=lambda r: r["decode_tok_s_during_prefill"])
+    assert (b_chk["decode_tok_s_during_prefill"]
+            > b_blk["decode_tok_s_during_prefill"]), (
+        f"chunked prefill must keep decode flowing while long prompts "
+        f"prefill: {b_chk['decode_tok_s_during_prefill']:.1f} <= "
+        f"{b_blk['decode_tok_s_during_prefill']:.1f} tok/s")
+    assert (b_chk["ttft_p50_seconds_short"]
+            <= b_blk["ttft_p50_seconds_short"]), (
+        f"interactive (short-class) TTFT p50 must improve under the "
+        f"long-prompt burst mix: "
+        f"{b_chk['ttft_p50_seconds_short']*1e3:.1f}ms > "
+        f"{b_blk['ttft_p50_seconds_short']*1e3:.1f}ms")
+    assert (b_chk["ttft_p99_seconds_short"]
+            <= 1.3 * b_blk["ttft_p99_seconds_short"]), (
+        f"interactive TTFT p99 regressed beyond the noise bound: "
+        f"{b_chk['ttft_p99_seconds_short']*1e3:.1f}ms > 1.3 * "
+        f"{b_blk['ttft_p99_seconds_short']*1e3:.1f}ms")
+    print(f"check OK: during-prefill decode "
+          f"{b_chk['decode_tok_s_during_prefill']:.1f} > "
+          f"{b_blk['decode_tok_s_during_prefill']:.1f} tok/s, interactive "
+          f"TTFT p50 {b_chk['ttft_p50_seconds_short']*1e3:.1f} <= "
+          f"{b_blk['ttft_p50_seconds_short']*1e3:.1f}ms, steady wall "
+          f"{best['wall_tok_s']:.1f} >= 0.85 * "
+          f"{blocking['wall_tok_s']:.1f} tok/s, zero per-admission syncs")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=12,
+                    help="steady: request count")
+    ap.add_argument("--bursts", type=int, default=3,
+                    help="burst: co-arrival bursts (4 requests each)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--segment-len", type=int, default=8)
+    ap.add_argument("--mean-interarrival", type=float, default=2.0)
+    ap.add_argument("--prompt-lens", default="8,96",
+                    help="steady: lo,hi heavy-tailed prompt range")
+    ap.add_argument("--long-lens", default="384,512",
+                    help="burst: lo,hi long-prompt range")
+    ap.add_argument("--new-tokens", default="8,24")
+    ap.add_argument("--tail-frac", type=float, default=0.25)
+    ap.add_argument("--chunks", default="16,32",
+                    help="steady: prefill_chunk scan values")
+    ap.add_argument("--burst-chunk", type=int, default=256)
+    ap.add_argument("--plan", default="w8a8")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: small workload, few iterations")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the CI gate")
+    ap.add_argument("--check-file", default=None, metavar="JSON",
+                    help="run the --check assertions against an existing "
+                    "report instead of re-benchmarking (CI re-asserts the "
+                    "bench-smoke artifact this way)")
+    ap.add_argument("--out", default="BENCH_PR5.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.bursts, args.iters = 12, 3, 4
+
+    if args.check_file:
+        with open(args.check_file) as f:
+            run_check(json.load(f))
+        return
+
+    p_lo, p_hi = (int(x) for x in args.prompt_lens.split(","))
+    l_lo, l_hi = (int(x) for x in args.long_lens.split(","))
+    n_lo, n_hi = (int(x) for x in args.new_tokens.split(","))
+    chunks = [int(x) for x in args.chunks.split(",")]
+
+    cfg = cfg_lib.reduced_config(args.arch, n_layers=args.layers)
+    plan = backend_lib.load_plan(args.plan)
+    params = model_lib.init(jax.random.PRNGKey(0), cfg)
+    frozen = model_lib.freeze_params(params, a_scale=0.05, plan=plan)
+
+    def engine(block_size, seq_bucket, max_len, kv_blocks, seg_len, **kw):
+        # PR 4's shipped baseline config: fused paged-attention decode.
+        return ContinuousEngine(
+            frozen, cfg, plan=plan, max_batch=args.max_batch,
+            kv_blocks=kv_blocks, block_size=block_size,
+            max_blocks_per_req=-(-(max_len + n_hi + seq_bucket)
+                                 // block_size),
+            segment_len=seg_len, seq_bucket=seq_bucket,
+            paged_attn=True, **kw)
+
+    # ---- scenario 1: steady heavy-tailed Poisson mix --------------------
+    reqs = make_prompt_workload(
+        args.requests, vocab=cfg.vocab,
+        mean_interarrival=args.mean_interarrival, prompt_lo=p_lo,
+        prompt_hi=p_hi, new_lo=n_lo, new_hi=n_hi,
+        tail_frac=args.tail_frac, seed=args.seed)
+    useful = sum(r.max_new for r in reqs)
+    print(f"-- steady: {len(reqs)} Poisson requests, prompts "
+          f"{p_lo}..{p_hi} --")
+    mk = dict(block_size=8, seq_bucket=8, max_len=p_hi, kv_blocks=96,
+              seg_len=args.segment_len)
+    steady_arms = [arm_report(
+        "blocking", *run_arm(engine(**mk), reqs, iters=args.iters),
+        useful)]
+    for chunk in chunks:
+        ce = engine(chunked_prefill=True, prefill_chunk=chunk, **mk)
+        steady_arms.append(arm_report(
+            f"chunked@{chunk}", *run_arm(ce, reqs, iters=args.iters),
+            useful))
+
+    # ---- scenario 2: head-of-line long-prompt bursts --------------------
+    burst_reqs, long_rids = make_burst_workload(
+        args.bursts, vocab=cfg.vocab, gap=20, long_lo=l_lo, long_hi=l_hi,
+        short_lo=16, short_hi=32, new_lo=n_lo, new_hi=min(n_hi, 16),
+        seed=args.seed)
+    b_useful = sum(r.max_new for r in burst_reqs)
+    print(f"-- burst: {args.bursts} bursts of 2 long ({l_lo}..{l_hi}) + 2 "
+          f"short prompts --")
+    bk = dict(block_size=16, seq_bucket=16, max_len=l_hi, kv_blocks=160,
+              seg_len=4)
+    burst_arms = [arm_report(
+        "blocking",
+        *run_arm(engine(**bk), burst_reqs, iters=args.iters,
+                 long_rids=long_rids),
+        b_useful, long_rids)]
+    ce = engine(chunked_prefill=True, prefill_chunk=args.burst_chunk, **bk)
+    burst_arms.append(arm_report(
+        f"chunked@{args.burst_chunk}",
+        *run_arm(ce, burst_reqs, iters=args.iters, long_rids=long_rids),
+        b_useful, long_rids))
+
+    report = {
+        "bench": "prefill",
+        "arch": args.arch,
+        "n_layers": args.layers,
+        "plan": plan.to_json(),
+        "backend": jax.default_backend(),
+        "interpret_kernels": jax.default_backend() != "tpu",
+        "max_batch": args.max_batch,
+        "steady": {
+            "requests": len(reqs),
+            "useful_tokens": useful,
+            "prompt_len_range": [p_lo, p_hi],
+            "prompt_tail_frac": args.tail_frac,
+            "mean_interarrival_steps": args.mean_interarrival,
+            "segment_len": args.segment_len,
+            "block_size": 8,
+            "arms": steady_arms,
+        },
+        "burst": {
+            "requests": len(burst_reqs),
+            "useful_tokens": b_useful,
+            "long_prompt_range": [l_lo, l_hi],
+            "short_prompt_range": [16, 32],
+            "segment_len": 4,
+            "block_size": 16,
+            "prefill_chunk": args.burst_chunk,
+            "arms": burst_arms,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check:
+        run_check(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -92,11 +92,18 @@ def run_continuous(ce: ContinuousEngine, reqs, *, iters: int):
     metrics = {
         "segments": ce.last_run_segments,
         "prefills": ce.last_run_prefills,
+        "prefill_chunks": ce.last_run_prefill_chunks,
         "dispatches": ce.last_run_dispatches,
         "dispatches_per_segment":
             (ce.last_run_dispatches - ce.last_run_prefills)
             / max(ce.last_run_segments, 1),
+        "host_syncs": ce.last_run_host_syncs,
         "defrags": ce.last_run_defrags,
+        # Wall TTFT (eligible -> first sampled token) from the LAST timed
+        # run: jit caches are warm, so this is steady-state admission
+        # latency, separated from the decode-latency step percentiles.
+        "ttft_p50_seconds": ce.ttft_percentile(50),
+        "ttft_p99_seconds": ce.ttft_percentile(99),
         "kv_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
         "kv_occupancy_max": float(np.max(occ)) if occ else 0.0,
         "fragmentation_mean": float(np.mean(frag)) if frag else 0.0,

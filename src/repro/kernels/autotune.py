@@ -47,6 +47,15 @@ _MEASURED: set[tuple[int, int, int, str]] = set()
 _PAGED_TABLE: dict[tuple[int, int, int, int, int, int, str], int] = {}
 _PAGED_MEASURED: set[tuple[int, int, int, int, int, int, str]] = set()
 
+# Chunked-prefill shapes: (batch_bucket, kvh, block_size, head_dim, groups,
+# dtype) -> prefill chunk length.  The tuned axis is the tokens-per-chunk
+# the continuous engine's mixed segments advance a prefilling request by:
+# larger chunks amortize per-segment dispatch and page-walk overhead,
+# smaller chunks interleave with decode sooner (lower head-of-line TTFT).
+# Always a block_size multiple so chunk starts stay page-aligned.
+_PREFILL_TABLE: dict[tuple[int, int, int, int, int, str], int] = {}
+_PREFILL_MEASURED: set[tuple[int, int, int, int, int, str]] = set()
+
 
 def next_pow2(x: int) -> int:
     return 1 << max(0, int(x) - 1).bit_length()
@@ -280,6 +289,98 @@ def measure_paged(batch: int, kvh: int, width: int, block_size: int,
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill: tokens per chunk
+# ---------------------------------------------------------------------------
+
+def _prefill_key(batch: int, kvh: int, block_size: int, head_dim: int,
+                 groups: int, dtype) -> tuple[int, int, int, int, int, str]:
+    return (m_bucket(batch), int(kvh), int(block_size), int(head_dim),
+            int(groups), jnp.dtype(dtype).name)
+
+
+def heuristic_prefill_chunk(block_size: int) -> int:
+    """Chunk length from the pool geometry alone: ~64 tokens (a few pages
+    of causal tile per segment, enough to amortize the dispatch without
+    stalling decode for long), always a block_size multiple."""
+    return block_size * max(1, 64 // block_size)
+
+
+def choose_prefill_chunk(batch: int, kvh: int, block_size: int,
+                         dtype=jnp.int8, *, head_dim: int = 0,
+                         groups: int = 1) -> int:
+    """Prefill chunk length for one serve shape: measured when available,
+    else the deterministic heuristic (memoized, like choose_blocks)."""
+    key = _prefill_key(batch, kvh, block_size, head_dim, groups, dtype)
+    if key not in _PREFILL_TABLE:
+        _PREFILL_TABLE[key] = heuristic_prefill_chunk(block_size)
+    return _PREFILL_TABLE[key]
+
+
+def record_prefill(batch: int, kvh: int, block_size: int, dtype,
+                   chunk_len: int, *, head_dim: int = 0, groups: int = 1,
+                   measured: bool = True) -> None:
+    key = _prefill_key(batch, kvh, block_size, head_dim, groups, dtype)
+    _PREFILL_TABLE[key] = int(chunk_len)
+    if measured:
+        _PREFILL_MEASURED.add(key)
+
+
+def prefill_chunk_candidates(block_size: int, cap: int = 256) -> list[int]:
+    """Pow2-spaced block_size multiples from one page up to `cap` tokens."""
+    cands, c = [], block_size
+    while c <= max(cap, block_size):
+        cands.append(c)
+        c *= 2
+    return cands
+
+
+def measure_prefill(batch: int, kvh: int, block_size: int, dtype=jnp.int8,
+                    *, head_dim: int = 64, groups: int = 2,
+                    candidates: Iterable[int] | None = None, iters: int = 3,
+                    backend: str | None = None) -> tuple[int, dict]:
+    """Time `paged_prefill` over candidate chunk lengths on a synthetic
+    pool (one mid-prompt chunk: as many past tokens as the chunk itself)
+    and pick the cheapest *per token*; record + return the best.  On CPU
+    this times the vectorized emulation (structural); on TPU the compiled
+    kernel.  Returns ``(best_chunk, {chunk: median_us_per_token})``."""
+    import jax
+
+    from repro.kernels.paged_attention import ops as pops  # lazy: no cycle
+
+    key = jax.random.PRNGKey(0)
+    timings: dict[int, float] = {}
+    for c in (candidates or prefill_chunk_candidates(block_size)):
+        w = 2 * (c // block_size)            # past pages + chunk pages
+        nb = w * batch + 1
+        shape = (nb, block_size, kvh, head_dim)
+        if jnp.dtype(dtype) == jnp.int8:
+            from repro.core import quant
+            codes = jax.random.randint(key, shape, -127, 128,
+                                       jnp.int32).astype(jnp.int8)
+            scale = jnp.full((*shape[:-1], 1), 0.05, jnp.bfloat16)
+            pages = quant.QTensor(codes, scale)
+        else:
+            pages = jax.random.normal(key, shape, jnp.dtype(dtype))
+        q = jax.random.normal(key, (batch, c, kvh * groups, head_dim),
+                              jnp.float32)
+        kn = jax.random.normal(key, (batch, c, kvh, head_dim), jnp.float32)
+        tables = (jnp.arange(1, batch * w + 1, dtype=jnp.int32)
+                  .reshape(batch, w))
+        pos = jnp.full((batch,), c, jnp.int32)       # chunk 2: past == chunk
+        n_tok = jnp.full((batch,), c, jnp.int32)
+
+        def run(q=q, kn=kn, pages=pages, tables=tables, pos=pos,
+                n_tok=n_tok):
+            return pops.paged_prefill(q, kn, kn, pages, pages, tables, pos,
+                                      n_tok, backend=backend)
+        timings[c] = time_median_us(run, iters) / c
+    best = min(timings, key=timings.get)
+    record_prefill(batch, kvh, block_size, dtype, best, head_dim=head_dim,
+                   groups=groups)
+    return best, timings
+
+
+# ---------------------------------------------------------------------------
 # Persistence
 # ---------------------------------------------------------------------------
 
@@ -297,9 +398,17 @@ def dump(path: str | None = None) -> str:
          "dtype": key[6], "kv_splits": _PAGED_TABLE[key]}
         for key in sorted(_PAGED_MEASURED)
     ]
+    prefill = [
+        {"batch_bucket": key[0], "kvh": key[1], "block_size": key[2],
+         "head_dim": key[3], "groups": key[4], "dtype": key[5],
+         "chunk_len": _PREFILL_TABLE[key]}
+        for key in sorted(_PREFILL_MEASURED)
+    ]
     obj: dict = {"version": 1, "entries": entries}
     if paged:
         obj["paged_entries"] = paged
+    if prefill:
+        obj["prefill_entries"] = prefill
     text = json.dumps(obj, indent=2)
     path = path or os.environ.get(CACHE_ENV)
     if path:
@@ -323,7 +432,13 @@ def load(path_or_text: str) -> int:
                      e["block_size"], e["dtype"], e["kv_splits"],
                      head_dim=e.get("head_dim", 0),
                      groups=e.get("groups", 1))
-    return len(obj.get("entries", ())) + len(obj.get("paged_entries", ()))
+    for e in obj.get("prefill_entries", ()):
+        record_prefill(e["batch_bucket"], e["kvh"], e["block_size"],
+                       e["dtype"], e["chunk_len"],
+                       head_dim=e.get("head_dim", 0),
+                       groups=e.get("groups", 1))
+    return (len(obj.get("entries", ())) + len(obj.get("paged_entries", ()))
+            + len(obj.get("prefill_entries", ())))
 
 
 def clear() -> None:
@@ -332,3 +447,5 @@ def clear() -> None:
     _MEASURED.clear()
     _PAGED_TABLE.clear()
     _PAGED_MEASURED.clear()
+    _PREFILL_TABLE.clear()
+    _PREFILL_MEASURED.clear()

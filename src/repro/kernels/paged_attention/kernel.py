@@ -1,4 +1,4 @@
-"""Fused paged-attention flash-decoding Pallas TPU kernel.
+"""Fused paged-attention flash-decoding and flash-prefill Pallas TPU kernels.
 
 Serving-cache form of the paper's single-conversion principle: the decode
 attention for one token reads the int8 KV pages *as stored* (half the HBM
@@ -37,11 +37,26 @@ here is HBM bytes, not MXU width — so parity with the int8 reference is
 close-not-bitwise (the reference additionally quantizes q and p; see
 tests/test_paged_attention.py).
 
+**Flash prefill** (:func:`flash_prefill_kernel`) extends the same layout
+to causal prompt chunks: grid ``(B, KVH, past_pages + 1 + chunk_pages)``
+first walks the request's past pages (identical scalar-prefetch
+indirection and dead-step clamping), then runs the causal self tile on
+the in-hand chunk (kept fp, like the one-shot prefill's ``attend_full``),
+and finally QUANTIZES AND WRITES the chunk's K/V into its pool pages —
+the page writes are output index maps over the pool buffer itself
+(``input_output_aliases``), so the prompt cache never exists densely and
+``pack_prompt`` never runs.  Masked rows (``write_mask`` 0) and ragged
+dead-tail steps write to the reserved null block 0; every untouched pool
+block keeps its bytes (tested).  The in-kernel int8 quantization
+reproduces ``attention.quantize_kv`` bit-exactly (f32 absmax / 127,
+bf16-rounded scale), so chunked pools match ``pack_prompt``-packed pools.
+
 TPU notes: block shapes follow the model's (G, D) head geometry; on real
 hardware D is the 128-lane dim (head_dim 64/128) while G stays small —
 fine for VPU-bound decode.  CPU CI runs the kernel in interpret mode for
 parity only (per-grid-step interpreter overhead makes it slow); the fast
-CPU path is :func:`..ops.flash_decode_jnp`, the same math vectorized.
+CPU path is :func:`..ops.flash_decode_jnp` /
+:func:`..ops.flash_prefill_jnp`, the same math vectorized.
 """
 from __future__ import annotations
 
@@ -215,3 +230,263 @@ def paged_attention_kernel(
         name="paged_attention_decode",
     )(*args)
     return acc, m, l
+
+
+# ---------------------------------------------------------------------------
+# Flash prefill: causal chunk attention + in-kernel paged KV writes
+# ---------------------------------------------------------------------------
+
+def _prefill_kernel(
+    bt_ref,       # [B, W] int32   (scalar prefetch)
+    pos_ref,      # [B]    int32   chunk start = tokens already in the pool
+    nt_ref,       # [B]    int32   valid tokens in this chunk (ragged tail)
+    wm_ref,       # [B]    int32   1 = row is prefilling this chunk
+    q_ref,        # [1, 1, C*G, D]
+    kn_ref,       # [1, C, 1, D]   in-hand chunk K (fp, post-RoPE)
+    vn_ref,       # [1, C, 1, D]
+    k_ref,        # [1, BS, 1, D]  pool page slice for this kv head
+    *rest,        # (k_scale, v, v_scale | v), outs, scratches
+    bs: int,
+    width: int,
+    c: int,
+    g: int,
+    d: int,
+    int8: bool,
+    out_dtype,
+):
+    if int8:
+        ks_ref, v_ref, vs_ref = rest[0], rest[1], rest[2]
+        rest = rest[3:]
+    else:
+        v_ref = rest[0]
+        rest = rest[1:]
+    if int8:
+        (out_ref, ko_ref, kso_ref, vo_ref, vso_ref,
+         acc_scr, m_scr, l_scr) = rest
+    else:
+        out_ref, ko_ref, vo_ref, acc_scr, m_scr, l_scr = rest
+        kso_ref = vso_ref = None
+
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    pos = pos_ref[b]
+    n_tok = nt_ref[b]
+    on = wm_ref[b] != 0
+    cg = c * g
+    # query chunk index of each of the C*G query rows (chunk-major layout)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (cg, 1), 0) // g
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def online_update(srs, valid, v):
+        """One online-softmax accumulation step over [CG, N] scores."""
+        srs = jnp.where(valid, srs, NEG_INF)
+        m_prev = m_scr[...]                                 # [CG, 1]
+        m_new = jnp.maximum(m_prev, srs.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        prob = jnp.where(valid, jnp.exp(srs - m_new), 0.0)
+        l_scr[...] = l_scr[...] * alpha + prob.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            prob, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    # ---- past-page walk: every chunk query sees every past key ----------
+    @pl.when((t < width) & on & (t * bs < pos))
+    def _past():
+        q = q_ref[0, 0].astype(jnp.float32)                 # [CG, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # [BS, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if int8:
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+        srs = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) / np.sqrt(d)    # [CG, BS]
+        kp = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        online_update(srs, kp < pos, v)
+
+    # ---- self tile: causal within the chunk, in-hand fp K/V -------------
+    @pl.when((t == width) & on)
+    def _self():
+        q = q_ref[0, 0].astype(jnp.float32)                 # [CG, D]
+        k = kn_ref[0, :, 0, :].astype(jnp.float32)          # [C, D]
+        v = vn_ref[0, :, 0, :].astype(jnp.float32)
+        srs = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) / np.sqrt(d)    # [CG, C]
+        kj = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+        online_update(srs, (kj <= qi) & (kj < n_tok), v)
+
+    @pl.when(t == width)
+    def _flush():
+        out_ref[0, 0] = (acc_scr[...]
+                         / jnp.maximum(l_scr[...], 1e-30)).astype(out_dtype)
+
+    # ---- write phase: quantize the chunk K/V into its pool pages --------
+    j = t - (width + 1)
+    @pl.when((t > width) & on & (j * bs < n_tok))
+    def _write():
+        ks = kn_ref[0, pl.ds(j * bs, bs), 0, :]             # [BS, D]
+        vs = vn_ref[0, pl.ds(j * bs, bs), 0, :]
+        if int8:
+            # Identical math to attention.quantize_kv: f32 absmax scale,
+            # bf16 storage rounding, codes from the bf16-rounded scale.
+            for src, co, so in ((ks, ko_ref, kso_ref), (vs, vo_ref, vso_ref)):
+                x = src.astype(jnp.float32)
+                scale = jnp.maximum(
+                    jnp.max(jnp.abs(x), -1, keepdims=True) / 127.0,
+                    1e-8).astype(jnp.bfloat16)
+                codes = jnp.clip(
+                    jnp.round(x / scale.astype(jnp.float32)),
+                    -127, 127).astype(jnp.int8)
+                co[0, :, 0, :] = codes
+                so[0, :, 0] = scale[:, 0]
+        else:
+            ko_ref[0, :, 0, :] = ks.astype(ko_ref.dtype)
+            vo_ref[0, :, 0, :] = vs.astype(vo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_prefill_kernel(
+    q: jax.Array,              # [B, KVH, C*G, D] (any float dtype)
+    k_new: jax.Array,          # [B, C, KVH, D] fp chunk K (post-RoPE)
+    v_new: jax.Array,          # [B, C, KVH, D]
+    k_pages: jax.Array,        # [NB, BS, KVH, D] fp or int8
+    v_pages: jax.Array,
+    k_scale: jax.Array | None,  # [NB, BS, KVH] (int8 pools), else None
+    v_scale: jax.Array | None,
+    block_tables: jax.Array,   # [B, W] int32
+    pos: jax.Array,            # [B] int32, page-aligned chunk starts
+    n_tok: jax.Array,          # [B] int32 valid tokens this chunk
+    write_mask: jax.Array,     # [B] int32 (1 = prefilling row)
+    *,
+    interpret: bool = False,
+):
+    """Causal chunk attention over (pool pages [0, pos) + in-hand chunk)
+    with the chunk's K/V quantized and written into its pool pages by the
+    same kernel — the prompt K/V never exists as a dense cache and never
+    round-trips through a host-side ``pack_prompt`` scatter.
+
+    Grid ``(B, KVH, W + 1 + C/BS)``: the innermost dimension first walks
+    the request's past pages sequentially (scalar-prefetched block-table
+    indirection, dead steps clamped to the last live page so repeated
+    indices elide the DMA), then runs the causal self tile on the in-hand
+    chunk, then writes the chunk's pages.  The page *writes* go through
+    output index maps over the pool buffer itself (``input_output_aliases``),
+    so masked rows (``write_mask`` 0) and dead tail steps land on the
+    reserved null block 0 while every untouched pool block keeps its bytes.
+
+    Returns ``(out [B, KVH, C*G, D], k_pages, v_pages[, k_scale, v_scale])``
+    — the attention output plus the updated pool (scales only for int8
+    pools).
+    """
+    b, kvh, cg, d = q.shape
+    c = k_new.shape[1]
+    g = cg // c
+    _, bs, _, _ = k_pages.shape
+    width = block_tables.shape[1]
+    assert c % bs == 0, f"chunk {c} must be a block_size {bs} multiple"
+    cp = c // bs
+    int8 = k_pages.dtype == jnp.int8
+    assert (k_scale is not None) == int8, "int8 pages need scales"
+    out_dtype = q.dtype
+
+    def q_map(bi, hi, ti, bt, ps, nt, wm):
+        return (bi, hi, 0, 0)
+
+    def new_map(bi, hi, ti, bt, ps, nt, wm):
+        return (bi, 0, hi, 0)
+
+    def page_map(bi, hi, ti, bt, ps, nt, wm):
+        # Past walk; dead steps (ti beyond the live past pages, or the
+        # self/write phase) clamp to the last live past page so consecutive
+        # repeats elide the DMA.
+        live_last = jnp.maximum(jax.lax.div(ps[bi] - 1, bs), 0)
+        i = jnp.minimum(jnp.minimum(ti, live_last), width - 1)
+        return (bt[bi, i], 0, hi, 0)
+
+    def scale_map(bi, hi, ti, bt, ps, nt, wm):
+        return page_map(bi, hi, ti, bt, ps, nt, wm)[:3]
+
+    def out_map(bi, hi, ti, bt, ps, nt, wm):
+        return (bi, hi, 0, 0)
+
+    def wr_map(bi, hi, ti, bt, ps, nt, wm):
+        # Write phase: chunk page j -> table slot pos/BS + j; anything else
+        # (attention steps, masked rows, ragged dead tail) -> null block 0,
+        # whose content is garbage by contract.
+        j = ti - (width + 1)
+        slot = jax.lax.div(ps[bi], bs) + jnp.maximum(j, 0)
+        live = (j >= 0) & (wm[bi] != 0) & (j * bs < nt[bi]) & (slot < width)
+        idx = jnp.where(live, bt[bi, jnp.minimum(slot, width - 1)], 0)
+        return (idx, 0, hi, 0)
+
+    def wr_scale_map(bi, hi, ti, bt, ps, nt, wm):
+        return wr_map(bi, hi, ti, bt, ps, nt, wm)[:3]
+
+    in_specs = [
+        pl.BlockSpec((1, 1, cg, d), q_map),
+        pl.BlockSpec((1, c, 1, d), new_map),
+        pl.BlockSpec((1, c, 1, d), new_map),
+        pl.BlockSpec((1, bs, 1, d), page_map),
+    ]
+    args = [block_tables, pos, n_tok, write_mask, q, k_new, v_new, k_pages]
+    if int8:
+        in_specs.append(pl.BlockSpec((1, bs, 1), scale_map))
+        args.append(k_scale)
+    in_specs.append(pl.BlockSpec((1, bs, 1, d), page_map))
+    args.append(v_pages)
+    if int8:
+        in_specs.append(pl.BlockSpec((1, bs, 1), scale_map))
+        args.append(v_scale)
+
+    out_specs = [pl.BlockSpec((1, 1, cg, d), out_map),
+                 pl.BlockSpec((1, bs, 1, d), wr_map)]
+    out_shape = [jax.ShapeDtypeStruct((b, kvh, cg, d), out_dtype),
+                 jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype)]
+    # pallas_call input indices COUNT the scalar-prefetch args (tested:
+    # the aliased pool buffers keep every unwritten block's bytes).
+    if int8:
+        out_specs += [pl.BlockSpec((1, bs, 1), wr_scale_map),
+                      pl.BlockSpec((1, bs, 1, d), wr_map),
+                      pl.BlockSpec((1, bs, 1), wr_scale_map)]
+        out_shape += [jax.ShapeDtypeStruct(k_scale.shape, k_scale.dtype),
+                      jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+                      jax.ShapeDtypeStruct(v_scale.shape, v_scale.dtype)]
+        aliases = {7: 1, 8: 2, 9: 3, 10: 4}
+    else:
+        out_specs.append(pl.BlockSpec((1, bs, 1, d), wr_map))
+        out_shape.append(jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype))
+        aliases = {7: 1, 8: 2}
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, kvh, width + 1 + cp),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            compat.VMEM((cg, d), jnp.float32),
+            compat.VMEM((cg, 1), jnp.float32),
+            compat.VMEM((cg, 1), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_prefill_kernel, bs=bs, width=width, c=c, g=g,
+                             d=d, int8=int8, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=compat.CompilerParams(
+            # b is sequential: masked rows share the null block's out
+            # window, so the batch axis must not race across cores.
+            dimension_semantics=("arbitrary", "parallel", "arbitrary"),
+        ),
+        input_output_aliases=aliases,
+        interpret=interpret,
+        name="paged_attention_prefill",
+    )(*args)

@@ -28,6 +28,18 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, n_valid
                                          n_valid, impl="reference")
 
 
+def paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, block_tables, pos,
+                      n_tok, write_mask=None):
+    """Gather-then-attend chunked-prefill reference (the serve path's
+    non-fused branch): past pages gathered dense (int8 dequantized), the
+    in-hand chunk attended fp, chunk K/V scattered into the pool with the
+    identical quantize_kv grid the kernel applies in-kernel."""
+    from repro.models import attention  # lazy: models layers on kernels
+    return attention.attend_prefill_paged(q, k_new, v_new, k_pages, v_pages,
+                                          block_tables, pos, n_tok,
+                                          write_mask, impl="reference")
+
+
 def dequant_attention_ref(q, k_pages, v_pages, block_tables, n_valid
                           ) -> jax.Array:
     """fp attention over the dequantized pages: the tight oracle for the

@@ -47,6 +47,15 @@ def main():
                     help="continuous: fused flash-decoding paged-attention "
                     "kernel (in-kernel int8 KV dequant, split-KV) instead "
                     "of gather+attend")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="continuous: stream each prompt into the paged "
+                    "pool --prefill-chunk tokens per mixed segment (one "
+                    "dispatch serves prefill AND decode; admission never "
+                    "blocks the loop) instead of a blocking B=1 prefill "
+                    "per admission")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous: tokens per prefill chunk (block-size "
+                    "multiple; default: autotuned)")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
@@ -86,7 +95,9 @@ def main():
         ce = ContinuousEngine(
             params, cfg, plan=plan, max_batch=args.max_batch,
             kv_blocks=args.kv_blocks, block_size=args.block_size,
-            segment_len=args.segment_len, paged_attn=args.paged_attn)
+            segment_len=args.segment_len, paged_attn=args.paged_attn,
+            chunked_prefill=args.chunked_prefill,
+            prefill_chunk=args.prefill_chunk)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.poisson(2.0, size=args.batch))
         reqs = [
@@ -102,12 +113,16 @@ def main():
         lat = sorted(r.latency_steps for r in res.values())
         tag = "plan" if args.plan is not None else args.quant
         attn = "paged-attn" if args.paged_attn else "gather"
-        print(f"[{tag}|continuous|{attn}] served {len(reqs)} requests / "
-              f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. "
+        pf = (f"chunked-prefill:{ce.prefill_chunk}" if args.chunked_prefill
+              else "blocking-prefill")
+        print(f"[{tag}|continuous|{attn}|{pf}] served {len(reqs)} requests "
+              f"/ {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. "
               f"compile); {ce.last_run_segments} segments, "
               f"{ce.last_run_dispatches} dispatches, "
+              f"{ce.last_run_host_syncs} host syncs, "
               f"{ce.last_run_defrags} defrags, p50 latency "
-              f"{lat[len(lat)//2]} steps, peak pool occupancy "
+              f"{lat[len(lat)//2]} steps, TTFT p99 "
+              f"{ce.ttft_percentile(99)*1e3:.1f}ms, peak pool occupancy "
               f"{max(o for _, o in ce.occupancy_trace):.2f}")
         return
 

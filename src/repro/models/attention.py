@@ -337,6 +337,84 @@ def attend_decode_paged(q, k_pages, v_pages, block_tables, n_valid, *,
     return attend_decode(q, kg, vg, mask)
 
 
+def attend_prefill_paged(q, k, v, k_pages, v_pages, block_tables, pos,
+                         n_tok, write_mask=None, *, impl: str = "reference",
+                         has_past: bool = True
+                         ) -> tuple[jax.Array, Any, Any]:
+    """Causal-chunk prefill attention over a paged KV pool.
+
+    q: [B, C, H, D]; k/v: [B, C, KVH, D] the in-hand chunk projections
+    (post-RoPE); pages as in :func:`attend_decode_paged`; pos: [B] int32
+    page-aligned chunk starts (tokens already in the pool); n_tok: [B]
+    valid tokens in this chunk (ragged tails).  Every chunk query attends
+    all pool positions < pos plus the causal prefix of the in-hand chunk
+    — the in-hand K/V stays fp exactly like the unchunked prefill's
+    ``attend_full`` over in-hand projections, so chunked and one-shot
+    prefill agree to fp rounding (int8 pools additionally read *past*
+    chunks dequantized, the decode-identical approximation).
+
+    The chunk's K/V is quantized (int8 pools, ``quantize_kv`` grid) and
+    written into its pool pages: in-kernel for ``impl="fused"``
+    (kernels/paged_attention flash prefill), as a paged scatter for the
+    gather reference.  Rows with ``write_mask`` False attend garbage
+    (discarded by the caller) and write only to the null block.
+
+    Returns ``(out [B, C, H, D], k_pages', v_pages')``.
+    """
+    from repro.kernels.paged_attention import ops as paged_ops
+    if impl == "fused":
+        return paged_ops.paged_prefill(q, k, v, k_pages, v_pages,
+                                       block_tables, pos, n_tok, write_mask,
+                                       has_past=has_past)
+    if impl != "reference":
+        raise ValueError(f"impl must be 'reference' or 'fused', got "
+                         f"{impl!r}")
+    from repro.core import quant
+    b, c, h, d = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    if has_past:
+        kg = gather_pages(k_pages, block_tables)
+        vg = gather_pages(v_pages, block_tables)
+        if isinstance(kg, quant.QTensor):
+            kg, vg = kg.dequant(), vg.dequant()
+        sp = kg.shape[1]
+        k_all = _repeat_kv(jnp.concatenate(
+            [kg.astype(jnp.float32), k.astype(jnp.float32)], axis=1),
+            groups)
+        v_all = _repeat_kv(jnp.concatenate(
+            [vg.astype(jnp.float32), v.astype(jnp.float32)], axis=1),
+            groups)
+    else:
+        # STATIC first-chunk hint (every pos is 0): no past to gather.
+        sp = 0
+        k_all = _repeat_kv(k.astype(jnp.float32), groups)
+        v_all = _repeat_kv(v.astype(jnp.float32), groups)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k_all) / np.sqrt(d)
+    kp = jnp.arange(sp + c)
+    past_ok = (kp[None, :] < pos[:, None]) & (kp < sp)[None, :]
+    ci = jnp.arange(c)
+    self_ok = ((kp[None, None, :] >= sp)
+               & (kp[None, None, :] - sp <= ci[None, :, None])
+               & ((kp[None, :] - sp < n_tok[:, None])[:, None, :]))
+    ok = past_ok[:, None, :] | self_ok                  # [B, C, Sp+C]
+    scores = jnp.where(ok[:, None], scores, NEG_INF)
+    m = scores.max(-1, keepdims=True)
+    prob = jnp.where(ok[:, None], jnp.exp(scores - m), 0.0)
+    l = prob.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", prob / jnp.maximum(l, 1e-30),
+                     v_all).astype(q.dtype)
+    wm = None if write_mask is None else jnp.asarray(write_mask, bool)
+    pos = jnp.asarray(pos, jnp.int32)
+    n_tok = jnp.asarray(n_tok, jnp.int32)
+    k_pages = paged_ops.write_chunk_pages(k_pages, k, block_tables, pos,
+                                          n_tok, wm)
+    v_pages = paged_ops.write_chunk_pages(v_pages, v, block_tables, pos,
+                                          n_tok, wm)
+    return out, k_pages, v_pages
+
+
 def attend_decode(q, k_cache, v_cache, kv_len_mask=None) -> jax.Array:
     """q: [B, Sq, H, D] vs given K/V [B, S, KVH, D]; no causal constraint
     (decode: Sq == 1; cross-attention: any Sq).
@@ -450,12 +528,13 @@ def attention(
     new_cache = None
     if kv_cache is not None and "block_tables" in kv_cache:
         # Paged KV pool (continuous batching): per-request block tables and
-        # lengths; single-token decode only.  The new K/V is written into
-        # the page slot holding position lens[b]; rows with write_mask False
-        # (finished / idle) write into the reserved null block 0 instead so
-        # their tables never overflow and all shapes stay static.
-        assert s == 1 and xattn_kv is None, \
-            "paged KV caches serve single-token decode only"
+        # lengths; single-token decode or causal prefill chunks.  The new
+        # K/V is written into the page slot(s) holding positions
+        # lens[b]..lens[b]+s-1; rows with write_mask False (finished /
+        # idle) write into the reserved null block 0 instead so their
+        # tables never overflow and all shapes stay static.
+        assert xattn_kv is None, \
+            "paged KV caches serve self-attention only"
         assert cfg.sliding_window is None, \
             "paged KV caches do not model sliding windows (no ring blocks)"
         assert cfg.mrope_sections is None, \
@@ -465,6 +544,21 @@ def attention(
         bt = kv_cache["block_tables"]
         lens = kv_cache["lens"]
         wm = kv_cache.get("write_mask")
+        if s > 1:
+            # Chunked prefill: the chunk attends all pool positions < lens
+            # plus its own causal prefix, and its K/V lands straight in the
+            # pool pages (in-kernel for the fused plan) — no dense
+            # intermediate cache, no pack_prompt.
+            n_tok = kv_cache["chunk_len"]
+            impl = ("fused" if backend_lib.paged_attn_enabled(mode)
+                    else "reference")
+            out, k_pages, v_pages = attend_prefill_paged(
+                q, k, v, kv_cache["k"], kv_cache["v"], bt, lens, n_tok,
+                wm, impl=impl,
+                has_past=kv_cache.get("pf_has_past", True))
+            y = layers.dense(p["o"], out.reshape(b, s, cfg.n_heads * hd),
+                             mode, path="attn/o")
+            return y.astype(dt), {"k": k_pages, "v": v_pages}
         k_pages, v_pages = kv_cache["k"], kv_cache["v"]
         int8_pool = isinstance(k_pages, quant_lib.QTensor)
         bs_blk = (k_pages.q if int8_pool else k_pages).shape[1]

@@ -337,6 +337,45 @@ def prefill_paged(params, batch, cfg, *, pages, block_table, max_len: int,
     return logits, kv_pool.pack_prompt(pages, caches["kv"], block_table)
 
 
+def prefill_chunk(params, tokens, cfg, *, pages, block_tables, pos, n_tok,
+                  write_mask=None, has_past: bool = True, mode=None):
+    """One causal chunk of paged prefill: advance each row's prompt by up
+    to ``tokens.shape[1]`` positions, writing the chunk's K/V straight
+    into the pool pages.
+
+    ``tokens`` [B, C] holds each row's next prompt slice (right-padded for
+    ragged tails); ``pos`` [B] is the page-aligned chunk start (tokens
+    already in the pool — C must be a block_size multiple so chunks stay
+    page-aligned); ``n_tok`` [B] the valid tokens in this slice;
+    ``write_mask`` [B] bool marks rows actually prefilling (others attend
+    garbage, discarded, and write only to the null block).  Unlike
+    :func:`prefill_paged` there is NO dense intermediate cache and no
+    ``pack_prompt`` scatter — the chunk attends past pool pages plus its
+    own causal prefix and lands its K/V in the pool directly (in-kernel
+    for ``DeploymentPlan(paged_attn=True)``).
+
+    Returns ``(logits [B, V] at each row's last valid position, pages)``.
+    Dense-attention archs only, like the paged pool itself.
+    """
+    assert cfg.arch_type == "dense", \
+        "paged KV pools serve dense-attention archs only"
+    x = _embed_inputs(params, {"tokens": tokens}, cfg)
+    caches = {"kv": pages, "block_tables": block_tables,
+              "lens": jnp.asarray(pos, jnp.int32),
+              "chunk_len": jnp.asarray(n_tok, jnp.int32),
+              "pf_has_past": bool(has_past)}
+    if write_mask is not None:
+        caches["write_mask"] = jnp.asarray(write_mask, bool)
+    h, caches = transformer.decode_stack(params["stack"], x, cfg, caches,
+                                         mode=mode)
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    idx = jnp.clip(jnp.asarray(n_tok, jnp.int32) - 1, 0,
+                   tokens.shape[1] - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = logits_fn(params, h_last, cfg, mode)
+    return logits[:, 0], caches["kv"]
+
+
 def _prefill_stack(params, x, cfg, caches, *, positions, mode, enc_out):
     """Forward + cache fill.  Mirrors transformer.apply_stack but emits the
     K/V (or SSM state) of every layer."""

@@ -306,7 +306,8 @@ def decode_stack(params, x, cfg, caches: dict, *, positions=None, mode=None):
         # scanned like the dense cache); the block tables / per-request
         # lengths / write mask are layer-invariant and close over the scan.
         shared = {key: caches[key]
-                  for key in ("block_tables", "lens", "write_mask")
+                  for key in ("block_tables", "lens", "write_mask",
+                              "chunk_len", "pf_has_past")
                   if key in caches}
 
         def body(h, xs):

@@ -4,6 +4,11 @@ State machine (one :class:`ScheduledRequest` per admitted request):
 
     WAITING --admit--> PREFILL --pack+join--> DECODE --stop/length--> DONE
 
+(Under chunked prefill the PREFILL state spans several scheduler rounds —
+``pf_written`` tracks how much of the prompt has landed in the pool; the
+PREFILL->DECODE edge fires when the final chunk samples the first token
+inside a mixed segment instead of at a blocking per-request prefill.)
+
 * **FCFS** — the arrival queue is strictly ordered; the head is admitted as
   soon as (a) a batch row is free and (b) the pool can commit its worst
   case.  A blocked head blocks the queue (no reordering: later short
@@ -75,6 +80,7 @@ class ScheduledRequest:
     total_blocks: int             # worst-case reservation
     ctx_len: int = 0              # cache positions written (prompt + decoded)
     n_out: int = 0                # tokens emitted
+    pf_written: int = 0           # chunked prefill: prompt tokens in the pool
     admitted_step: int = -1
     first_token_step: int = -1
     finished_step: int = -1

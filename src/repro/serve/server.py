@@ -11,10 +11,27 @@ adder network keeps every bitline busy.
 
 Execution shape:
 
-* **Prefill** (one jitted dispatch per admitted request, cached per prompt
-  bucket) — ``model.prefill_paged`` runs the bucketed prompt forward,
-  packs its K/V straight into the request's pool blocks, and samples the
-  first token with the request-id-folded RNG.
+* **Prefill** — two modes:
+
+  - *blocking* (default): one jitted dispatch per admitted request,
+    cached per prompt bucket — ``model.prefill_paged`` runs the bucketed
+    prompt forward, packs its K/V into the request's pool blocks
+    (``pack_prompt``), and samples the first token with the
+    request-id-folded RNG.  Admission rounds join with ONE batched
+    device->host tok0 read (never one blocking ``int(tok0[0])`` per
+    request).
+  - *chunked* (``chunked_prefill=True``): admission dispatches nothing.
+    Each PREFILL request advances ``prefill_chunk`` tokens per segment
+    inside the SAME jitted segment body as the decoding rows (mixed
+    batch, one dispatch): a pow2-bucketed sub-batch of prefilling rows
+    runs ``model.prefill_chunk``, whose causal chunk attends past pool
+    pages plus its own prefix and lands its K/V straight in the pool —
+    no dense intermediate cache, no ``pack_prompt``, and with
+    ``paged_attn=True`` the write happens in-kernel
+    (kernels/paged_attention flash prefill).  The final chunk samples
+    the first token in-segment, so the admission host sync disappears
+    from the steady state and one long prompt never stalls the loop
+    (Sarathi/vLLM-style chunked prefill).
 * **Decode segments** (ONE jitted dispatch each) — a ``lax.while_loop`` of
   up to ``segment_len`` fused decode+sample steps over the whole batch,
   carrying (pages, per-row tokens/steps/lengths/done) on device and
@@ -45,7 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterator, Sequence
+from typing import Any, Iterator, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -69,11 +86,17 @@ class RequestResult:
     admitted_step: int
     first_token_step: int
     finished_step: int
+    ttft_seconds: float = float("nan")   # eligible -> first token, wall
 
     @property
     def latency_steps(self) -> int:
         """Arrival -> completion, in sim decode steps."""
         return self.finished_step - self.arrival_step
+
+    @property
+    def ttft_steps(self) -> int:
+        """Arrival -> first sampled token, in sim decode steps."""
+        return self.first_token_step - self.arrival_step
 
 
 class ContinuousEngine:
@@ -95,7 +118,9 @@ class ContinuousEngine:
                  defrag_interval: int | None = None,
                  defrag_threshold: float | None = 0.5,
                  defrag_min_holes: int = 4,
-                 paged_attn: bool = False):
+                 paged_attn: bool = False,
+                 chunked_prefill: bool = False,
+                 prefill_chunk: int | None = None):
         if cfg.arch_type != "dense" or cfg.sliding_window is not None:
             raise ValueError(
                 "continuous batching serves dense-attention archs without "
@@ -119,6 +144,23 @@ class ContinuousEngine:
         self.max_batch = max_batch
         self.block_size = block_size
         self.segment_len = segment_len
+        self.chunked_prefill = chunked_prefill
+        if prefill_chunk is None:
+            # Autotuned tokens-per-chunk (measured entry when a tuned table
+            # is loaded, deterministic heuristic otherwise).
+            kvh = cfg.n_kv_heads
+            dtype = (jnp.int8 if getattr(cfg, "kv_cache_dtype", "bf16")
+                     == "int8" else jnp.float32)
+            prefill_chunk = autotune.choose_prefill_chunk(
+                max_batch, kvh, block_size, dtype,
+                head_dim=cfg.resolved_head_dim,
+                groups=cfg.n_heads // kvh)
+        if prefill_chunk % block_size != 0 or prefill_chunk < block_size:
+            raise ValueError(
+                f"prefill_chunk ({prefill_chunk}) must be a positive "
+                f"multiple of block_size ({block_size}) so chunk starts "
+                "stay page-aligned")
+        self.prefill_chunk = int(prefill_chunk)
         self.defrag_interval = defrag_interval
         self.defrag_threshold = defrag_threshold
         self.defrag_min_holes = defrag_min_holes
@@ -133,15 +175,28 @@ class ContinuousEngine:
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.pages = kv_pool.init_pages(cfg, kv_blocks, block_size, dtype)
         self._fn_cache: dict = {}
-        # Host->device dispatch accounting (jitted executions).
+        # Host->device dispatch accounting (jitted executions) and
+        # device->host sync accounting (blocking transfers: one per segment
+        # harvest and one per admission *round*, never one per request).
         self.dispatch_count = 0
         self.last_run_segments = 0
         self.last_run_prefills = 0
+        self.last_run_prefill_chunks = 0
         self.last_run_dispatches = 0
+        self.last_run_host_syncs = 0
         self.last_run_defrags = 0
         self.last_run_prefill_seconds = 0.0
+        self.last_run_ttft_seconds: dict[int, float] = {}
         self.occupancy_trace: list[tuple[int, float]] = []
         self.fragmentation_trace: list[tuple[int, float]] = []
+
+    def ttft_percentile(self, pct: float) -> float:
+        """Wall-clock time-to-first-token percentile over the last run
+        (eligible-for-admission -> first sampled token harvested)."""
+        vals = list(self.last_run_ttft_seconds.values())
+        if not vals:
+            return float("nan")
+        return float(np.percentile(np.asarray(vals, np.float64), pct))
 
     def _dispatch(self, fn, *args):
         self.dispatch_count += 1
@@ -177,15 +232,9 @@ class ContinuousEngine:
         self._fn_cache[key] = fn
         return fn
 
-    def _segment_fn(self, plan, greedy: bool, seg_len: int, stop_w: int):
-        """ONE jitted dispatch: up to `seg_len` decode steps for the whole
-        batch, early-exiting when every row is done.  Reuses the inner
-        engine's fused decode+sample step over the paged-pool cache view."""
-        key = ("cb_segment", plan, greedy, seg_len, stop_w)
-        if key in self._fn_cache:
-            return self._fn_cache[key]
-        step = self.engine.make_step(plan, greedy)
-
+    def _decode_loop(self, step, seg_len: int):
+        """Shared decode-segment body: up to `seg_len` fused decode+sample
+        steps over the whole batch, early-exiting when every row is done."""
         def seg(params, pages, tables, tok, n_out, lens, done, rids,
                 max_new, stops, rng, temperature, pad_token):
             mb = tok.shape[0]
@@ -221,6 +270,72 @@ class ContinuousEngine:
                     (jnp.asarray(0, jnp.int32), tok, n_out, lens, done,
                      pages, out_t, out_lp))
             return pages, tok, n_out, lens, done, out_t, out_lp, i
+
+        return seg
+
+    def _segment_fn(self, plan, greedy: bool, seg_len: int, stop_w: int):
+        """ONE jitted dispatch: a pure decode segment.  Reuses the inner
+        engine's fused decode+sample step over the paged-pool cache view."""
+        key = ("cb_segment", plan, greedy, seg_len, stop_w)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        fn = jax.jit(self._decode_loop(self.engine.make_step(plan, greedy),
+                                       seg_len))
+        self._fn_cache[key] = fn
+        return fn
+
+    def _mixed_segment_fn(self, plan, greedy: bool, seg_len: int,
+                          stop_w: int, chunk: int, pb: int,
+                          has_past: bool):
+        """ONE jitted dispatch: a chunked-prefill prologue (rows in PREFILL
+        advance up to `chunk` prompt tokens straight into the pool — no
+        dense intermediate cache, no pack_prompt) followed by the same
+        decode segment as :meth:`_segment_fn`.
+
+        The prologue runs over a ``pb``-row sub-batch holding ONLY the
+        prefilling rows (``pf_rows`` gathers their tables/rids inside the
+        jit; ``pb`` is pow2-bucketed so the compile count stays O(log
+        max_batch)) — decode-only rows cost no chunk FLOPs, exactly like
+        the blocking path's B=1 prefill, but without its extra dispatch.
+        Rows whose final chunk lands this segment sample their first token
+        from the chunk logits (identical request-id-folded RNG as the
+        blocking prefill) and join decode inside the same dispatch; the
+        per-admission ``int(tok0[0])`` host sync is gone from the steady
+        state.
+
+        ``pf_tables`` rides in separately at its own tight width (the
+        prefilling rows' span only, pow2-bucketed) and ``has_past`` is a
+        static all-first-chunks hint — short prompts, the common case,
+        pay no past-page gather at all."""
+        key = ("cb_mixed", plan, greedy, seg_len, stop_w, chunk, pb,
+               has_past)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        cfg = self.cfg
+        sample = self.engine.make_sample(plan, greedy)
+        loop = self._decode_loop(self.engine.make_step(plan, greedy),
+                                 seg_len)
+
+        def seg(params, pages, tables, pf_rows, pf_tables, pf_tok, pf_pos,
+                pf_cnt, pf_on, pf_fin, tok, n_out, lens, done, rids,
+                max_new, stops, rng, temperature, pad_token):
+            logits0, pages = model_lib.prefill_chunk(
+                params, pf_tok, cfg, pages=pages, block_tables=pf_tables,
+                pos=pf_pos, n_tok=pf_cnt, write_mask=pf_on,
+                has_past=has_past, mode=plan)
+            tok0 = sample(logits0, rng, rids[pf_rows],
+                          jnp.asarray(0, jnp.int32), temperature)
+            fin = pf_on & pf_fin
+            # Scatter the sub-batch back onto the full rows.  Padding
+            # entries point at a non-prefilling row and write its own
+            # current value (a deterministic no-op), so duplicate indices
+            # never race a real update.
+            tok = tok.at[pf_rows].set(jnp.where(fin, tok0, tok[pf_rows]))
+            done = done.at[pf_rows].set(done[pf_rows] & ~fin)
+            lens = lens.at[pf_rows].set(
+                jnp.where(pf_on, pf_pos + pf_cnt, lens[pf_rows]))
+            return loop(params, pages, tables, tok, n_out, lens, done,
+                        rids, max_new, stops, rng, temperature, pad_token)
 
         fn = jax.jit(seg)
         self._fn_cache[key] = fn
@@ -296,9 +411,12 @@ class ContinuousEngine:
 
         self.last_run_segments = 0
         self.last_run_prefills = 0
+        self.last_run_prefill_chunks = 0
         self.last_run_dispatches = 0
+        self.last_run_host_syncs = 0
         self.last_run_defrags = 0
         self.last_run_prefill_seconds = 0.0
+        self.last_run_ttft_seconds = {}
         self.occupancy_trace = []
         self.fragmentation_trace = []
 
@@ -307,7 +425,7 @@ class ContinuousEngine:
 
         try:
             yield from self._serve_loop(
-                sched, seg_fn, pad, rng, temp, plan, greedy,
+                sched, seg_fn, stop_w, pad, rng, temp, plan, greedy,
                 tok, n_out, lens, done, rids, max_new, stops, tables,
                 streams)
         finally:
@@ -317,13 +435,26 @@ class ContinuousEngine:
             for sr in list(sched.running.values()):
                 sched.finish(sr, -1)
 
-    def _serve_loop(self, sched, seg_fn, pad, rng, temp, plan, greedy,
-                    tok, n_out, lens, done, rids, max_new, stops, tables,
-                    streams) -> Iterator[dict]:
+    def _serve_loop(self, sched, seg_fn, stop_w, pad, rng, temp, plan,
+                    greedy, tok, n_out, lens, done, rids, max_new, stops,
+                    tables, streams) -> Iterator[dict]:
         now = 0
         n_loops = 0
+        chunked = self.chunked_prefill
+        chunk = self.prefill_chunk
+        mb = tok.shape[0]
+        eligible_wall: dict[int, float] = {}
         while sched.has_work:
             n_loops += 1
+            # TTFT clock: a request becomes eligible the first round the
+            # sim reaches its arrival; wall TTFT is eligible -> first
+            # sampled token harvested (so queueing behind a busy pool AND
+            # head-of-line prefill stalls both count).
+            t_round = time.perf_counter()
+            for r in sched.waiting:
+                if r.arrival_step > now:
+                    break
+                eligible_wall.setdefault(r.rid, t_round)
             # Defrag policy: a fixed interval when configured (tests /
             # worst-case bounding), else adaptively whenever the live span's
             # hole fraction crosses the threshold — keeps block tables
@@ -340,21 +471,51 @@ class ContinuousEngine:
                   and self.allocator.fragmentation()
                   >= self.defrag_threshold):
                 tables = self._maybe_defrag(sched, tables)
+            pending_tok0: list[tuple[ScheduledRequest, Any]] = []
+            pf_wall = 0.0
             for sr in sched.admit_ready(now):
-                self._admit(sr, plan, greedy, rng, temp)
                 row, req = sr.row, sr.req
-                lens[row] = req.prompt_len
                 n_out[row] = 0
-                done[row] = False
                 rids[row] = req.rid
                 max_new[row] = req.max_new
                 stops[row] = -1
                 stops[row, :len(req.stop_tokens)] = req.stop_tokens
                 tables[row] = kv_pool.NULL_BLOCK
                 tables[row, :len(sr.blocks)] = sr.blocks
-                tok[row] = sr._tok0
                 streams[req.rid] = ([], [])
+                if chunked:
+                    # The prompt streams into the pool chunk by chunk
+                    # inside the mixed segments; the row idles in the
+                    # decode loop (done) until its final chunk samples the
+                    # first token.  Admission itself dispatches nothing.
+                    sr.pf_written = 0
+                    sr.ctx_len = 0
+                    lens[row] = 0
+                    done[row] = True
+                    tok[row] = 0
+                else:
+                    lens[row] = req.prompt_len
+                    done[row] = False
+                    t0 = time.perf_counter()
+                    pending_tok0.append(
+                        (sr, self._admit(sr, plan, greedy, rng, temp)))
+                    pf_wall += time.perf_counter() - t0
                 yield {"event": "admit", "rid": req.rid, "step": now}
+            if pending_tok0:
+                # ONE device->host transfer for the whole admission round:
+                # the per-request prefill dispatches pipeline on device and
+                # the round joins once, instead of each admission blocking
+                # on its own int(tok0[0]).
+                t0 = time.perf_counter()
+                vals = jax.device_get([t for _, t in pending_tok0])
+                self.last_run_host_syncs += 1
+                for (sr, _), v in zip(pending_tok0, vals):
+                    sr._tok0 = int(v[0])
+                    tok[sr.row] = sr._tok0
+                # Dispatch + join time only: the run_stream consumer's
+                # per-event work between admissions is not prefill cost.
+                self.last_run_prefill_seconds += \
+                    pf_wall + (time.perf_counter() - t0)
             self.occupancy_trace.append((now, self.allocator.occupancy()))
             self.fragmentation_trace.append(
                 (now, self.allocator.fragmentation()))
@@ -365,30 +526,102 @@ class ContinuousEngine:
                 now = nxt                   # idle pool: jump to next arrival
                 continue
 
-            # Grow block tables to cover this segment's worst-case writes.
+            # Grow block tables to cover this segment's worst-case writes;
+            # collect the prefill-chunk work list (rows still streaming
+            # their prompt).  Mid-prefill rows need no growth — their
+            # prompt blocks were allocated at admission and chunk-page
+            # writes past them land on null-table entries; a row whose
+            # FINAL chunk lands this segment starts decoding inside it, so
+            # it grows like a decode row.
+            w_need = 1
+            pf_rows: list[tuple[int, ScheduledRequest, int, bool]] = []
             for row, sr in sched.running.items():
-                new_blocks = sched.ensure_capacity(
-                    sr, sr.ctx_len + self.segment_len)
-                if new_blocks:
-                    n_have = len(sr.blocks)
-                    tables[row, n_have - len(new_blocks):n_have] = new_blocks
+                if chunked and sr.state is State.PREFILL:
+                    cnt = min(chunk, sr.req.prompt_len - sr.pf_written)
+                    fin = sr.pf_written + cnt >= sr.req.prompt_len
+                    pf_rows.append((row, sr, cnt, fin))
+                    span = sr.pf_written + chunk
+                    if fin:
+                        span = max(span,
+                                   sr.req.prompt_len + self.segment_len)
+                        new_blocks = sched.ensure_capacity(
+                            sr, sr.req.prompt_len + self.segment_len)
+                        if new_blocks:
+                            n_have = len(sr.blocks)
+                            tables[row,
+                                   n_have - len(new_blocks):n_have] = \
+                                new_blocks
+                else:
+                    span = int(lens[row]) + self.segment_len
+                    new_blocks = sched.ensure_capacity(
+                        sr, sr.ctx_len + self.segment_len)
+                    if new_blocks:
+                        n_have = len(sr.blocks)
+                        tables[row, n_have - len(new_blocks):n_have] = \
+                            new_blocks
+                w_need = max(w_need,
+                             kv_pool.blocks_for(span, self.block_size))
 
             # Dispatch only the live-width prefix of the tables: every
-            # row's blocks (incl. this segment's growth) sit in the first
-            # ceil((max lens + segment_len) / block_size) columns, so the
-            # device never sees the pool-sized table tail.  The width is
-            # bucketed to a power of two, bounding recompiles at O(log
+            # row's blocks (incl. this segment's growth and prefill-chunk
+            # span) sit in the first w_need columns, so the device never
+            # sees the pool-sized table tail.  The width is bucketed to a
+            # power of two, bounding recompiles at O(log
             # max_blocks_per_req) while both the gather reference and the
             # fused kernel scale with live tokens instead of kv_blocks.
-            w_need = kv_pool.blocks_for(
-                int(lens.max()) + self.segment_len, self.block_size)
-            w = min(tables.shape[1], autotune.next_pow2(max(w_need, 1)))
+            w = min(tables.shape[1], autotune.next_pow2(w_need))
             seg_tables = np.ascontiguousarray(tables[:, :w])
 
+            if pf_rows:
+                # Mixed batch, ONE dispatch: chunk-prefill prologue over a
+                # pow2-bucketed sub-batch of ONLY the prefilling rows +
+                # the decode segment for everyone else.  Padding slots
+                # point at a non-prefilling row (a masked no-op, see
+                # _mixed_segment_fn).
+                pb = min(mb, autotune.next_pow2(len(pf_rows)))
+                pf_set = {row for row, *_ in pf_rows}
+                pad_row = next((r for r in range(mb) if r not in pf_set),
+                               0)
+                pf_idx = np.full(pb, pad_row, np.int32)
+                pf_tok = np.zeros((pb, chunk), np.int32)
+                pf_pos = np.zeros(pb, np.int32)
+                pf_cnt = np.zeros(pb, np.int32)
+                pf_on = np.zeros(pb, bool)
+                pf_fin = np.zeros(pb, bool)
+                for i, (row, sr, cnt, fin) in enumerate(pf_rows):
+                    start = sr.pf_written
+                    pf_idx[i] = row
+                    pf_tok[i, :cnt] = sr.req.prompt[start:start + cnt]
+                    pf_pos[i] = start
+                    pf_cnt[i] = cnt
+                    pf_on[i] = True
+                    pf_fin[i] = fin
+                # The prologue's tables at their own tight width: just the
+                # prefilling rows' chunk spans, pow2-bucketed.  First-chunk
+                # rounds (all pos 0 — every short prompt) additionally
+                # skip the past gather entirely (static has_past hint).
+                pf_w_need = kv_pool.blocks_for(
+                    int((pf_pos + pf_cnt).max()), self.block_size)
+                pf_w = min(tables.shape[1],
+                           autotune.next_pow2(max(pf_w_need, 1)))
+                pf_tables = np.ascontiguousarray(tables[pf_idx, :pf_w])
+                has_past = bool(pf_pos.max() > 0)
+                mixed_fn = self._mixed_segment_fn(
+                    plan, greedy, self.segment_len, stop_w, chunk, pb,
+                    has_past)
+                outs = self._dispatch(
+                    mixed_fn, self.params, self.pages, seg_tables, pf_idx,
+                    pf_tables, pf_tok, pf_pos, pf_cnt, pf_on, pf_fin, tok,
+                    n_out, lens, done, rids, max_new, stops, rng, temp,
+                    pad)
+                self.last_run_prefill_chunks += len(pf_rows)
+            else:
+                outs = self._dispatch(
+                    seg_fn, self.params, self.pages, seg_tables, tok,
+                    n_out, lens, done, rids, max_new, stops, rng, temp,
+                    pad)
             pages, tok_d, n_out_d, lens_d, done_d, out_t, out_lp, i_exec = \
-                self._dispatch(seg_fn, self.params, self.pages, seg_tables,
-                               tok, n_out, lens, done, rids, max_new, stops,
-                               rng, temp, pad)
+                outs
             self.pages = pages
             self.last_run_segments += 1
             # ONE device->host transfer for the whole harvest (np.array
@@ -397,15 +630,26 @@ class ContinuousEngine:
             tok, n_out_new, lens, done, out_t, out_lp, i_exec = (
                 np.array(a) for a in jax.device_get(
                     (tok_d, n_out_d, lens_d, done_d, out_t, out_lp, i_exec)))
+            self.last_run_host_syncs += 1
+            t_harvest = time.perf_counter()
             n_out = n_out_new          # sr.n_out still holds the pre-segment
             #                            count until each row is harvested
+            for row, sr, cnt, fin in pf_rows:
+                sr.pf_written += cnt
+                sr.ctx_len = sr.pf_written
 
             for row, sr in list(sched.running.items()):
+                if chunked and sr.state is State.PREFILL \
+                        and sr.pf_written < sr.req.prompt_len:
+                    continue               # mid-prefill: nothing to harvest
                 cnt = int(n_out_new[row]) - sr.n_out
                 if cnt > 0:
                     if sr.n_out == 0:
                         sr.first_token_step = now + 1
                         sr.state = State.DECODE
+                        self.last_run_ttft_seconds[sr.rid] = (
+                            t_harvest
+                            - eligible_wall.get(sr.rid, t_harvest))
                     streams[sr.rid][0].extend(
                         int(t) for t in out_t[row, :cnt])
                     streams[sr.rid][1].extend(
@@ -435,16 +679,21 @@ class ContinuousEngine:
                         arrival_step=sr.req.arrival_step,
                         admitted_step=sr.admitted_step,
                         first_token_step=sr.first_token_step,
-                        finished_step=sr.finished_step)
+                        finished_step=sr.finished_step,
+                        ttft_seconds=self.last_run_ttft_seconds.get(
+                            sr.rid, float("nan")))
                     yield {"event": "finish", "rid": sr.rid,
                            "step": sr.finished_step, "result": result}
             now += int(i_exec)
 
     # ---------------------------------------------------------------- admit
 
-    def _admit(self, sr: ScheduledRequest, plan, greedy, rng, temp) -> None:
-        """PREFILL: bucketed prompt forward packed into the pool + first
-        token (one jitted dispatch, cached per bucket)."""
+    def _admit(self, sr: ScheduledRequest, plan, greedy, rng, temp):
+        """Blocking-prefill admission: bucketed prompt forward packed into
+        the pool + first-token sample (one jitted dispatch, cached per
+        bucket).  Returns the DEVICE tok0 array — the caller joins one
+        admission round with a single batched device->host read instead of
+        a per-request ``int(tok0[0])`` sync."""
         req = sr.req
         batch = self.engine.bucket(
             {"tokens": jnp.asarray(req.prompt[None, :])})
@@ -454,11 +703,9 @@ class ContinuousEngine:
                          np.int32)
         bt_pf[:len(sr.blocks)] = sr.blocks
         fn = self._prefill_fn(plan, greedy, bucket_len, with_length)
-        t0 = time.perf_counter()
         tok0, self.pages = self._dispatch(
             fn, self.params, self.pages, batch["tokens"],
             jnp.asarray(req.prompt_len, jnp.int32), bt_pf,
             jnp.asarray([req.rid], jnp.int32), rng, temp)
-        sr._tok0 = int(tok0[0])          # blocks on the prefill
-        self.last_run_prefill_seconds += time.perf_counter() - t0
         self.last_run_prefills += 1
+        return tok0

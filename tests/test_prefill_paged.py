@@ -1,0 +1,271 @@
+"""Fused flash-prefill kernel: causal-chunk parity against the gather
+reference and the one-shot prefill, in-kernel int8 page writes matching
+``pack_prompt`` quantization, ragged tails, masked rows, and the
+prefill-chunk autotune table."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+from repro.core import quant
+from repro.kernels import autotune
+from repro.kernels.paged_attention import ops as pops
+from repro.kernels.paged_attention import ref as pref
+from repro.models import attention as attn_lib
+from repro.models import model as M
+from repro.serve import kv_pool
+
+B, C, KVH, G, D, BS, NB, W = 3, 8, 2, 2, 16, 4, 14, 6
+H = KVH * G
+
+
+def _chunk_inputs(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, C, H, D), jnp.float32)
+    k_new = jax.random.normal(ks[1], (B, C, KVH, D), jnp.float32)
+    v_new = jax.random.normal(ks[2], (B, C, KVH, D), jnp.float32)
+    # row 0: 8 past tokens (2 pages) + full chunk; row 1: fresh prompt with
+    # a ragged 5-token tail; row 2: 4 past tokens, full chunk.
+    tables = np.zeros((B, W), np.int32)
+    tables[0, :4] = [1, 2, 3, 4]
+    tables[1, :2] = [5, 6]
+    tables[2, :3] = [7, 8, 9]
+    pos = np.array([8, 0, 4], np.int32)
+    n_tok = np.array([8, 5, 8], np.int32)
+    wm = np.array([1, 1, 1], np.int32)
+    return q, k_new, v_new, jnp.asarray(tables), pos, n_tok, wm
+
+
+def _pool(int8: bool, seed=3):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    shape = (NB, BS, KVH, D)
+    if int8:
+        def qt(k):
+            codes = jax.random.randint(k, shape, -127, 128,
+                                       jnp.int32).astype(jnp.int8)
+            scale = jnp.full((*shape[:-1], 1), 0.05, jnp.bfloat16)
+            return quant.QTensor(codes, scale)
+        return qt(k1), qt(k2)
+    return (jax.random.normal(k1, shape, jnp.float32),
+            jax.random.normal(k2, shape, jnp.float32))
+
+
+def _codes(pages):
+    return pages.q if isinstance(pages, quant.QTensor) else pages
+
+
+@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("backend", ["emulate", "interpret"])
+def test_prefill_matches_gather_reference(int8, backend):
+    """Kernel and emulation agree with the gather-then-attend reference on
+    both the attention output and the written pool pages."""
+    q, k_new, v_new, bt, pos, n_tok, wm = _chunk_inputs()
+    kp, vp = _pool(int8)
+    ref_out, ref_k, ref_v = pref.paged_prefill_ref(
+        q, k_new, v_new, kp, vp, bt, pos, n_tok, wm)
+    out, nk, nv = pops.paged_prefill(q, k_new, v_new, kp, vp, bt, pos,
+                                     n_tok, wm, backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-5, atol=2e-5)
+    # page writes: bit-identical on every non-null block (the null block 0
+    # absorbs masked/dead-tail writes and is garbage by contract)
+    for pages, ref in ((nk, ref_k), (nv, ref_v)):
+        np.testing.assert_array_equal(np.asarray(_codes(pages))[1:],
+                                      np.asarray(_codes(ref))[1:])
+        if int8:
+            np.testing.assert_array_equal(np.asarray(pages.scale)[1:],
+                                          np.asarray(ref.scale)[1:])
+
+
+@pytest.mark.parametrize("backend", ["emulate", "interpret"])
+def test_in_kernel_int8_write_matches_quantize_kv(backend):
+    """Satellite: the kernel's in-kernel quantization is bit-identical to
+    ``quantize_kv`` — the grid ``pack_prompt`` scatters for the dense
+    int8 cache."""
+    q, k_new, v_new, bt, pos, n_tok, wm = _chunk_inputs()
+    kp, vp = _pool(int8=True)
+    _, nk, nv = pops.paged_prefill(q, k_new, v_new, kp, vp, bt, pos,
+                                   n_tok, wm, backend=backend)
+    codes, scale = attn_lib.quantize_kv(k_new)
+    # row 0 chunk occupies table slots 2,3 -> blocks 3,4
+    np.testing.assert_array_equal(np.asarray(nk.q[3]),
+                                  np.asarray(codes[0, :BS]))
+    np.testing.assert_array_equal(np.asarray(nk.q[4]),
+                                  np.asarray(codes[0, BS:]))
+    np.testing.assert_array_equal(np.asarray(nk.scale[3])[..., 0],
+                                  np.asarray(scale[0, :BS]))
+    vcodes, _ = attn_lib.quantize_kv(v_new)
+    np.testing.assert_array_equal(np.asarray(nv.q[3]),
+                                  np.asarray(vcodes[0, :BS]))
+
+
+@pytest.mark.parametrize("int8", [False, True])
+def test_masked_rows_leave_pool_untouched(int8):
+    """write_mask=0 rows write only to the null block: every block the
+    masked row's table references keeps its bytes (kernel and emulate)."""
+    q, k_new, v_new, bt, pos, n_tok, _ = _chunk_inputs()
+    wm = np.array([0, 1, 1], np.int32)
+    kp, vp = _pool(int8)
+    for backend in ("emulate", "interpret"):
+        _, nk, _ = pops.paged_prefill(q, k_new, v_new, kp, vp, bt, pos,
+                                      n_tok, wm, backend=backend)
+        for blk in (3, 4):        # row 0's chunk pages, masked
+            np.testing.assert_array_equal(np.asarray(_codes(nk)[blk]),
+                                          np.asarray(_codes(kp)[blk]))
+
+
+def test_ragged_tail_and_fresh_prompt_masking():
+    """Row 1 (pos=0, 5 valid of 8): queries past the tail attend only
+    valid keys; the partial tail page is still written (pad positions are
+    dead until decode overwrites them)."""
+    q, k_new, v_new, bt, pos, n_tok, wm = _chunk_inputs()
+    kp, vp = _pool(False)
+    out, nk, _ = pops.paged_prefill(q, k_new, v_new, kp, vp, bt, pos,
+                                    n_tok, wm, backend="emulate")
+    # a fresh prompt's first query attends ONLY itself
+    o0 = np.asarray(out)[1, 0].reshape(KVH, G, D)
+    np.testing.assert_allclose(
+        o0, np.broadcast_to(np.asarray(v_new)[1, 0][:, None, :],
+                            (KVH, G, D)), rtol=1e-5, atol=1e-5)
+    # valid query 4 must not see pad keys 5..7: recompute with pads zeroed
+    k2 = k_new.at[1, 5:].set(0.0)
+    v2 = v_new.at[1, 5:].set(0.0)
+    out2, _, _ = pops.paged_prefill(q, k2, v2, kp, vp, bt, pos, n_tok, wm,
+                                    backend="emulate")
+    np.testing.assert_allclose(np.asarray(out)[1, :5],
+                               np.asarray(out2)[1, :5],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(nk[6]),
+                                  np.asarray(k_new)[1, 4:])
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=2)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("int8", [False, True])
+def test_prefill_chunk_matches_one_shot(dense_setup, int8):
+    """Chunked ``prefill_chunk`` calls reproduce ``prefill_paged``'s (the
+    pack_prompt path's) first-token logits and pool contents: greedy token
+    identical, valid prompt positions bit-close, int8 codes exact."""
+    cfg, params = dense_setup
+    if int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    bs, nb, prompt_len, chunk = 4, 16, 10, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, prompt_len), 0,
+                                cfg.vocab)
+    pages = kv_pool.init_pages(cfg, nb, bs, jnp.float32)
+    n_blocks = kv_pool.blocks_for(prompt_len, bs)
+    blocks = list(range(1, 1 + n_blocks))
+    bt_pf = np.zeros(kv_pool.blocks_for(16, bs), np.int32)
+    bt_pf[:n_blocks] = blocks
+    logits_ref, pages_ref = M.prefill_paged(
+        params, {"tokens": jnp.pad(prompt, ((0, 0), (0, 6))),
+                 "length": jnp.asarray(prompt_len, jnp.int32)},
+        cfg, pages=dict(pages), block_table=jnp.asarray(bt_pf), max_len=16)
+    tables = np.zeros((1, 6), np.int32)
+    tables[0, :n_blocks] = blocks
+    pg = dict(pages)
+    for c0 in range(0, prompt_len, chunk):
+        cnt = min(chunk, prompt_len - c0)
+        sl = np.zeros((1, chunk), np.int32)
+        sl[0, :cnt] = np.asarray(prompt)[0, c0:c0 + cnt]
+        logits, pg = M.prefill_chunk(
+            params, jnp.asarray(sl), cfg, pages=pg,
+            block_tables=jnp.asarray(tables),
+            pos=np.array([c0], np.int32), n_tok=np.array([cnt], np.int32),
+            write_mask=np.array([True]))
+    lr, lc = np.asarray(logits_ref[:, -1]), np.asarray(logits)
+    assert lr.argmax() == lc.argmax()
+    if not int8:
+        np.testing.assert_allclose(lc, lr, rtol=1e-5, atol=1e-5)
+        # full prompt blocks are bit-close; the ragged block 3 holds pads
+        # past position 10 that differ (dead until decode overwrites them)
+        np.testing.assert_allclose(np.asarray(pg["k"])[:, 1:3],
+                                   np.asarray(pages_ref["k"])[:, 1:3],
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(pg["k"])[:, 3, :2], np.asarray(pages_ref["k"])[:, 3, :2],
+            rtol=1e-6, atol=1e-6)
+    else:
+        np.testing.assert_array_equal(np.asarray(pg["k"].q)[:, 1:3],
+                                      np.asarray(pages_ref["k"].q)[:, 1:3])
+
+
+def test_prefill_chunk_fused_matches_reference(dense_setup):
+    """The fused plan (paged_attn=True) produces the same greedy token and
+    fp-rounding-level logits as the gather reference, chunk by chunk."""
+    import repro.core.backend as backend_lib
+    cfg, params = dense_setup
+    plan = dataclasses.replace(backend_lib.as_plan(None, default="exact"),
+                               paged_attn=True)
+    bs, nb, prompt_len, chunk = 4, 16, 10, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, prompt_len), 0,
+                                cfg.vocab)
+    tables = np.zeros((1, 6), np.int32)
+    tables[0, :3] = [1, 2, 3]
+    outs = {}
+    for mode in (None, plan):
+        pg = dict(kv_pool.init_pages(cfg, nb, bs, jnp.float32))
+        for c0 in range(0, prompt_len, chunk):
+            cnt = min(chunk, prompt_len - c0)
+            sl = np.zeros((1, chunk), np.int32)
+            sl[0, :cnt] = np.asarray(prompt)[0, c0:c0 + cnt]
+            logits, pg = M.prefill_chunk(
+                params, jnp.asarray(sl), cfg, pages=pg,
+                block_tables=jnp.asarray(tables),
+                pos=np.array([c0], np.int32),
+                n_tok=np.array([cnt], np.int32),
+                write_mask=np.array([True]), mode=mode)
+        outs[mode is None] = np.asarray(logits)
+    assert outs[True].argmax() == outs[False].argmax()
+    np.testing.assert_allclose(outs[True], outs[False], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_autotune_prefill_roundtrip():
+    """prefill_entries: record -> dump -> clear -> load reproduces the
+    choice; unmeasured shapes fall back to the block-aligned heuristic."""
+    autotune.clear()
+    try:
+        h = autotune.choose_prefill_chunk(4, 2, 8, jnp.int8, head_dim=64,
+                                          groups=2)
+        assert h % 8 == 0 and h >= 8
+        autotune.record_prefill(4, 2, 8, jnp.int8, 32, head_dim=64,
+                                groups=2)
+        assert autotune.choose_prefill_chunk(
+            4, 2, 8, jnp.int8, head_dim=64, groups=2) == 32
+        text = autotune.dump(path=None)
+        assert "prefill_entries" in text
+        autotune.clear()
+        n = autotune.load(text)
+        assert n >= 1
+        assert autotune.choose_prefill_chunk(
+            4, 2, 8, jnp.int8, head_dim=64, groups=2) == 32
+        # a different key still gets the heuristic
+        assert autotune.choose_prefill_chunk(
+            4, 4, 16, jnp.float32, head_dim=32, groups=1) \
+            == autotune.heuristic_prefill_chunk(16)
+    finally:
+        autotune.clear()
+
+
+def test_measure_prefill_smoke():
+    """measure_prefill times real paged_prefill calls (emulate backend) and
+    records a block-aligned winner."""
+    autotune.clear()
+    try:
+        best, timings = autotune.measure_prefill(
+            2, 2, 4, jnp.float32, head_dim=8, groups=2,
+            candidates=[4, 8], iters=1, backend="emulate")
+        assert best in (4, 8) and set(timings) == {4, 8}
+        assert autotune.choose_prefill_chunk(
+            2, 2, 4, jnp.float32, head_dim=8, groups=2) == best
+    finally:
+        autotune.clear()

@@ -348,3 +348,163 @@ def test_continuous_rejects_bad_requests(dense_setup):
     mrope = cfg_lib.reduced_config("qwen2-vl-72b")
     with pytest.raises(ValueError):
         ContinuousEngine(params, mrope)     # no 3-axis M-RoPE positions
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_chunked_prefill_token_identical(dense_setup, temperature):
+    """Tentpole acceptance: chunked prefill (prompts streamed into the pool
+    chunk by chunk inside mixed segments) serves every request
+    token-identically to the blocking-prefill baseline AND to the isolated
+    engine — greedy and seeded, staggered arrivals, ragged chunk tails."""
+    cfg, params = dense_setup
+    kwargs = dict(max_batch=3, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    key = None if temperature == 0 else jax.random.PRNGKey(7)
+    reqs = _requests(cfg)
+    ce_ref = ContinuousEngine(params, cfg, **kwargs)
+    ce_chk = ContinuousEngine(params, cfg, chunked_prefill=True,
+                              prefill_chunk=8, **kwargs)
+    r0 = ce_ref.run(reqs, temperature=temperature, key=key)
+    r1 = ce_chk.run(reqs, temperature=temperature, key=key)
+    for r in reqs:
+        np.testing.assert_array_equal(r1[r.rid].tokens, r0[r.rid].tokens)
+        np.testing.assert_allclose(r1[r.rid].logprobs, r0[r.rid].logprobs,
+                                   rtol=1e-4, atol=1e-4)
+        ref = _engine_reference(ce_chk, r, temperature=temperature, key=key)
+        np.testing.assert_array_equal(r1[r.rid].tokens,
+                                      np.asarray(ref.tokens)[0])
+    assert ce_chk.allocator.live_blocks == 0
+    # admission dispatches nothing: no per-request prefill calls, ONE
+    # dispatch per segment (mixed or decode-only)
+    assert ce_chk.last_run_prefills == 0
+    assert ce_chk.last_run_prefill_chunks > 0
+    assert ce_chk.last_run_dispatches == ce_chk.last_run_segments
+
+
+def test_chunked_prefill_int8_pool(dense_setup):
+    """Chunked prefill over the int8 paged pool: past chunks are read back
+    dequantized, tokens still match the blocking int8 path at test
+    seeds."""
+    cfg, params = dense_setup
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    kwargs = dict(max_batch=2, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg8, n=3, arrivals=(0, 1, 4), max_new=(5, 8, 6))
+    r0 = ContinuousEngine(params, cfg8, **kwargs).run(reqs)
+    ce = ContinuousEngine(params, cfg8, chunked_prefill=True,
+                          prefill_chunk=8, **kwargs)
+    r1 = ce.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(r1[r.rid].tokens, r0[r.rid].tokens)
+    assert ce.allocator.live_blocks == 0
+
+
+def test_chunked_prefill_fused_no_pack_prompt(dense_setup, monkeypatch):
+    """Acceptance: the fused chunked path (paged_attn=True +
+    chunked_prefill) never calls pack_prompt — prompt K/V lands in the
+    pool straight from the prefill kernel — and stays token-identical to
+    the blocking gather baseline."""
+    from repro.serve import kv_pool as kvp
+
+    def boom(*a, **k):
+        raise AssertionError("pack_prompt must not run on the fused "
+                             "chunked-prefill path")
+
+    cfg, params = dense_setup
+    kwargs = dict(max_batch=3, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg)
+    r0 = ContinuousEngine(params, cfg, **kwargs).run(reqs)
+    monkeypatch.setattr(kvp, "pack_prompt", boom)
+    ce = ContinuousEngine(params, cfg, paged_attn=True,
+                          chunked_prefill=True, prefill_chunk=8, **kwargs)
+    r1 = ce.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(r1[r.rid].tokens, r0[r.rid].tokens)
+    assert ce.allocator.live_blocks == 0
+
+
+def test_chunked_prefill_degenerates_to_one_shot(dense_setup):
+    """chunk_len >= prompt_len: every prompt lands in ONE chunk (one mixed
+    segment), token-identical to the blocking path."""
+    cfg, params = dense_setup
+    kwargs = dict(max_batch=3, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg)                   # prompts are 3..11 tokens
+    r0 = ContinuousEngine(params, cfg, **kwargs).run(reqs)
+    ce = ContinuousEngine(params, cfg, chunked_prefill=True,
+                          prefill_chunk=16, **kwargs)
+    r1 = ce.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(r1[r.rid].tokens, r0[r.rid].tokens)
+    assert ce.last_run_prefill_chunks == len(reqs)
+
+
+def test_chunked_prefill_rejects_unaligned_chunk(dense_setup):
+    cfg, params = dense_setup
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, cfg, kv_blocks=32, block_size=4,
+                         chunked_prefill=True, prefill_chunk=6)
+
+
+def test_ttft_stats_reported(dense_setup):
+    """Satellite: run stats carry wall-clock TTFT per request (eligible ->
+    first sampled token) plus the step-based ttft_steps, for both prefill
+    modes."""
+    cfg, params = dense_setup
+    kwargs = dict(max_batch=2, kv_blocks=32, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    reqs = _requests(cfg, n=3, arrivals=(0, 1, 4), max_new=(5, 8, 6))
+    for chunked in (False, True):
+        ce = ContinuousEngine(params, cfg, chunked_prefill=chunked,
+                              prefill_chunk=8, **kwargs)
+        res = ce.run(reqs)
+        assert set(ce.last_run_ttft_seconds) == {r.rid for r in reqs}
+        for r in reqs:
+            got = res[r.rid]
+            assert got.ttft_seconds > 0.0
+            assert got.ttft_steps >= 1
+            assert got.ttft_seconds == \
+                ce.last_run_ttft_seconds[r.rid]
+        assert ce.ttft_percentile(50) <= ce.ttft_percentile(99)
+
+
+def test_admission_host_syncs_batched(dense_setup):
+    """Satellite: device->host joins happen once per segment harvest plus
+    once per admission ROUND — simultaneous arrivals share one batched
+    tok0 read instead of one blocking int(tok0[0]) each."""
+    cfg, params = dense_setup
+    ce = ContinuousEngine(params, cfg, max_batch=4, kv_blocks=32,
+                          block_size=4, max_blocks_per_req=8,
+                          segment_len=4, seq_bucket=8)
+    # 4 requests, all arriving at step 0 -> ONE admission round
+    reqs = _requests(cfg, n=4, arrivals=(0, 0, 0, 0), max_new=(5, 6, 4, 7))
+    ce.run(reqs)
+    assert ce.last_run_prefills == 4
+    assert ce.last_run_host_syncs == ce.last_run_segments + 1
+    # chunked mode: no admission syncs at all
+    ce2 = ContinuousEngine(params, cfg, max_batch=4, kv_blocks=32,
+                           block_size=4, max_blocks_per_req=8,
+                           segment_len=4, seq_bucket=8,
+                           chunked_prefill=True, prefill_chunk=8)
+    ce2.run(reqs)
+    assert ce2.last_run_host_syncs == ce2.last_run_segments
+
+
+def test_chunked_prefill_backpressure_and_defrag(dense_setup):
+    """Chunked prefill composes with admission backpressure and adaptive
+    defrag: small pool, staggered retire -> every request completes with
+    parity and no leaks."""
+    cfg, params = dense_setup
+    reqs = _requests(cfg, n=5, arrivals=(0, 0, 0, 1, 2),
+                     max_new=(6, 5, 7, 4, 6))
+    kwargs = dict(max_batch=2, kv_blocks=9, block_size=4,
+                  max_blocks_per_req=8, segment_len=4, seq_bucket=8)
+    r0 = ContinuousEngine(params, cfg, **kwargs).run(reqs)
+    ce = ContinuousEngine(params, cfg, chunked_prefill=True,
+                          prefill_chunk=4, defrag_threshold=0.01,
+                          defrag_min_holes=1, **kwargs)
+    r1 = ce.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(r1[r.rid].tokens, r0[r.rid].tokens)
+    assert ce.allocator.live_blocks == 0
