@@ -2,7 +2,7 @@
 # ruff runs only when installed (the CI image always installs it).
 PY ?= python
 
-.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim
+.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim serve-chaos
 
 ci: lint test
 
@@ -20,6 +20,7 @@ bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
 	PYTHONPATH=src $(PY) benchmarks/paged_attention.py --smoke --check --out BENCH_PR4.json
 	PYTHONPATH=src $(PY) benchmarks/prefill.py --smoke --check --out BENCH_PR5.json
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --overload --smoke --out BENCH_PR7.json
 
 # Paged-attention gate: measures fresh (never trusts a checked-in JSON)
 # and asserts the fused path's decode tok/s >= the gather-dense path at
@@ -42,6 +43,14 @@ bench-prefill:
 # smoke: completion, O(1) dispatch/segment, and no-leak invariants).
 serve-sim:
 	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --requests 50 --sim-only
+
+# 50-request seeded chaos smoke: hidden-block pool pressure, forced
+# preemption storms, NaN logits, and surprise cancels through the REAL
+# scheduler/allocator paths.  Asserts surviving requests are bit-identical
+# to the fault-free run, interrupted ones are clean prefixes, and the
+# allocator drains exactly full.
+serve-chaos:
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --chaos --smoke
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

@@ -20,13 +20,31 @@ On CPU absolute numbers are structural, not silicon (kernels run in
 interpret mode); the headline fields are the continuous/static ratio and
 the dispatch counts, which transfer.
 
+Two robustness modes ride on the same harness:
+
+  * --overload (BENCH_PR7.json): the same burst workload through a pool
+    far below its aggregate worst case, once under the reservation
+    baseline (preemption off: admission reserves worst-case blocks) and
+    once preemptive (admit on actual prompt blocks, evict + recompute on
+    growth failure).  Reports max concurrency, preempt / recompute /
+    shed / timeout counts, queue-delay and latency percentiles — and
+    asserts the preemptive scheduler sustains strictly more concurrent
+    requests at equal pool size.
+  * --chaos: seeded FaultInjector chaos (hidden blocks, forced
+    preemptions, NaN logits, surprise cancels) over ~50 requests; every
+    surviving request must be bit-identical to the fault-free run, every
+    interrupted one a clean prefix, and the pool must drain exactly full.
+
 Usage:
   PYTHONPATH=src python benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
   PYTHONPATH=src python benchmarks/serve_traffic.py --requests 50 --sim-only
+  PYTHONPATH=src python benchmarks/serve_traffic.py --overload --smoke
+  PYTHONPATH=src python benchmarks/serve_traffic.py --chaos --requests 50
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -37,7 +55,8 @@ import numpy as np
 from repro import configs as cfg_lib
 from repro.core import backend as backend_lib
 from repro.models import model as model_lib
-from repro.serve import ContinuousEngine, Engine, Request
+from repro.serve import (ContinuousEngine, Engine, FaultInjector, Request,
+                         RequestStatus)
 
 
 def make_workload(n: int, *, vocab: int, mean_interarrival: float,
@@ -157,6 +176,135 @@ def run_static_baseline(eng: Engine, reqs, max_batch: int, *, iters: int):
     return ts[0], t_pf[0], steps
 
 
+def _status_counts(res) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for r in res.values():
+        counts[r.status.value] = counts.get(r.status.value, 0) + 1
+    return counts
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def run_overload(args, cfg, params, plan) -> None:
+    """Overload scenario: a burst workload against a pool far below its
+    aggregate worst case, reservation baseline vs preemptive, equal pool.
+    Writes BENCH_PR7.json."""
+    # Long output budgets against a small pool: reservation admission must
+    # serialize (worst-case blocks reserved up front), preemptive admission
+    # only commits prompt blocks and evicts+recomputes on growth failure.
+    reqs = make_workload(
+        args.requests, vocab=cfg.vocab, mean_interarrival=0.25,
+        prompt_lo=4, prompt_hi=8, new_lo=16, new_hi=32,
+        tail_frac=0.5, seed=args.seed)
+    reqs = [dataclasses.replace(r, deadline_steps=args.deadline_steps)
+            for r in reqs]
+    kv_blocks = args.kv_blocks
+    worst = max(-(-(r.prompt_len + r.max_new + args.seq_bucket)
+                  // args.block_size) for r in reqs)
+    assert worst <= kv_blocks - 1, "pool must at least fit one request"
+    sides = {}
+    for mode in ("off", "recompute"):
+        ce = ContinuousEngine(
+            params, cfg, plan=plan, max_batch=args.max_batch,
+            kv_blocks=kv_blocks, block_size=args.block_size,
+            max_blocks_per_req=worst, segment_len=args.segment_len,
+            seq_bucket=args.seq_bucket, preemption=mode,
+            max_queue=args.max_queue)
+        res = ce.run(reqs)
+        assert ce.allocator.live_blocks == 0, "KV pool leaked blocks"
+        assert ce.allocator.hidden_blocks == 0
+        ok = [r for r in res.values() if r.status is RequestStatus.OK]
+        waits = [r.admitted_step - reqs[r.rid].arrival_step
+                 for r in res.values() if r.admitted_step >= 0]
+        lats = [r.latency_steps for r in ok]
+        sides[mode] = {
+            "max_concurrency": ce.last_run_max_concurrency,
+            "completed_ok": len(ok),
+            "preemptions": ce.last_run_preemptions,
+            "recomputes": ce.last_run_recomputes,
+            "sheds": ce.last_run_sheds,
+            "timeouts": ce.last_run_timeouts,
+            "status_counts": _status_counts(res),
+            "queue_delay_steps_p50": _pct(waits, 50),
+            "queue_delay_steps_p99": _pct(waits, 99),
+            "latency_steps_p50": _pct(lats, 50),
+            "latency_steps_p99": _pct(lats, 99),
+            "ttft_p50_seconds": ce.ttft_percentile(50),
+            "ttft_p99_seconds": ce.ttft_percentile(99),
+        }
+    report = {
+        "bench": "serve_overload",
+        "arch": args.arch,
+        "n_layers": args.layers,
+        "backend": jax.default_backend(),
+        "requests": len(reqs),
+        "max_batch": args.max_batch,
+        "kv_blocks": kv_blocks,
+        "block_size": args.block_size,
+        "segment_len": args.segment_len,
+        "deadline_steps": args.deadline_steps,
+        "max_queue": args.max_queue,
+        "reservation": sides["off"],
+        "preemptive": sides["recompute"],
+        "concurrency_gain":
+            sides["recompute"]["max_concurrency"]
+            / max(sides["off"]["max_concurrency"], 1),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    assert (sides["recompute"]["max_concurrency"]
+            > sides["off"]["max_concurrency"]), \
+        "preemptive admission must sustain strictly more concurrent " \
+        "requests than worst-case reservation at equal pool size"
+    assert sides["recompute"]["completed_ok"] >= sides["off"]["completed_ok"]
+
+
+def run_chaos(args, cfg, params, plan) -> None:
+    """Seeded chaos smoke: fault-free reference run, then the same
+    workload under FaultInjector pressure.  Asserts survivor bit-identity,
+    interrupted-prefix cleanliness, and a fully drained pool."""
+    reqs = make_workload(
+        args.requests, vocab=cfg.vocab, mean_interarrival=1.0,
+        prompt_lo=4, prompt_hi=12, new_lo=6, new_hi=16,
+        tail_frac=0.25, seed=args.seed)
+    ce = ContinuousEngine(
+        params, cfg, plan=plan, max_batch=args.max_batch,
+        kv_blocks=args.kv_blocks, block_size=args.block_size,
+        max_blocks_per_req=-(-(12 + 16 + args.seq_bucket)
+                             // args.block_size),
+        segment_len=args.segment_len, seq_bucket=args.seq_bucket,
+        debug_invariants=True)
+    ref = ce.run(reqs)                       # fault-free reference
+    assert all(r.status is RequestStatus.OK for r in ref.values())
+    fi = FaultInjector(seed=args.seed + 1, hide_prob=0.35,
+                       hide_max=max(args.kv_blocks // 3, 2),
+                       unhide_prob=0.15, preempt_prob=0.3,
+                       poison_prob=0.05, cancel_prob=0.05, stop_round=80)
+    res = ce.run(reqs, faults=fi)
+    assert ce.allocator.live_blocks == 0, "KV pool leaked blocks"
+    assert ce.allocator.hidden_blocks == 0, "hidden blocks leaked"
+    ce.allocator.check_invariants()
+    n_ok = 0
+    for r in reqs:
+        got, want = res[r.rid], np.asarray(ref[r.rid].tokens)
+        if got.status is RequestStatus.OK:
+            np.testing.assert_array_equal(got.tokens, want)
+            n_ok += 1
+        else:
+            assert len(got.tokens) <= len(want)
+            np.testing.assert_array_equal(got.tokens,
+                                          want[:len(got.tokens)])
+    counts = _status_counts(res)
+    print(f"[serve-chaos] {len(reqs)} requests, {len(fi.log)} fault "
+          f"rounds, {ce.last_run_preemptions} preemptions, "
+          f"{ce.last_run_recomputes} recomputes, statuses {counts}: "
+          f"{n_ok} OK bit-identical, interrupted all clean prefixes, "
+          f"pool drained — OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-8b")
@@ -189,8 +337,43 @@ def main() -> None:
     ap.add_argument("--sim-only", action="store_true",
                     help="run the traffic sim as a smoke test (no static "
                     "baseline, no JSON) and assert pool/dispatch invariants")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload scenario: reservation vs preemptive "
+                    "scheduling at equal (small) pool -> BENCH_PR7.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault-injection smoke: survivors must be "
+                    "bit-identical to a fault-free run, pool must drain")
+    ap.add_argument("--deadline-steps", type=int, default=300,
+                    help="per-request deadline for the overload scenario")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue (overload scenario)")
     ap.add_argument("--out", default="BENCH_PR3.json")
     args = ap.parse_args()
+
+    if args.overload or args.chaos:
+        if args.smoke:
+            args.requests = 16 if args.overload else 50
+        if args.chaos:
+            # Small pool: hidden-block pressure and forced preemptions bite.
+            args.max_batch, args.kv_blocks = 4, 24
+            args.block_size = args.segment_len = args.seq_bucket = 8
+        if args.overload:
+            # A pool that fits ONE worst-case request: reservation
+            # serializes, preemptive overlaps on actual prompt blocks.
+            args.max_batch, args.kv_blocks = 4, 9
+            args.block_size = args.segment_len = args.seq_bucket = 8
+            if args.out == "BENCH_PR3.json":
+                args.out = "BENCH_PR7.json"
+        cfg = cfg_lib.reduced_config(args.arch, n_layers=args.layers)
+        plan = backend_lib.load_plan(args.plan)
+        params = model_lib.freeze_params(
+            model_lib.init(jax.random.PRNGKey(0), cfg), a_scale=0.05,
+            plan=plan)
+        if args.overload:
+            run_overload(args, cfg, params, plan)
+        else:
+            run_chaos(args, cfg, params, plan)
+        return
 
     if args.smoke:
         args.requests, args.iters = 12, 3

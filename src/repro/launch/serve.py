@@ -56,6 +56,18 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="continuous: tokens per prefill chunk (block-size "
                     "multiple; default: autotuned)")
+    ap.add_argument("--preemption", default="recompute",
+                    choices=["off", "recompute"],
+                    help="continuous: 'recompute' admits on actual prompt "
+                    "blocks and evicts+recomputes the newest request when "
+                    "KV growth fails; 'off' reserves worst-case blocks at "
+                    "admission (preemption-free baseline)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="continuous: bound the admission queue; arrivals "
+                    "beyond the bound are load-shed (default: unbounded)")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="continuous: retire any request still unfinished "
+                    "this many decode steps after arrival as TIMEOUT")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
@@ -92,36 +104,46 @@ def main():
 
         from repro.serve import ContinuousEngine, Request
 
+        from repro.serve import RequestStatus
+
         ce = ContinuousEngine(
             params, cfg, plan=plan, max_batch=args.max_batch,
             kv_blocks=args.kv_blocks, block_size=args.block_size,
             segment_len=args.segment_len, paged_attn=args.paged_attn,
             chunked_prefill=args.chunked_prefill,
-            prefill_chunk=args.prefill_chunk)
+            prefill_chunk=args.prefill_chunk,
+            preemption=args.preemption, max_queue=args.max_queue)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.poisson(2.0, size=args.batch))
         reqs = [
             Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab, args.prompt_len),
-                    max_new=args.tokens, arrival_step=int(t))
+                    max_new=args.tokens, arrival_step=int(t),
+                    deadline_steps=args.deadline_steps)
             for i, t in enumerate(arrivals)
         ]
         t0 = time.perf_counter()
         res = ce.run(reqs)
         dt = time.perf_counter() - t0
         total = sum(len(r.tokens) for r in res.values())
-        lat = sorted(r.latency_steps for r in res.values())
+        n_ok = sum(r.status is RequestStatus.OK for r in res.values())
+        lat = sorted(r.latency_steps for r in res.values()
+                     if r.admitted_step >= 0) or [0]
         tag = "plan" if args.plan is not None else args.quant
         attn = "paged-attn" if args.paged_attn else "gather"
         pf = (f"chunked-prefill:{ce.prefill_chunk}" if args.chunked_prefill
               else "blocking-prefill")
-        print(f"[{tag}|continuous|{attn}|{pf}] served {len(reqs)} requests "
+        print(f"[{tag}|continuous|{attn}|{pf}|preemption:{args.preemption}] "
+              f"served {len(reqs)} requests "
               f"/ {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. "
               f"compile); {ce.last_run_segments} segments, "
               f"{ce.last_run_dispatches} dispatches, "
               f"{ce.last_run_host_syncs} host syncs, "
-              f"{ce.last_run_defrags} defrags, p50 latency "
-              f"{lat[len(lat)//2]} steps, TTFT p99 "
+              f"{ce.last_run_defrags} defrags, "
+              f"{n_ok}/{len(reqs)} OK ({ce.last_run_preemptions} preempts, "
+              f"{ce.last_run_recomputes} recomputes, "
+              f"{ce.last_run_sheds} shed, {ce.last_run_timeouts} timeout), "
+              f"p50 latency {lat[len(lat)//2]} steps, TTFT p99 "
               f"{ce.ttft_percentile(99)*1e3:.1f}ms, peak pool occupancy "
               f"{max(o for _, o in ce.occupancy_trace):.2f}")
         return

@@ -3,14 +3,16 @@
 - engine.Engine           — static-batch generate (bucketed prefill, ONE
                             jitted prefill+decode dispatch per call)
 - kv_pool                 — paged KV-cache pool (blocks, tables, allocator)
-- scheduler               — request lifecycle + FCFS admission control
+- scheduler               — request lifecycle + preemptive FCFS admission
 - server.ContinuousEngine — continuous batching over the pool
+- faults.FaultInjector    — seeded chaos schedule for robustness tests
 """
 from repro.serve.engine import Engine, GenerationResult
-from repro.serve.scheduler import Request, Scheduler, State
+from repro.serve.faults import FaultInjector
+from repro.serve.scheduler import Request, RequestStatus, Scheduler, State
 from repro.serve.server import ContinuousEngine, RequestResult
 
 __all__ = [
-    "Engine", "GenerationResult", "Request", "Scheduler", "State",
-    "ContinuousEngine", "RequestResult",
+    "Engine", "GenerationResult", "Request", "RequestStatus", "Scheduler",
+    "State", "ContinuousEngine", "RequestResult", "FaultInjector",
 ]

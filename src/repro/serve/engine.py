@@ -124,19 +124,36 @@ class Engine:
         """One fused decode+sample step.  Public: the continuous-batching
         segment loop reuses it verbatim — `caches` may be the dense per-call
         cache OR a paged-pool cache dict (block_tables/lens/write_mask), and
-        `t` may be scalar or per-row."""
+        `t` may be scalar or per-row.
+
+        Returns ``(nxt, lp_tok, ok, caches)``: ``ok`` is a [B] bool that is
+        False for any row whose logits came back non-finite (an overflowed
+        activation, a poisoned weight) — the continuous engine quarantines
+        such rows as FAILED instead of letting one NaN corrupt the batch.
+        ``poison`` ([B] bool, fault injection) overwrites a row's logits
+        with NaN *before* the finite check, exercising the guard through
+        the real datapath."""
         cfg = self.cfg
         sample = self.make_sample(plan, greedy)
 
-        def step(params, tok, caches, rng, rids, t, temperature):
+        def step(params, tok, caches, rng, rids, t, temperature,
+                 poison=None):
             """decode + logprob-of-tok + next-token sample, all on device."""
             logits, caches = model_lib.decode_step(
                 params, {"tokens": tok[:, None]}, caches, cfg, mode=plan)
             last = logits[:, -1]
+            if poison is not None:
+                last = jnp.where(poison[:, None], jnp.nan, last)
+            ok = jnp.all(jnp.isfinite(last.astype(jnp.float32)), axis=-1)
             lp = jax.nn.log_softmax(last.astype(jnp.float32))
             lp_tok = jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
             nxt = sample(last, rng, rids, t, temperature)
-            return nxt, lp_tok, caches
+            # Quarantined rows must still carry well-defined values through
+            # the jitted loop (NaN would propagate into buffers the caller
+            # keeps); the engine retracts their emission host-side.
+            nxt = jnp.where(ok, nxt, 0)
+            lp_tok = jnp.where(ok, lp_tok, 0.0)
+            return nxt, lp_tok, ok, caches
 
         return step
 
@@ -196,8 +213,8 @@ class Engine:
                 # masked; once ALL rows finish the while predicate stops
                 # the loop entirely.
                 toks = toks.at[:, t].set(jnp.where(done, pad_token, tok))
-                nxt, lp, caches = step(params, tok, caches, rng, rids,
-                                       t + 1, temperature)
+                nxt, lp, _, caches = step(params, tok, caches, rng, rids,
+                                          t + 1, temperature)
                 lps = lps.at[:, t].set(jnp.where(done, 0.0, lp))
                 if stop is not None:
                     done = done | jnp.any(tok[:, None] == stop[None, :], -1)
@@ -305,7 +322,7 @@ class Engine:
             # per-token loop (no extra un-jitted device ops per step).
             toks.append(tok if stop is None
                         else jnp.where(done, pad_token, tok))
-            nxt, lp, caches = self._dispatch(
+            nxt, lp, _, caches = self._dispatch(
                 step, self.params, tok, caches, rng, rids,
                 jnp.asarray(t + 1, jnp.int32), temp)
             lps.append(lp if stop is None else jnp.where(done, 0.0, lp))

@@ -136,6 +136,7 @@ class BlockAllocator:
         self._free: collections.deque[int] = collections.deque(
             range(1, num_blocks))
         self._live: set[int] = set()
+        self._hidden: list[int] = []
 
     @property
     def capacity(self) -> int:
@@ -148,6 +149,10 @@ class BlockAllocator:
     @property
     def live_blocks(self) -> int:
         return len(self._live)
+
+    @property
+    def hidden_blocks(self) -> int:
+        return len(self._hidden)
 
     def occupancy(self) -> float:
         return len(self._live) / self.capacity
@@ -196,14 +201,86 @@ class BlockAllocator:
             self._live.discard(b)
             self._free.append(b)
 
+    def hide_blocks(self, n: int) -> int:
+        """Fault injection: withdraw up to `n` FREE blocks from circulation
+        (popped from the free tail, so the id order handed to subsequent
+        allocs is unchanged).  Hidden blocks count as neither free nor
+        live — they simulate pool pressure (a co-tenant, a leak under
+        test) and force admission backpressure / growth-failure
+        preemptions.  Returns how many were actually hidden."""
+        n = min(n, len(self._free))
+        for _ in range(n):
+            self._hidden.append(self._free.pop())
+        return n
+
+    def unhide_all(self) -> int:
+        """Return every hidden block to the free list (fault cleanup; the
+        engine calls this before its end-of-run accounting so a faulted
+        run still ends with the allocator exactly full)."""
+        n = len(self._hidden)
+        self._free.extend(self._hidden)
+        self._hidden = []
+        return n
+
+    def check_invariants(self, tables=None) -> None:
+        """Prove the allocator's books balance; raises RuntimeError on the
+        first violation.  Checks: free + live + hidden == capacity with no
+        overlap and no out-of-range/null ids (a free-list duplicate is the
+        signature of a double-free), and — given `tables`, an iterable of
+        block-id sequences — that tables reference only live blocks (or
+        the null block as padding) and that no block appears in two
+        tables."""
+        free = list(self._free)
+        if len(set(free)) != len(free):
+            raise RuntimeError("allocator: duplicate ids on the free list "
+                               "(double free)")
+        free_s, hid_s = set(free), set(self._hidden)
+        for name, ids in (("free", free_s), ("live", self._live),
+                          ("hidden", hid_s)):
+            bad = [b for b in ids if not 1 <= b < self.num_blocks]
+            if bad:
+                raise RuntimeError(
+                    f"allocator: {name} ids out of range: {sorted(bad)}")
+        for a, b in (("free", "live"), ("free", "hidden"),
+                     ("live", "hidden")):
+            inter = {"free": free_s, "live": self._live,
+                     "hidden": hid_s}[a] & \
+                    {"free": free_s, "live": self._live, "hidden": hid_s}[b]
+            if inter:
+                raise RuntimeError(f"allocator: blocks both {a} and {b}: "
+                                   f"{sorted(inter)}")
+        total = len(free_s) + len(self._live) + len(hid_s)
+        if total != self.capacity:
+            raise RuntimeError(
+                f"allocator: free({len(free_s)}) + live({len(self._live)}) "
+                f"+ hidden({len(hid_s)}) = {total} != capacity "
+                f"({self.capacity}) — block leak or phantom block")
+        if tables is not None:
+            seen: set[int] = set()
+            for ti, table in enumerate(tables):
+                for b in table:
+                    b = int(b)
+                    if b == NULL_BLOCK:
+                        continue
+                    if b not in self._live:
+                        raise RuntimeError(
+                            f"table {ti} references non-live block {b}")
+                    if b in seen:
+                        raise RuntimeError(
+                            f"block {b} owned by two tables")
+                    seen.add(b)
+
     def defrag(self) -> dict[int, int]:
         """Compact live blocks onto the lowest ids; returns {old: new} for
         every moved block (identity moves are omitted).  The caller must
         apply :func:`apply_defrag` to the pages and ALL live block tables
-        before the next device step."""
+        before the next device step.  Hidden blocks (fault injection) stay
+        hidden — they are re-pinned to the compacted free tail."""
         live = sorted(self._live)
         remap = {old: new for new, old in enumerate(live, start=1)
                  if old != new}
         self._live = set(range(1, len(live) + 1))
-        self._free = collections.deque(range(len(live) + 1, self.num_blocks))
+        rest = collections.deque(range(len(live) + 1, self.num_blocks))
+        self._hidden = [rest.pop() for _ in range(len(self._hidden))]
+        self._free = rest
         return remap

@@ -3,33 +3,55 @@
 State machine (one :class:`ScheduledRequest` per admitted request):
 
     WAITING --admit--> PREFILL --pack+join--> DECODE --stop/length--> DONE
+       ^                  |                      |
+       '----- preempt (free blocks, requeue) ----'
 
 (Under chunked prefill the PREFILL state spans several scheduler rounds —
 ``pf_written`` tracks how much of the prompt has landed in the pool; the
 PREFILL->DECODE edge fires when the final chunk samples the first token
 inside a mixed segment instead of at a blocking per-request prefill.)
 
-* **FCFS** — the arrival queue is strictly ordered; the head is admitted as
-  soon as (a) a batch row is free and (b) the pool can commit its worst
-  case.  A blocked head blocks the queue (no reordering: later short
-  requests never starve an earlier long one).
-* **Admission by free blocks** — preemption-free v1: nothing is ever
-  evicted, so admission must guarantee the request can always grow to its
-  worst case, ``blocks_for(prompt_len + max_new)``.  The worst case is
-  *reserved* at admission (counted in ``outstanding``) but *allocated*
-  lazily — prompt blocks at admission, decode blocks segment by segment via
-  :meth:`Scheduler.ensure_capacity` — so the pool's occupancy tracks real
-  usage while growth can never fail.  The invariant
-  ``allocator.free_blocks >= outstanding`` holds at all times; admission
-  backpressures (leaves the head WAITING) exactly when admitting would
-  break it.
-* **No eviction, no leaks** — :meth:`finish` returns every allocated block
-  and releases the unallocated remainder of the reservation; after all
-  requests finish the allocator is exactly full again (tested).
+* **FCFS** — arrivals queue in order; the head is admitted as soon as (a) a
+  batch row is free and (b) the pool can commit its admission need.  A
+  blocked head blocks the queue (no reordering: later short requests never
+  starve an earlier long one).
+* **Preemptive admission** (``preemptive=True``, the continuous engine's
+  default) — admission commits only the request's *actual* prompt blocks,
+  not its worst case.  Decode growth (:meth:`ensure_capacity`) can
+  therefore fail mid-flight; when it does, the engine preempts a victim —
+  **newest-admitted first**, so the oldest request is never evicted by a
+  younger one and always runs to completion (FCFS-fair, guaranteed
+  progress: after evicting every younger request the oldest's worst case
+  fits by the :meth:`submit`-time capacity check).  :meth:`preempt` frees
+  the victim's blocks and requeues it ahead of every never-admitted
+  arrival; re-admission *recomputes* its pool state by prefilling the
+  original prompt plus every token generated so far
+  (``ScheduledRequest.cur_prompt``), which the request-id-folded sampler
+  RNG makes token-identical to an uninterrupted run.
+* **Reservation mode** (``preemptive=False``, the legacy contract kept as
+  the overload-benchmark baseline) — admission reserves the worst case
+  ``blocks_for(prompt_len + max_new)`` up front (counted in
+  ``outstanding``) and backpressures the head when the pool cannot commit
+  it; growth then draws on the reservation and can never fail, and nothing
+  is ever evicted.
+* **Bounded queue / load shedding** (``max_queue=``) — at most ``max_queue``
+  requests may sit between arrival and admission (preempted requeues
+  included).  :meth:`poll_arrivals` tail-drops arrivals past the bound
+  (the engine retires them as ``SHED``); a preemption requeue into a full
+  queue evicts the newest queued arrival, and when the queue holds only
+  preempted peers the victim itself is dropped (retired as ``PREEMPTED``
+  with its partial output) — overload degrades by shedding work, never by
+  corrupting it.
+* **No leaks** — :meth:`finish` returns every allocated block (and, in
+  reservation mode, the unallocated remainder of the reservation); after
+  all requests retire the allocator is exactly full again, and with
+  ``debug=True`` every ``finish`` re-proves
+  :meth:`~repro.serve.kv_pool.BlockAllocator.check_invariants`.
 
 The scheduler is pure host bookkeeping: it never touches device arrays.
 The driver (serve/server.py) owns pages and block tables and asks the
-scheduler what to admit, grow, and retire between decode segments.
+scheduler what to admit, grow, preempt, and retire between decode segments;
+it surfaces each request's outcome as a :class:`RequestStatus`.
 """
 from __future__ import annotations
 
@@ -49,6 +71,31 @@ class State(enum.Enum):
     DONE = "done"
 
 
+class RequestStatus(enum.Enum):
+    """Terminal outcome of a request, surfaced on RequestResult.status.
+
+    OK        — ran to completion (finish_reason 'stop' or 'length'); a
+                request preempted and recomputed along the way still ends
+                OK with a token stream bit-identical to an undisturbed run
+                (n_preemptions records the evictions).
+    PREEMPTED — evicted under overload and dropped because the bounded
+                queue held only preempted peers; partial tokens returned.
+    TIMEOUT   — deadline_steps elapsed (arrival -> now) before completion;
+                partial tokens returned, blocks released between segments.
+    CANCELLED — client cancel() honored at a segment boundary; partial
+                tokens returned.
+    SHED      — bounded arrival queue was full; never admitted, no tokens.
+    FAILED    — non-finite logits quarantined the row mid-decode; tokens up
+                to the last finite step returned, batch peers unaffected.
+    """
+    OK = "ok"
+    PREEMPTED = "preempted"
+    TIMEOUT = "timeout"
+    CANCELLED = "cancelled"
+    SHED = "shed"
+    FAILED = "failed"
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request as submitted by the client."""
@@ -57,6 +104,8 @@ class Request:
     max_new: int
     arrival_step: int = 0         # sim time (decode steps) when it arrives
     stop_tokens: tuple[int, ...] = ()
+    deadline_steps: int | None = None   # retire as TIMEOUT after this many
+    #                                     sim steps past arrival (None: never)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -64,6 +113,9 @@ class Request:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new < 1:
             raise ValueError(f"request {self.rid}: max_new must be >= 1")
+        if self.deadline_steps is not None and self.deadline_steps < 1:
+            raise ValueError(
+                f"request {self.rid}: deadline_steps must be >= 1")
 
     @property
     def prompt_len(self) -> int:
@@ -77,31 +129,55 @@ class ScheduledRequest:
     state: State
     row: int                      # batch row while PREFILL/DECODE, else -1
     blocks: list[int]             # allocated pool blocks (in table order)
-    total_blocks: int             # worst-case reservation
+    total_blocks: int             # worst-case blocks (growth cap; reserved
+    #                               up front only in reservation mode)
     ctx_len: int = 0              # cache positions written (prompt + decoded)
     n_out: int = 0                # tokens emitted
     pf_written: int = 0           # chunked prefill: prompt tokens in the pool
-    admitted_step: int = -1
+    admitted_step: int = -1       # first admission (re-admissions keep it)
     first_token_step: int = -1
     finished_step: int = -1
+    admit_seq: int = -1           # monotonic admission stamp (victim order)
+    n_preempt: int = 0            # times evicted (re-admission recomputes)
+    resume_prompt: np.ndarray | None = None   # prompt + generated-so-far
 
     @property
     def rid(self) -> int:
         return self.req.rid
 
+    @property
+    def cur_prompt(self) -> np.ndarray:
+        """The prompt a (re-)admission prefills: the original prompt, plus —
+        after a preemption — every token generated before the eviction
+        (recompute-on-readmit rebuilds the pool state from tokens)."""
+        return (self.req.prompt if self.resume_prompt is None
+                else self.resume_prompt)
+
+    @property
+    def cur_prompt_len(self) -> int:
+        return int(self.cur_prompt.shape[0])
+
 
 class Scheduler:
     def __init__(self, allocator: BlockAllocator, max_batch: int,
-                 block_size: int):
+                 block_size: int, *, preemptive: bool = False,
+                 max_queue: int | None = None, debug: bool = False):
         self.allocator = allocator
         self.max_batch = max_batch
         self.block_size = block_size
-        self.waiting: collections.deque[Request] = collections.deque()
+        self.preemptive = preemptive
+        self.max_queue = max_queue
+        self.debug = debug
+        self.pending: collections.deque[Request] = collections.deque()
+        self.arrived: collections.deque[Request] = collections.deque()
+        self.preempted: list[ScheduledRequest] = []   # FCFS by submit order
         self.running: dict[int, ScheduledRequest] = {}   # row -> record
         self.finished: list[ScheduledRequest] = []
         self._free_rows = list(range(max_batch - 1, -1, -1))
-        self.outstanding = 0      # reserved-but-not-yet-allocated blocks
+        self.outstanding = 0      # reservation mode: reserved-not-allocated
         self._last_arrival = None
+        self._submit_seq: dict[int, int] = {}         # rid -> FCFS rank
+        self._admit_seq = 0
 
     # ----------------------------------------------------------- submission
 
@@ -121,69 +197,201 @@ class Scheduler:
                              f"(request {req.rid} arrives at "
                              f"{req.arrival_step} < {self._last_arrival})")
         self._last_arrival = req.arrival_step
-        self.waiting.append(req)
+        self._submit_seq[req.rid] = len(self._submit_seq)
+        self.pending.append(req)
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.pending or self.arrived or self.preempted
+                    or self.running)
+
+    @property
+    def queue_len(self) -> int:
+        """Requests between arrival and admission (the bounded queue)."""
+        return len(self.arrived) + len(self.preempted)
 
     def next_arrival(self) -> int | None:
-        return self.waiting[0].arrival_step if self.waiting else None
+        return self.pending[0].arrival_step if self.pending else None
+
+    def poll_arrivals(self, now: int) -> list[Request]:
+        """Move arrived requests into the admission queue; returns the
+        arrivals tail-dropped by the ``max_queue`` overload bound (the
+        engine retires them as SHED)."""
+        shed = []
+        while self.pending and self.pending[0].arrival_step <= now:
+            req = self.pending.popleft()
+            if self.max_queue is not None \
+                    and self.queue_len >= self.max_queue:
+                shed.append(req)
+            else:
+                self.arrived.append(req)
+        return shed
+
+    def remove_queued(self, rid: int):
+        """Pull a not-yet-running request out of the queues (cancel /
+        timeout).  Returns the Request (never admitted), the
+        ScheduledRequest (preempted, holds partial progress), or None."""
+        for q in (self.arrived, self.pending):
+            for r in q:
+                if r.rid == rid:
+                    q.remove(r)
+                    return r
+        for sr in self.preempted:
+            if sr.rid == rid:
+                self.preempted.remove(sr)
+                return sr
+        return None
 
     # ------------------------------------------------------------ admission
 
     def admit_ready(self, now: int) -> list[ScheduledRequest]:
-        """Admit arrived requests FCFS while a row is free and the pool can
-        commit each one's worst case.  Allocates the prompt blocks and books
-        the growth reservation; returns the new records in PREFILL state."""
+        """Admit FCFS while a batch row is free and the pool can commit the
+        head's admission need: preempted requeues first (they arrived — and
+        were admitted — before anything still waiting), then arrivals.
+
+        Preemptive mode commits the *actual* current-prompt blocks; the
+        reservation baseline commits the worst case and books the growth
+        remainder in ``outstanding``.  Returns the records in PREFILL state
+        (a re-admitted record has ``n_preempt > 0`` and resumes from
+        ``cur_prompt`` / ``n_out``)."""
         admitted = []
-        while self.waiting and self.waiting[0].arrival_step <= now \
-                and self._free_rows:
-            req = self.waiting[0]
+        while self._free_rows:
+            if self.preempted:
+                sr = self.preempted[0]
+                need = blocks_for(sr.cur_prompt_len, self.block_size)
+                got = None
+                if self.allocator.free_blocks >= need:
+                    got = self.allocator.alloc(need)
+                if got is None:
+                    break                  # backpressure: head waits (FCFS)
+                self.preempted.pop(0)
+                sr.state = State.PREFILL
+                sr.row = self._free_rows.pop()
+                sr.blocks = got
+                sr.ctx_len = sr.cur_prompt_len
+                sr.pf_written = 0
+                sr.admit_seq = self._admit_seq
+                self._admit_seq += 1
+                self.running[sr.row] = sr
+                admitted.append(sr)
+                continue
+            if not self.arrived:
+                break
+            req = self.arrived[0]
             total = self.total_blocks_for(req)
-            if self.allocator.free_blocks - self.outstanding < total:
-                break                      # backpressure: head waits (FCFS)
             init = blocks_for(req.prompt_len, self.block_size)
+            if self.preemptive:
+                ok = self.allocator.free_blocks >= init
+            else:
+                ok = self.allocator.free_blocks - self.outstanding >= total
+            if not ok:
+                break                      # backpressure: head waits (FCFS)
             blocks = self.allocator.alloc(init)
-            assert blocks is not None     # free >= total >= init
+            assert blocks is not None      # free >= init just checked
             sr = ScheduledRequest(
                 req=req, state=State.PREFILL, row=self._free_rows.pop(),
                 blocks=blocks, total_blocks=total, ctx_len=req.prompt_len,
-                admitted_step=now)
-            self.outstanding += total - init
+                admitted_step=now, admit_seq=self._admit_seq)
+            self._admit_seq += 1
+            if not self.preemptive:
+                self.outstanding += total - init
             self.running[sr.row] = sr
-            self.waiting.popleft()
+            self.arrived.popleft()
             admitted.append(sr)
         return admitted
 
     def ensure_capacity(self, sr: ScheduledRequest,
-                        target_len: int) -> list[int]:
-        """Grow sr's allocation to cover `target_len` cache positions (capped
-        at its reservation).  Draws on blocks reserved at admission, so it
-        cannot fail while the admission invariant holds.  Returns the new
-        blocks (to be appended to the request's block table)."""
+                        target_len: int) -> list[int] | None:
+        """Grow sr's allocation to cover `target_len` cache positions
+        (capped at its worst case).  Returns the new blocks to append to
+        the request's block table ([] when already covered).
+
+        Reservation mode draws on blocks reserved at admission and can
+        never fail (asserted).  Preemptive mode returns None when the pool
+        cannot supply the growth — the engine's cue to preempt a victim and
+        retry."""
         want = min(blocks_for(target_len, self.block_size), sr.total_blocks)
         need = want - len(sr.blocks)
         if need <= 0:
             return []
         got = self.allocator.alloc(need)
-        assert got is not None, \
-            "admission reservation violated: pool exhausted mid-decode"
+        if got is None:
+            if not self.preemptive:
+                raise AssertionError(
+                    "admission reservation violated: pool exhausted "
+                    "mid-decode")
+            return None
         sr.blocks.extend(got)
-        self.outstanding -= need
+        if not self.preemptive:
+            self.outstanding -= need
         return got
+
+    # ------------------------------------------------------------ preempt
+
+    def pick_victim(self,
+                    exclude_rid: int | None = None) -> ScheduledRequest | None:
+        """The newest-admitted running request (FCFS-fair: the oldest
+        admission is never evicted by a younger one, so the head of the
+        line always makes progress)."""
+        cands = [sr for sr in self.running.values()
+                 if sr.rid != exclude_rid]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: s.admit_seq)
+
+    def preempt(self, sr: ScheduledRequest,
+                now: int) -> tuple[bool, Request | None]:
+        """Evict a running request: free its blocks, release its row, and
+        requeue it for recompute-on-readmit (the caller stashes
+        ``resume_prompt`` first).  Returns ``(requeued, evicted)``:
+
+        * queue has room -> ``(True, None)``;
+        * queue full but holds a never-admitted arrival -> the newest such
+          arrival is evicted to make room, ``(True, evicted_request)`` (the
+          engine sheds it);
+        * queue full of preempted peers -> ``(False, None)``: the victim is
+          dropped (the engine retires it as PREEMPTED with partial output).
+        """
+        if not self.preemptive:
+            raise RuntimeError("preempt() requires preemptive scheduling")
+        self.allocator.free(sr.blocks)
+        sr.blocks = []
+        del self.running[sr.row]
+        self._free_rows.append(sr.row)
+        sr.row = -1
+        sr.state = State.WAITING
+        sr.pf_written = 0
+        sr.n_preempt += 1
+        evicted = None
+        if self.max_queue is not None and self.queue_len >= self.max_queue:
+            if self.arrived:
+                evicted = self.arrived.pop()   # newest arrival sheds
+            else:
+                return False, None             # only preempted peers queued
+        self.preempted.append(sr)
+        self.preempted.sort(key=lambda s: self._submit_seq[s.rid])
+        return True, evicted
 
     # -------------------------------------------------------------- retire
 
     def finish(self, sr: ScheduledRequest, now: int) -> None:
-        """DECODE -> DONE: free all blocks and the unallocated remainder of
-        the reservation, release the batch row."""
+        """Retire a record (DONE): free all blocks, release the batch row
+        (when it holds one), and — in reservation mode — return the
+        unallocated remainder of the reservation.  Works for running AND
+        preempted records (cancel/timeout can retire either)."""
         self.allocator.free(sr.blocks)
-        self.outstanding -= sr.total_blocks - len(sr.blocks)
+        if not self.preemptive:
+            self.outstanding -= sr.total_blocks - len(sr.blocks)
         sr.blocks = []
+        if sr.row >= 0:
+            del self.running[sr.row]
+            self._free_rows.append(sr.row)
+            sr.row = -1
+        elif sr in self.preempted:
+            self.preempted.remove(sr)
         sr.state = State.DONE
         sr.finished_step = now
-        del self.running[sr.row]
-        self._free_rows.append(sr.row)
-        sr.row = -1
         self.finished.append(sr)
+        if self.debug:
+            self.allocator.check_invariants(
+                tables=[r.blocks for r in self.running.values()])

@@ -45,6 +45,31 @@ Execution shape:
   of batch composition and *token-identical* to ``Engine.generate`` run on
   that request alone with the same key (tested, greedy and sampled).
 
+Robustness layer (the serving analog of the paper's non-linearity
+compensation: a fast datapath is only useful if it degrades gracefully):
+
+* **Preemptive admission** (``preemption='recompute'``, the default) —
+  admission commits only actual prompt blocks; when decode growth finds
+  the pool exhausted, the newest-admitted victim is preempted (blocks
+  freed, row released) and later *recomputed* through the normal
+  (re-)admission prefill over prompt + generated-so-far tokens.  The
+  request-id-folded RNG re-samples the identical continuation, so a
+  preempted request's stream stays bit-identical to an undisturbed run.
+  ``preemption='off'`` keeps the legacy worst-case-reservation contract.
+* **Lifecycle** — per-request ``deadline_steps`` and an engine
+  :meth:`ContinuousEngine.cancel` API retire requests between segments
+  with all blocks returned; every outcome is surfaced as
+  ``RequestResult.status`` (:class:`~repro.serve.scheduler.RequestStatus`:
+  OK / PREEMPTED / TIMEOUT / CANCELLED / SHED / FAILED).
+* **Overload protection** — ``max_queue`` bounds the arrival queue
+  (tail arrivals shed), and the fused step's non-finite-logits guard
+  quarantines a NaN row as FAILED instead of letting it poison the
+  jitted segment.
+* **Fault injection** — ``run_stream(..., faults=FaultInjector(...))``
+  drives a seeded chaos schedule (hidden pool blocks, forced preemption
+  storms, poisoned logits, surprise cancels) through the real code paths;
+  see serve/faults.py and tests/test_serve_faults.py.
+
 Finished and idle rows still occupy compute lanes within a segment (static
 shapes); their writes are masked to the pool's null block and their outputs
 discarded on the host.
@@ -73,7 +98,8 @@ from repro.kernels import autotune
 from repro.models import model as model_lib
 from repro.serve import kv_pool
 from repro.serve.engine import Engine
-from repro.serve.scheduler import Request, ScheduledRequest, Scheduler, State
+from repro.serve.scheduler import (Request, RequestStatus, ScheduledRequest,
+                                   Scheduler, State)
 
 
 @dataclasses.dataclass
@@ -81,12 +107,14 @@ class RequestResult:
     rid: int
     tokens: np.ndarray            # [n_out] int32
     logprobs: np.ndarray          # [n_out] float32
-    finish_reason: str            # 'stop' | 'length'
+    finish_reason: str            # 'stop' | 'length' | a non-OK status value
     arrival_step: int
     admitted_step: int
     first_token_step: int
     finished_step: int
     ttft_seconds: float = float("nan")   # eligible -> first token, wall
+    status: RequestStatus = RequestStatus.OK
+    n_preemptions: int = 0        # evictions survived (recompute re-admits)
 
     @property
     def latency_steps(self) -> int:
@@ -120,7 +148,10 @@ class ContinuousEngine:
                  defrag_min_holes: int = 4,
                  paged_attn: bool = False,
                  chunked_prefill: bool = False,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 preemption: str = "recompute",
+                 max_queue: int | None = None,
+                 debug_invariants: bool = False):
         if cfg.arch_type != "dense" or cfg.sliding_window is not None:
             raise ValueError(
                 "continuous batching serves dense-attention archs without "
@@ -131,6 +162,10 @@ class ContinuousEngine:
                 "continuous batching does not support M-RoPE archs: paged "
                 "decode derives per-row positions from the pool lengths, "
                 "which has no 3-axis (t/h/w) position layout")
+        if preemption not in ("off", "recompute"):
+            raise ValueError("preemption must be 'off' (worst-case "
+                             "reservation) or 'recompute' (preempt + "
+                             f"re-prefill), got {preemption!r}")
         if plan is None and mode is not None:
             plan = backend_lib.as_plan(mode)
         if paged_attn:
@@ -145,6 +180,10 @@ class ContinuousEngine:
         self.block_size = block_size
         self.segment_len = segment_len
         self.chunked_prefill = chunked_prefill
+        self.preemption = preemption
+        self.max_queue = max_queue
+        self.debug_invariants = debug_invariants
+        self._int8_pool = getattr(cfg, "kv_cache_dtype", "bf16") == "int8"
         if prefill_chunk is None:
             # Autotuned tokens-per-chunk (measured entry when a tuned table
             # is loaded, deterministic heuristic otherwise).
@@ -175,6 +214,7 @@ class ContinuousEngine:
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.pages = kv_pool.init_pages(cfg, kv_blocks, block_size, dtype)
         self._fn_cache: dict = {}
+        self._cancel_req: set[int] = set()
         # Host->device dispatch accounting (jitted executions) and
         # device->host sync accounting (blocking transfers: one per segment
         # harvest and one per admission *round*, never one per request).
@@ -185,6 +225,13 @@ class ContinuousEngine:
         self.last_run_dispatches = 0
         self.last_run_host_syncs = 0
         self.last_run_defrags = 0
+        self.last_run_preemptions = 0
+        self.last_run_recomputes = 0
+        self.last_run_sheds = 0
+        self.last_run_timeouts = 0
+        self.last_run_cancels = 0
+        self.last_run_failed = 0
+        self.last_run_max_concurrency = 0
         self.last_run_prefill_seconds = 0.0
         self.last_run_ttft_seconds: dict[int, float] = {}
         self.occupancy_trace: list[tuple[int, float]] = []
@@ -198,6 +245,15 @@ class ContinuousEngine:
             return float("nan")
         return float(np.percentile(np.asarray(vals, np.float64), pct))
 
+    def cancel(self, rid: int) -> None:
+        """Request cancellation of `rid`.  Honored at the next scheduler
+        round (segment boundary): a running request retires with its
+        partial output, a queued one before ever being admitted — either
+        way all its pool blocks are returned and its result carries
+        ``status=CANCELLED``.  Unknown / already-finished rids are
+        ignored."""
+        self._cancel_req.add(rid)
+
     def _dispatch(self, fn, *args):
         self.dispatch_count += 1
         self.last_run_dispatches += 1
@@ -207,7 +263,11 @@ class ContinuousEngine:
 
     def _prefill_fn(self, plan, greedy: bool, bucket_len: int,
                     with_length: bool):
-        """Jitted prefill+pack+first-sample, cached per prompt bucket."""
+        """Jitted prefill+pack+first-sample, cached per prompt bucket.
+        ``t0`` (traced) is the sampler step for the first token: 0 for a
+        fresh admission, the request's emitted-token count for a
+        recompute re-admission (so the re-sampled pending token folds the
+        same (key, rid, step) triple it did originally)."""
         key = ("cb_prefill", plan, greedy, bucket_len, with_length)
         if key in self._fn_cache:
             return self._fn_cache[key]
@@ -216,7 +276,7 @@ class ContinuousEngine:
         pf_len = kv_pool.blocks_for(bucket_len, self.block_size) \
             * self.block_size
 
-        def f(params, pages, tokens, length, block_table, rid, rng,
+        def f(params, pages, tokens, length, block_table, rid, rng, t0,
               temperature):
             batch = {"tokens": tokens}
             if with_length:
@@ -224,8 +284,7 @@ class ContinuousEngine:
             logits, pages = model_lib.prefill_paged(
                 params, batch, cfg, pages=pages, block_table=block_table,
                 max_len=pf_len, mode=plan)
-            tok0 = sample(logits[:, -1], rng, rid,
-                          jnp.asarray(0, jnp.int32), temperature)
+            tok0 = sample(logits[:, -1], rng, rid, t0, temperature)
             return tok0, pages
 
         fn = jax.jit(f)
@@ -234,9 +293,17 @@ class ContinuousEngine:
 
     def _decode_loop(self, step, seg_len: int):
         """Shared decode-segment body: up to `seg_len` fused decode+sample
-        steps over the whole batch, early-exiting when every row is done."""
-        def seg(params, pages, tables, tok, n_out, lens, done, rids,
-                max_new, stops, rng, temperature, pad_token):
+        steps over the whole batch, early-exiting when every row is done.
+
+        Carries a ``failed`` mask alongside ``done``: a row whose step
+        returns non-finite logits (``ok`` False — organic overflow or an
+        injected ``poison``) has that step's emission retracted (its
+        logprob came from the bad logits), takes no length/count credit,
+        and is marked failed+done so the segment's remaining iterations
+        mask it like any finished row.  The host quarantines failed rows
+        as FAILED; their batch neighbors never see the NaN."""
+        def seg(params, pages, tables, tok, n_out, lens, done, failed,
+                rids, max_new, stops, poison, rng, temperature, pad_token):
             mb = tok.shape[0]
             out_t = jnp.full((mb, seg_len), pad_token, jnp.int32)
             out_lp = jnp.zeros((mb, seg_len), jnp.float32)
@@ -246,30 +313,37 @@ class ContinuousEngine:
                 return (i < seg_len) & ~jnp.all(done)
 
             def body(carry):
-                i, tok, n_out, lens, done, pages, out_t, out_lp = carry
+                i, tok, n_out, lens, done, failed, pages, out_t, out_lp = \
+                    carry
                 # Emit the pending token (per-row position n_out -> column
                 # i: a live row emits every iteration until done, so its
                 # segment output is a column prefix).
                 out_t = out_t.at[:, i].set(jnp.where(done, pad_token, tok))
                 caches = {"kv": pages, "block_tables": tables, "lens": lens,
                           "write_mask": ~done}
-                nxt, lp, caches = step(params, tok, caches, rng, rids,
-                                       n_out + 1, temperature)
-                out_lp = out_lp.at[:, i].set(jnp.where(done, 0.0, lp))
-                live = (~done).astype(jnp.int32)
+                nxt, lp, ok, caches = step(params, tok, caches, rng, rids,
+                                           n_out + 1, temperature, poison)
+                bad = ~ok & ~done
+                out_t = out_t.at[:, i].set(
+                    jnp.where(bad, pad_token, out_t[:, i]))
+                out_lp = out_lp.at[:, i].set(
+                    jnp.where(done | bad, 0.0, lp))
+                live = (~done & ~bad).astype(jnp.int32)
                 lens = lens + live
                 n_out = n_out + live
-                done = done | jnp.any(tok[:, None] == stops, axis=-1) \
+                failed = failed | bad
+                done = done | bad \
+                    | jnp.any(tok[:, None] == stops, axis=-1) \
                     | (n_out >= max_new)
-                return (i + 1, nxt, n_out, lens, done, caches["kv"],
-                        out_t, out_lp)
+                return (i + 1, nxt, n_out, lens, done, failed,
+                        caches["kv"], out_t, out_lp)
 
-            i, tok, n_out, lens, done, pages, out_t, out_lp = \
+            i, tok, n_out, lens, done, failed, pages, out_t, out_lp = \
                 jax.lax.while_loop(
                     cond, body,
                     (jnp.asarray(0, jnp.int32), tok, n_out, lens, done,
-                     pages, out_t, out_lp))
-            return pages, tok, n_out, lens, done, out_t, out_lp, i
+                     failed, pages, out_t, out_lp))
+            return pages, tok, n_out, lens, done, failed, out_t, out_lp, i
 
         return seg
 
@@ -279,8 +353,17 @@ class ContinuousEngine:
         key = ("cb_segment", plan, greedy, seg_len, stop_w)
         if key in self._fn_cache:
             return self._fn_cache[key]
-        fn = jax.jit(self._decode_loop(self.engine.make_step(plan, greedy),
-                                       seg_len))
+        loop = self._decode_loop(self.engine.make_step(plan, greedy),
+                                 seg_len)
+
+        def seg(params, pages, tables, tok, n_out, lens, done, rids,
+                max_new, stops, poison, rng, temperature, pad_token):
+            failed = jnp.zeros(done.shape, bool)
+            return loop(params, pages, tables, tok, n_out, lens, done,
+                        failed, rids, max_new, stops, poison, rng,
+                        temperature, pad_token)
+
+        fn = jax.jit(seg)
         self._fn_cache[key] = fn
         return fn
 
@@ -299,9 +382,13 @@ class ContinuousEngine:
         the blocking path's B=1 prefill, but without its extra dispatch.
         Rows whose final chunk lands this segment sample their first token
         from the chunk logits (identical request-id-folded RNG as the
-        blocking prefill) and join decode inside the same dispatch; the
-        per-admission ``int(tok0[0])`` host sync is gone from the steady
-        state.
+        blocking prefill; ``pf_t0`` carries the per-row sampler step — 0
+        for fresh prompts, the emitted count for a recompute re-admission)
+        and join decode inside the same dispatch; the per-admission
+        ``int(tok0[0])`` host sync is gone from the steady state.  A final
+        chunk whose logits come back non-finite (organic or ``poison``)
+        does NOT join decode: its row stays parked and is flagged in the
+        returned ``failed`` mask for host-side FAILED quarantine.
 
         ``pf_tables`` rides in separately at its own tight width (the
         prefilling rows' span only, pow2-bucketed) and ``has_past`` is a
@@ -317,25 +404,31 @@ class ContinuousEngine:
                                  seg_len)
 
         def seg(params, pages, tables, pf_rows, pf_tables, pf_tok, pf_pos,
-                pf_cnt, pf_on, pf_fin, tok, n_out, lens, done, rids,
-                max_new, stops, rng, temperature, pad_token):
+                pf_cnt, pf_on, pf_fin, pf_t0, tok, n_out, lens, done, rids,
+                max_new, stops, poison, rng, temperature, pad_token):
             logits0, pages = model_lib.prefill_chunk(
                 params, pf_tok, cfg, pages=pages, block_tables=pf_tables,
                 pos=pf_pos, n_tok=pf_cnt, write_mask=pf_on,
                 has_past=has_past, mode=plan)
-            tok0 = sample(logits0, rng, rids[pf_rows],
-                          jnp.asarray(0, jnp.int32), temperature)
+            logits0 = jnp.where(poison[pf_rows][:, None], jnp.nan, logits0)
+            ok0 = jnp.all(jnp.isfinite(logits0.astype(jnp.float32)),
+                          axis=-1)
+            tok0 = sample(logits0, rng, rids[pf_rows], pf_t0, temperature)
             fin = pf_on & pf_fin
+            good = fin & ok0
+            bad = fin & ~ok0
             # Scatter the sub-batch back onto the full rows.  Padding
             # entries point at a non-prefilling row and write its own
             # current value (a deterministic no-op), so duplicate indices
             # never race a real update.
-            tok = tok.at[pf_rows].set(jnp.where(fin, tok0, tok[pf_rows]))
-            done = done.at[pf_rows].set(done[pf_rows] & ~fin)
+            tok = tok.at[pf_rows].set(jnp.where(good, tok0, tok[pf_rows]))
+            done = done.at[pf_rows].set(done[pf_rows] & ~good)
             lens = lens.at[pf_rows].set(
                 jnp.where(pf_on, pf_pos + pf_cnt, lens[pf_rows]))
+            failed = jnp.zeros(done.shape, bool).at[pf_rows].set(bad)
             return loop(params, pages, tables, tok, n_out, lens, done,
-                        rids, max_new, stops, rng, temperature, pad_token)
+                        failed, rids, max_new, stops, poison, rng,
+                        temperature, pad_token)
 
         fn = jax.jit(seg)
         self._fn_cache[key] = fn
@@ -361,21 +454,27 @@ class ContinuousEngine:
         return tables
 
     def run(self, requests: Sequence[Request], *, key=None,
-            temperature: float = 0.0) -> dict[int, RequestResult]:
+            temperature: float = 0.0,
+            faults=None) -> dict[int, RequestResult]:
         """Serve a request stream to completion; returns {rid: result}."""
         results: dict[int, RequestResult] = {}
         for ev in self.run_stream(requests, key=key,
-                                  temperature=temperature):
+                                  temperature=temperature, faults=faults):
             if ev["event"] == "finish":
                 results[ev["rid"]] = ev["result"]
         return results
 
     def run_stream(self, requests: Sequence[Request], *, key=None,
-                   temperature: float = 0.0) -> Iterator[dict]:
+                   temperature: float = 0.0,
+                   faults=None) -> Iterator[dict]:
         """Generator form of :meth:`run`: yields per-request events as the
-        sim advances — {'event': 'admit'|'tokens'|'finish', 'rid': ...,
-        'step': sim_time, ...}.  'tokens' events carry the new tokens and
-        logprobs harvested after each decode segment."""
+        sim advances — {'event': 'admit'|'tokens'|'preempt'|'finish',
+        'rid': ..., 'step': sim_time, ...}.  'tokens' events carry the new
+        tokens and logprobs harvested after each decode segment; 'finish'
+        events carry the RequestResult (every terminal status, not just
+        OK).  ``faults`` is an optional chaos driver (serve/faults.py):
+        its per-round action dict is applied through the real scheduler /
+        allocator / sampler code paths."""
         requests = list(requests)
         rid_set = {r.rid for r in requests}
         if len(rid_set) != len(requests):
@@ -394,7 +493,10 @@ class ContinuousEngine:
         seg_len = self.segment_len
         stop_w = max((len(r.stop_tokens) for r in requests), default=0) or 1
 
-        sched = Scheduler(self.allocator, self.max_batch, self.block_size)
+        sched = Scheduler(self.allocator, self.max_batch, self.block_size,
+                          preemptive=self.preemption == "recompute",
+                          max_queue=self.max_queue,
+                          debug=self.debug_invariants)
         for r in sorted(requests, key=lambda r: r.arrival_step):
             sched.submit(r)
 
@@ -409,12 +511,20 @@ class ContinuousEngine:
         tables = np.zeros((mb, nbr), np.int32)
         streams: dict[int, tuple[list, list]] = {}
 
+        self._cancel_req = set()
         self.last_run_segments = 0
         self.last_run_prefills = 0
         self.last_run_prefill_chunks = 0
         self.last_run_dispatches = 0
         self.last_run_host_syncs = 0
         self.last_run_defrags = 0
+        self.last_run_preemptions = 0
+        self.last_run_recomputes = 0
+        self.last_run_sheds = 0
+        self.last_run_timeouts = 0
+        self.last_run_cancels = 0
+        self.last_run_failed = 0
+        self.last_run_max_concurrency = 0
         self.last_run_prefill_seconds = 0.0
         self.last_run_ttft_seconds = {}
         self.occupancy_trace = []
@@ -427,33 +537,211 @@ class ContinuousEngine:
             yield from self._serve_loop(
                 sched, seg_fn, stop_w, pad, rng, temp, plan, greedy,
                 tok, n_out, lens, done, rids, max_new, stops, tables,
-                streams)
+                streams, faults)
         finally:
-            # The generator may be abandoned mid-run (client cancels the
-            # stream): release every in-flight request's blocks so the
-            # shared allocator returns to steady state for the next run.
+            # The generator may be abandoned mid-run (client drops the
+            # stream): release every in-flight request's blocks — running
+            # AND preempted-but-requeued — and return any fault-hidden
+            # blocks, so the shared allocator is exactly full for the
+            # next run.
+            self.allocator.unhide_all()
             for sr in list(sched.running.values()):
                 sched.finish(sr, -1)
+            for sr in list(sched.preempted):
+                sched.finish(sr, -1)
+
+    # ------------------------------------------------------------- lifecycle
+
+    def _retire_unadmitted(self, req: Request, status: RequestStatus,
+                           now: int) -> dict:
+        """Finish event for a request dropped before it ever held a row or
+        a block (shed / cancelled / timed out while queued)."""
+        result = RequestResult(
+            rid=req.rid, tokens=np.zeros(0, np.int32),
+            logprobs=np.zeros(0, np.float32), finish_reason=status.value,
+            arrival_step=req.arrival_step, admitted_step=-1,
+            first_token_step=-1, finished_step=now, status=status)
+        return {"event": "finish", "rid": req.rid, "step": now,
+                "result": result}
+
+    def _retire_record(self, sched: Scheduler, sr: ScheduledRequest,
+                       status: RequestStatus, now: int, streams, tables,
+                       lens, done) -> dict:
+        """Retire a scheduled record (running OR detached/preempted) with a
+        non-OK status: blocks returned, row state cleared, partial output
+        surfaced in the finish event."""
+        row = sr.row
+        sched.finish(sr, now)
+        if row >= 0:
+            tables[row] = kv_pool.NULL_BLOCK
+            lens[row] = 0
+            done[row] = True
+        toks, lps = streams.pop(sr.rid, ([], []))
+        result = RequestResult(
+            rid=sr.rid, tokens=np.asarray(toks, np.int32),
+            logprobs=np.asarray(lps, np.float32),
+            finish_reason=status.value,
+            arrival_step=sr.req.arrival_step,
+            admitted_step=sr.admitted_step,
+            first_token_step=sr.first_token_step,
+            finished_step=sr.finished_step,
+            ttft_seconds=self.last_run_ttft_seconds.get(
+                sr.rid, float("nan")),
+            status=status, n_preemptions=sr.n_preempt)
+        return {"event": "finish", "rid": sr.rid, "step": now,
+                "result": result}
+
+    def _preempt_one(self, sched: Scheduler, victim: ScheduledRequest,
+                     now: int, streams, tables, lens,
+                     done) -> Iterator[dict]:
+        """Evict one running request, free its blocks, clear its row, and
+        requeue it for recompute.  Two resume flavors, both bit-identical:
+
+        * fp pool — stash original prompt + every token generated so far
+          as ``resume_prompt``; re-admission prefills the grown prompt in
+          one pass and re-samples the pending (never-emitted) token at the
+          same (key, rid, step) RNG triple.  Sound because fp decode and
+          fp prefill read the same K/V values.
+        * int8 pool — full restart: the stream is discarded and the
+          request re-admits from its original prompt with ``n_out = 0``.
+          Decode reads *dequantized* codes, and the codes a prefill would
+          write for generated positions come from fp-attention hidden
+          states, so a stapled prefill cannot reproduce the interrupted
+          stream; replaying the identical prefill-then-decode computation
+          from scratch can, exactly.
+
+        Emits the 'preempt' event plus any overload fallout (a shed
+        arrival evicted from a full queue, or the victim itself dropped as
+        PREEMPTED when the queue holds only preempted peers)."""
+        row = victim.row
+        st = streams.get(victim.rid, ([], []))
+        if not self._int8_pool:
+            victim.resume_prompt = np.concatenate(
+                [np.asarray(victim.req.prompt, np.int32),
+                 np.asarray(st[0], np.int32)])
+        requeued, evicted = sched.preempt(victim, now)
+        tables[row] = kv_pool.NULL_BLOCK
+        lens[row] = 0
+        done[row] = True
+        self.last_run_preemptions += 1
+        yield {"event": "preempt", "rid": victim.rid, "step": now,
+               "n_out": victim.n_out}
+        if evicted is not None:
+            self.last_run_sheds += 1
+            yield self._retire_unadmitted(evicted, RequestStatus.SHED, now)
+        if not requeued:
+            yield self._retire_record(sched, victim,
+                                      RequestStatus.PREEMPTED, now,
+                                      streams, tables, lens, done)
+        elif self._int8_pool:
+            streams.pop(victim.rid, None)
+            victim.resume_prompt = None
+            victim.n_out = 0
+
+    def _grow(self, sched: Scheduler, sr: ScheduledRequest, target: int,
+              now: int, streams, tables, lens, done):
+        """Grow sr's blocks to cover `target` positions, preempting
+        newest-admitted victims until the pool yields (generator: preempt /
+        shed events stream out; the grown block list is the return value,
+        or None when sr itself had to be preempted — only reachable under
+        fault-injected pool pressure, since submit() guarantees the oldest
+        request's worst case fits a victim-free pool)."""
+        while True:
+            got = sched.ensure_capacity(sr, target)
+            if got is not None:
+                return got
+            victim = sched.pick_victim(exclude_rid=sr.rid) or sr
+            yield from self._preempt_one(sched, victim, now, streams,
+                                         tables, lens, done)
+            if victim is sr:
+                return None
+
+    # ------------------------------------------------------------ main loop
 
     def _serve_loop(self, sched, seg_fn, stop_w, pad, rng, temp, plan,
                     greedy, tok, n_out, lens, done, rids, max_new, stops,
-                    tables, streams) -> Iterator[dict]:
+                    tables, streams, faults) -> Iterator[dict]:
         now = 0
         n_loops = 0
+        n_stalled = 0
         chunked = self.chunked_prefill
         chunk = self.prefill_chunk
         mb = tok.shape[0]
         eligible_wall: dict[int, float] = {}
         while sched.has_work:
             n_loops += 1
+            t_round = time.perf_counter()
+            poison_rids: set[int] = set()
+
+            # ---- fault hook: chaos actions ride the real code paths ----
+            if faults is not None:
+                acts = faults.on_round(
+                    n_loops - 1, now,
+                    [sr.rid for sr in sched.running.values()],
+                    [r.rid for r in sched.arrived]
+                    + [s.rid for s in sched.preempted])
+                if acts.get("unhide"):
+                    self.allocator.unhide_all()
+                if acts.get("hide"):
+                    self.allocator.hide_blocks(int(acts["hide"]))
+                for rid in acts.get("cancel", ()):
+                    self._cancel_req.add(rid)
+                poison_rids = set(acts.get("poison", ()))
+                n_force = int(acts.get("preempt", 0))
+                if n_force and sched.preemptive:
+                    for _ in range(n_force):
+                        victim = sched.pick_victim()
+                        if victim is None:
+                            break
+                        yield from self._preempt_one(
+                            sched, victim, now, streams, tables, lens,
+                            done)
+
+            # ---- arrivals, overload shedding, cancels, deadlines -------
+            for req in sched.poll_arrivals(now):
+                self.last_run_sheds += 1
+                yield self._retire_unadmitted(req, RequestStatus.SHED, now)
+            if self._cancel_req:
+                for rid in sorted(self._cancel_req):
+                    sr = next((s for s in sched.running.values()
+                               if s.rid == rid), None)
+                    if sr is not None:
+                        self.last_run_cancels += 1
+                        yield self._retire_record(
+                            sched, sr, RequestStatus.CANCELLED, now,
+                            streams, tables, lens, done)
+                        continue
+                    obj = sched.remove_queued(rid)
+                    if isinstance(obj, Request):
+                        self.last_run_cancels += 1
+                        yield self._retire_unadmitted(
+                            obj, RequestStatus.CANCELLED, now)
+                    elif obj is not None:      # preempted, holds progress
+                        self.last_run_cancels += 1
+                        yield self._retire_record(
+                            sched, obj, RequestStatus.CANCELLED, now,
+                            streams, tables, lens, done)
+                self._cancel_req.clear()
+            for sr in list(sched.running.values()) + list(sched.preempted):
+                dl = sr.req.deadline_steps
+                if dl is not None and now - sr.req.arrival_step >= dl:
+                    self.last_run_timeouts += 1
+                    yield self._retire_record(
+                        sched, sr, RequestStatus.TIMEOUT, now, streams,
+                        tables, lens, done)
+            for req in [r for r in sched.arrived
+                        if r.deadline_steps is not None
+                        and now - r.arrival_step >= r.deadline_steps]:
+                sched.arrived.remove(req)
+                self.last_run_timeouts += 1
+                yield self._retire_unadmitted(req, RequestStatus.TIMEOUT,
+                                              now)
+
             # TTFT clock: a request becomes eligible the first round the
             # sim reaches its arrival; wall TTFT is eligible -> first
             # sampled token harvested (so queueing behind a busy pool AND
             # head-of-line prefill stalls both count).
-            t_round = time.perf_counter()
-            for r in sched.waiting:
-                if r.arrival_step > now:
-                    break
+            for r in sched.arrived:
                 eligible_wall.setdefault(r.rid, t_round)
             # Defrag policy: a fixed interval when configured (tests /
             # worst-case bounding), else adaptively whenever the live span's
@@ -471,36 +759,42 @@ class ContinuousEngine:
                   and self.allocator.fragmentation()
                   >= self.defrag_threshold):
                 tables = self._maybe_defrag(sched, tables)
+
+            # ---- admission (fresh arrivals AND recompute re-admits) ----
             pending_tok0: list[tuple[ScheduledRequest, Any]] = []
             pf_wall = 0.0
             for sr in sched.admit_ready(now):
                 row, req = sr.row, sr.req
-                n_out[row] = 0
+                n_out[row] = sr.n_out       # >0 on a recompute re-admit
                 rids[row] = req.rid
                 max_new[row] = req.max_new
                 stops[row] = -1
                 stops[row, :len(req.stop_tokens)] = req.stop_tokens
                 tables[row] = kv_pool.NULL_BLOCK
                 tables[row, :len(sr.blocks)] = sr.blocks
-                streams[req.rid] = ([], [])
+                streams.setdefault(req.rid, ([], []))
+                if sr.n_preempt > 0:
+                    self.last_run_recomputes += 1
                 if chunked:
-                    # The prompt streams into the pool chunk by chunk
-                    # inside the mixed segments; the row idles in the
-                    # decode loop (done) until its final chunk samples the
-                    # first token.  Admission itself dispatches nothing.
+                    # The (possibly resumed) prompt streams into the pool
+                    # chunk by chunk inside the mixed segments; the row
+                    # idles in the decode loop (done) until its final
+                    # chunk samples the pending token.  Admission itself
+                    # dispatches nothing.
                     sr.pf_written = 0
                     sr.ctx_len = 0
                     lens[row] = 0
                     done[row] = True
                     tok[row] = 0
                 else:
-                    lens[row] = req.prompt_len
+                    lens[row] = sr.cur_prompt_len
                     done[row] = False
                     t0 = time.perf_counter()
                     pending_tok0.append(
                         (sr, self._admit(sr, plan, greedy, rng, temp)))
                     pf_wall += time.perf_counter() - t0
-                yield {"event": "admit", "rid": req.rid, "step": now}
+                yield {"event": "admit", "rid": req.rid, "step": now,
+                       "recompute": sr.n_preempt > 0}
             if pending_tok0:
                 # ONE device->host transfer for the whole admission round:
                 # the per-request prefill dispatches pipeline on device and
@@ -516,51 +810,96 @@ class ContinuousEngine:
                 # per-event work between admissions is not prefill cost.
                 self.last_run_prefill_seconds += \
                     pf_wall + (time.perf_counter() - t0)
+            self.last_run_max_concurrency = max(
+                self.last_run_max_concurrency, len(sched.running))
             self.occupancy_trace.append((now, self.allocator.occupancy()))
             self.fragmentation_trace.append(
                 (now, self.allocator.fragmentation()))
 
             if not sched.running:
+                if not sched.has_work:
+                    break                   # everything retired this round
                 nxt = sched.next_arrival()
-                assert nxt is not None and nxt > now, "scheduler stalled"
-                now = nxt                   # idle pool: jump to next arrival
+                if nxt is not None and nxt > now:
+                    now = nxt               # idle pool: jump to next arrival
+                    n_stalled = 0
+                    continue
+                # Admission blocked with nothing running (fault-hidden
+                # blocks, pathological max_queue): tick the clock and let
+                # the fault schedule advance; a bounded stall counter
+                # turns a genuine livelock into a loud failure.
+                now += 1
+                n_stalled += 1
+                if n_stalled > 10_000:
+                    raise RuntimeError(
+                        "scheduler stalled: nothing running and the "
+                        "admission head cannot be admitted "
+                        f"(free={self.allocator.free_blocks}, "
+                        f"hidden={self.allocator.hidden_blocks})")
                 continue
+            n_stalled = 0
 
-            # Grow block tables to cover this segment's worst-case writes;
-            # collect the prefill-chunk work list (rows still streaming
-            # their prompt).  Mid-prefill rows need no growth — their
-            # prompt blocks were allocated at admission and chunk-page
-            # writes past them land on null-table entries; a row whose
-            # FINAL chunk lands this segment starts decoding inside it, so
-            # it grows like a decode row.
+            # ---- growth (oldest-first; may preempt newest-admitted) ----
+            # Grow block tables to cover this segment's worst-case writes.
+            # Mid-prefill rows need no growth — their prompt blocks were
+            # allocated at admission and chunk-page writes past them land
+            # on null-table entries; a row whose FINAL chunk lands this
+            # segment starts decoding inside it, so it grows like a decode
+            # row.  Oldest-admitted rows grow first: a growth failure
+            # preempts the NEWEST victim, so the head of the FCFS line is
+            # never starved by a younger request's growth.
             w_need = 1
-            pf_rows: list[tuple[int, ScheduledRequest, int, bool]] = []
-            for row, sr in sched.running.items():
+            for sr in sorted(sched.running.values(),
+                             key=lambda s: s.admit_seq):
+                if sched.running.get(sr.row) is not sr:
+                    continue               # preempted earlier this round
+                target = None
                 if chunked and sr.state is State.PREFILL:
-                    cnt = min(chunk, sr.req.prompt_len - sr.pf_written)
-                    fin = sr.pf_written + cnt >= sr.req.prompt_len
-                    pf_rows.append((row, sr, cnt, fin))
+                    cnt = min(chunk, sr.cur_prompt_len - sr.pf_written)
+                    fin = sr.pf_written + cnt >= sr.cur_prompt_len
                     span = sr.pf_written + chunk
                     if fin:
                         span = max(span,
-                                   sr.req.prompt_len + self.segment_len)
-                        new_blocks = sched.ensure_capacity(
-                            sr, sr.req.prompt_len + self.segment_len)
-                        if new_blocks:
-                            n_have = len(sr.blocks)
-                            tables[row,
-                                   n_have - len(new_blocks):n_have] = \
-                                new_blocks
+                                   sr.cur_prompt_len + self.segment_len)
+                        target = sr.cur_prompt_len + self.segment_len
                 else:
-                    span = int(lens[row]) + self.segment_len
-                    new_blocks = sched.ensure_capacity(
-                        sr, sr.ctx_len + self.segment_len)
+                    span = int(lens[sr.row]) + self.segment_len
+                    target = sr.ctx_len + self.segment_len
+                if target is not None:
+                    new_blocks = yield from self._grow(
+                        sched, sr, target, now, streams, tables, lens,
+                        done)
+                    if new_blocks is None:
+                        continue           # self-preempted (fault pressure)
                     if new_blocks:
                         n_have = len(sr.blocks)
-                        tables[row, n_have - len(new_blocks):n_have] = \
+                        tables[sr.row,
+                               n_have - len(new_blocks):n_have] = \
                             new_blocks
                 w_need = max(w_need,
                              kv_pool.blocks_for(span, self.block_size))
+
+            if not sched.running:
+                continue                   # the whole batch got preempted
+
+            # The prefill-chunk work list (rows still streaming their
+            # prompt), built AFTER growth so preemption victims drop out.
+            pf_rows: list[tuple[int, ScheduledRequest, int, bool]] = []
+            if chunked:
+                for row, sr in sched.running.items():
+                    if sr.state is State.PREFILL:
+                        cnt = min(chunk,
+                                  sr.cur_prompt_len - sr.pf_written)
+                        fin = sr.pf_written + cnt >= sr.cur_prompt_len
+                        pf_rows.append((row, sr, cnt, fin))
+
+            # Poison vector: fault-injected NaN logits for these rids'
+            # rows, applied inside the jitted step (traced arg — changing
+            # targets never recompiles).
+            poison_v = np.zeros(mb, bool)
+            for row, sr in sched.running.items():
+                if sr.rid in poison_rids:
+                    poison_v[row] = True
 
             # Dispatch only the live-width prefix of the tables: every
             # row's blocks (incl. this segment's growth and prefill-chunk
@@ -588,14 +927,16 @@ class ContinuousEngine:
                 pf_cnt = np.zeros(pb, np.int32)
                 pf_on = np.zeros(pb, bool)
                 pf_fin = np.zeros(pb, bool)
+                pf_t0 = np.zeros(pb, np.int32)
                 for i, (row, sr, cnt, fin) in enumerate(pf_rows):
                     start = sr.pf_written
                     pf_idx[i] = row
-                    pf_tok[i, :cnt] = sr.req.prompt[start:start + cnt]
+                    pf_tok[i, :cnt] = sr.cur_prompt[start:start + cnt]
                     pf_pos[i] = start
                     pf_cnt[i] = cnt
                     pf_on[i] = True
                     pf_fin[i] = fin
+                    pf_t0[i] = sr.n_out     # >0: recompute re-admission
                 # The prologue's tables at their own tight width: just the
                 # prefilling rows' chunk spans, pow2-bucketed.  First-chunk
                 # rounds (all pos 0 — every short prompt) additionally
@@ -611,25 +952,26 @@ class ContinuousEngine:
                     has_past)
                 outs = self._dispatch(
                     mixed_fn, self.params, self.pages, seg_tables, pf_idx,
-                    pf_tables, pf_tok, pf_pos, pf_cnt, pf_on, pf_fin, tok,
-                    n_out, lens, done, rids, max_new, stops, rng, temp,
-                    pad)
+                    pf_tables, pf_tok, pf_pos, pf_cnt, pf_on, pf_fin,
+                    pf_t0, tok, n_out, lens, done, rids, max_new, stops,
+                    poison_v, rng, temp, pad)
                 self.last_run_prefill_chunks += len(pf_rows)
             else:
                 outs = self._dispatch(
                     seg_fn, self.params, self.pages, seg_tables, tok,
-                    n_out, lens, done, rids, max_new, stops, rng, temp,
-                    pad)
-            pages, tok_d, n_out_d, lens_d, done_d, out_t, out_lp, i_exec = \
-                outs
+                    n_out, lens, done, rids, max_new, stops, poison_v,
+                    rng, temp, pad)
+            (pages, tok_d, n_out_d, lens_d, done_d, failed_d, out_t,
+             out_lp, i_exec) = outs
             self.pages = pages
             self.last_run_segments += 1
             # ONE device->host transfer for the whole harvest (np.array
             # copies: the row state is mutated on admit/finish and raw jax
             # buffers are read-only); the pages stay device-resident.
-            tok, n_out_new, lens, done, out_t, out_lp, i_exec = (
+            tok, n_out_new, lens, done, failed, out_t, out_lp, i_exec = (
                 np.array(a) for a in jax.device_get(
-                    (tok_d, n_out_d, lens_d, done_d, out_t, out_lp, i_exec)))
+                    (tok_d, n_out_d, lens_d, done_d, failed_d, out_t,
+                     out_lp, i_exec)))
             self.last_run_host_syncs += 1
             t_harvest = time.perf_counter()
             n_out = n_out_new          # sr.n_out still holds the pre-segment
@@ -640,16 +982,17 @@ class ContinuousEngine:
 
             for row, sr in list(sched.running.items()):
                 if chunked and sr.state is State.PREFILL \
-                        and sr.pf_written < sr.req.prompt_len:
+                        and sr.pf_written < sr.cur_prompt_len:
                     continue               # mid-prefill: nothing to harvest
                 cnt = int(n_out_new[row]) - sr.n_out
                 if cnt > 0:
                     if sr.n_out == 0:
                         sr.first_token_step = now + 1
-                        sr.state = State.DECODE
                         self.last_run_ttft_seconds[sr.rid] = (
                             t_harvest
                             - eligible_wall.get(sr.rid, t_harvest))
+                    if sr.state is State.PREFILL:
+                        sr.state = State.DECODE
                     streams[sr.rid][0].extend(
                         int(t) for t in out_t[row, :cnt])
                     streams[sr.rid][1].extend(
@@ -660,7 +1003,15 @@ class ContinuousEngine:
                            "logprobs": list(out_lp[row, :cnt])}
                 sr.n_out = int(n_out_new[row])
                 sr.ctx_len = int(lens[row])
-                if done[row]:
+                if failed[row]:
+                    # Non-finite logits quarantined this row mid-segment:
+                    # its clean prefix was harvested above; the batch
+                    # peers never saw the NaN.
+                    self.last_run_failed += 1
+                    yield self._retire_record(
+                        sched, sr, RequestStatus.FAILED, now + cnt,
+                        streams, tables, lens, done)
+                elif done[row]:
                     toks, lps = streams.pop(sr.rid)
                     # Stop wins ties (a stop token emitted ON the last
                     # allowed step), matching Engine.generate's done flag.
@@ -681,7 +1032,9 @@ class ContinuousEngine:
                         first_token_step=sr.first_token_step,
                         finished_step=sr.finished_step,
                         ttft_seconds=self.last_run_ttft_seconds.get(
-                            sr.rid, float("nan")))
+                            sr.rid, float("nan")),
+                        status=RequestStatus.OK,
+                        n_preemptions=sr.n_preempt)
                     yield {"event": "finish", "rid": sr.rid,
                            "step": sr.finished_step, "result": result}
             now += int(i_exec)
@@ -691,12 +1044,16 @@ class ContinuousEngine:
     def _admit(self, sr: ScheduledRequest, plan, greedy, rng, temp):
         """Blocking-prefill admission: bucketed prompt forward packed into
         the pool + first-token sample (one jitted dispatch, cached per
-        bucket).  Returns the DEVICE tok0 array — the caller joins one
+        bucket).  A recompute re-admission prefills ``sr.cur_prompt``
+        (original prompt + generated-so-far) and samples at step
+        ``sr.n_out``, reproducing the pending token the preemption
+        discarded.  Returns the DEVICE tok0 array — the caller joins one
         admission round with a single batched device->host read instead of
         a per-request ``int(tok0[0])`` sync."""
         req = sr.req
+        prompt = sr.cur_prompt
         batch = self.engine.bucket(
-            {"tokens": jnp.asarray(req.prompt[None, :])})
+            {"tokens": jnp.asarray(prompt[None, :])})
         bucket_len = int(batch["tokens"].shape[1])
         with_length = "length" in batch
         bt_pf = np.zeros(kv_pool.blocks_for(bucket_len, self.block_size),
@@ -705,7 +1062,8 @@ class ContinuousEngine:
         fn = self._prefill_fn(plan, greedy, bucket_len, with_length)
         tok0, self.pages = self._dispatch(
             fn, self.params, self.pages, batch["tokens"],
-            jnp.asarray(req.prompt_len, jnp.int32), bt_pf,
-            jnp.asarray([req.rid], jnp.int32), rng, temp)
+            jnp.asarray(sr.cur_prompt_len, jnp.int32), bt_pf,
+            jnp.asarray([req.rid], jnp.int32), rng,
+            jnp.asarray(sr.n_out, jnp.int32), temp)
         self.last_run_prefills += 1
         return tok0

@@ -39,6 +39,34 @@ def chip_key():
     return jax.random.PRNGKey(CHIP_SEED)
 
 
+@pytest.fixture(autouse=True)
+def _serve_allocator_invariants():
+    """Every serve test tears down through the allocator's own proof: each
+    ContinuousEngine constructed during the test runs with the scheduler
+    debug flag forced on (check_invariants at every retire) and has its
+    books re-checked after the test body — a block leak anywhere in the
+    suite fails loudly at the test that caused it."""
+    from repro.serve import server as server_mod
+
+    engines = []
+    orig_init = server_mod.ContinuousEngine.__init__
+
+    def tracked_init(self, *args, **kwargs):
+        kwargs["debug_invariants"] = True
+        orig_init(self, *args, **kwargs)
+        engines.append(self)
+
+    server_mod.ContinuousEngine.__init__ = tracked_init
+    try:
+        yield
+    finally:
+        server_mod.ContinuousEngine.__init__ = orig_init
+        for ce in engines:
+            ce.allocator.check_invariants()
+            assert ce.allocator.hidden_blocks == 0, \
+                "fault-injected hidden blocks leaked past the run"
+
+
 @pytest.fixture(scope="session")
 def chip_factory(chip_key):
     """chip_factory(cfg, salt=0) -> deterministic macro.MacroSample.

@@ -90,17 +90,20 @@ def test_scheduler_backpressure_and_fcfs():
     sched.submit(_req(0, 8, 8))            # worst case 4 blocks
     sched.submit(_req(1, 8, 8))            # worst case 4 blocks
     sched.submit(_req(2, 4, 4))            # worst case 2 blocks
+    assert sched.next_arrival() == 0
+    assert sched.poll_arrivals(0) == []    # no bound: nothing shed
     admitted = sched.admit_ready(0)
     assert [sr.rid for sr in admitted] == [0, 1]
     # head (rid 2) backpressured: free - outstanding < 2; FCFS holds it
     assert sched.admit_ready(0) == []
-    assert sched.next_arrival() == 0
+    assert sched.queue_len == 1
     # growth draws on the reservation and can never fail
     sr0 = admitted[0]
     grown = sched.ensure_capacity(sr0, 16)
     assert len(sr0.blocks) == 4 and len(grown) == 2
     sched.finish(sr0, now=5)
     assert sr0.blocks == [] and sr0.finished_step == 5
+    sched.poll_arrivals(6)
     admitted2 = sched.admit_ready(6)
     assert [sr.rid for sr in admitted2] == [2]
     for sr in [admitted[1], admitted2[0]]:
@@ -113,6 +116,168 @@ def test_scheduler_rejects_oversized_request():
     sched = Scheduler(kv_pool.BlockAllocator(4), max_batch=2, block_size=4)
     with pytest.raises(ValueError):
         sched.submit(_req(0, 8, 8))        # needs 4 blocks, capacity 3
+
+
+# ---------------------------------------------------------------------------
+# Preemptive scheduler
+# ---------------------------------------------------------------------------
+
+def _preemptive(blocks=9, max_batch=4, max_queue=None):
+    alloc = kv_pool.BlockAllocator(blocks)
+    return alloc, Scheduler(alloc, max_batch=max_batch, block_size=4,
+                            preemptive=True, max_queue=max_queue,
+                            debug=True)
+
+
+def test_preemptive_admits_on_prompt_blocks_not_worst_case():
+    """Preemptive mode commits only actual prompt blocks at admission —
+    three worst-case-4 requests fit an 8-block pool that the reservation
+    baseline would cap at two."""
+    alloc, sched = _preemptive()           # capacity 8
+    for rid in range(3):
+        sched.submit(_req(rid, 8, 8))      # 2 prompt blocks, worst case 4
+    sched.poll_arrivals(0)
+    admitted = sched.admit_ready(0)
+    assert [sr.rid for sr in admitted] == [0, 1, 2]
+    assert alloc.live_blocks == 6 and sched.outstanding == 0
+
+
+def test_preemptive_growth_failure_victim_and_recompute_requeue():
+    """ensure_capacity returns None when the pool is dry; pick_victim is
+    the newest-admitted (never the requester); preempt frees the victim's
+    blocks and requeues it ahead of never-admitted arrivals."""
+    alloc, sched = _preemptive()
+    for rid in range(3):
+        sched.submit(_req(rid, 8, 8))
+    sched.poll_arrivals(0)
+    a0, a1, a2 = sched.admit_ready(0)
+    assert sched.ensure_capacity(a0, 8) == []        # covered already
+    grown = sched.ensure_capacity(a0, 16)            # 2 more: 8 live now
+    assert len(grown) == 2 and alloc.free_blocks == 0
+    assert sched.ensure_capacity(a1, 16) is None     # pool dry
+    victim = sched.pick_victim(exclude_rid=a1.rid)
+    assert victim is a2                              # newest admitted
+    a2.resume_prompt = a2.req.prompt                 # no tokens emitted yet
+    requeued, evicted = sched.preempt(a2, now=3)
+    assert requeued and evicted is None
+    assert a2.blocks == [] and a2.row == -1 and a2.n_preempt == 1
+    assert sched.ensure_capacity(a1, 16) is not None  # freed blocks flow
+    # the preempted request re-admits BEFORE any fresh arrival
+    sched.submit(_req(3, 4, 4, arrival=4))
+    sched.finish(a0, now=5)
+    sched.finish(a1, now=5)
+    sched.poll_arrivals(5)
+    readmitted = sched.admit_ready(5)
+    assert [sr.rid for sr in readmitted] == [2, 3]
+    assert readmitted[0] is a2 and readmitted[0].n_preempt == 1
+    for sr in readmitted:
+        sched.finish(sr, now=9)
+    assert alloc.free_blocks == alloc.capacity and not sched.has_work
+
+
+def test_bounded_queue_sheds_tail_and_preempt_evicts_newest():
+    """max_queue bounds arrived+preempted: poll tail-drops arrivals; a
+    preemption requeue into a full queue evicts the newest arrival, and a
+    queue of preempted peers drops the victim itself."""
+    alloc, sched = _preemptive(max_queue=1)
+    sched.submit(_req(0, 8, 8))
+    sched.submit(_req(1, 8, 8))
+    shed = sched.poll_arrivals(0)          # bound 1: the burst tail drops
+    assert [r.rid for r in shed] == [1]
+    (a0,) = sched.admit_ready(0)
+    sched.submit(_req(2, 8, 8, arrival=1))
+    assert sched.poll_arrivals(1) == []    # queue drained by admission
+    (a2,) = sched.admit_ready(1)
+    sched.submit(_req(3, 4, 4, arrival=2))
+    sched.poll_arrivals(2)                 # rid 3 fills the queue
+    assert sched.queue_len == 1
+    a2.resume_prompt = a2.req.prompt
+    requeued, evicted = sched.preempt(a2, now=2)
+    assert requeued and evicted.rid == 3   # newest arrival shed
+    a0.resume_prompt = a0.req.prompt
+    requeued, evicted = sched.preempt(a0, now=3)
+    assert not requeued and evicted is None   # queue all-preempted: drop
+    sched.finish(a0, now=3)                # engine retires it PREEMPTED
+    (b2,) = sched.admit_ready(4)
+    assert b2 is a2 and b2.n_preempt == 1
+    sched.finish(b2, now=9)
+    assert alloc.free_blocks == alloc.capacity and not sched.has_work
+
+
+def test_allocator_hide_blocks_and_check_invariants():
+    alloc = kv_pool.BlockAllocator(9)
+    assert alloc.hide_blocks(3) == 3
+    assert alloc.free_blocks == 5 and alloc.hidden_blocks == 3
+    alloc.check_invariants()
+    got = alloc.alloc(5)
+    assert got == [1, 2, 3, 4, 5]          # hiding popped the free TAIL
+    assert alloc.alloc(1) is None          # hidden blocks create pressure
+    alloc.check_invariants(tables=[got])
+    with pytest.raises(RuntimeError):
+        alloc.check_invariants(tables=[got, got[:1]])   # shared block
+    with pytest.raises(RuntimeError):
+        alloc.check_invariants(tables=[[8]])            # non-live block
+    assert alloc.unhide_all() == 3
+    assert alloc.free_blocks == 3 and alloc.hidden_blocks == 0
+    alloc.free(got)
+    assert alloc.free_blocks == alloc.capacity
+    alloc.check_invariants()
+    # corrupt the books on purpose: a leak must be loud
+    alloc._live.add(5)
+    with pytest.raises(RuntimeError):
+        alloc.check_invariants()
+
+
+@hypothesis.given(seed=st.integers(0, 2**16))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_preemptive_scheduler_random_ops_hold_invariants(seed):
+    """Random submit/admit/grow/preempt/finish/defrag/hide sequences: the
+    allocator books balance and tables stay disjoint after EVERY op."""
+    rnd = np.random.default_rng(seed)
+    alloc, sched = _preemptive(blocks=int(rnd.integers(6, 24)),
+                               max_batch=int(rnd.integers(2, 6)))
+    now, next_rid = 0, 0
+    for _ in range(60):
+        op = rnd.random()
+        if op < 0.3 and next_rid < 12:
+            pl = int(rnd.integers(1, 9))
+            mn = int(rnd.integers(1, 9))
+            if kv_pool.blocks_for(pl + mn, 4) <= alloc.capacity:
+                sched.submit(_req(next_rid, pl, mn, arrival=now))
+                next_rid += 1
+        elif op < 0.5:
+            sched.poll_arrivals(now)
+            sched.admit_ready(now)
+        elif op < 0.65 and sched.running:
+            sr = rnd.choice(list(sched.running.values()))
+            got = sched.ensure_capacity(sr, sr.ctx_len + 4)
+            if got is None:
+                victim = sched.pick_victim(exclude_rid=sr.rid)
+                if victim is not None:
+                    victim.resume_prompt = victim.req.prompt
+                    sched.preempt(victim, now)
+        elif op < 0.75 and sched.running:
+            victim = sched.pick_victim()
+            victim.resume_prompt = victim.req.prompt
+            sched.preempt(victim, now)
+        elif op < 0.85 and sched.running:
+            sched.finish(rnd.choice(list(sched.running.values())), now)
+        elif op < 0.92:
+            remap = alloc.defrag()          # engine remaps tables in step
+            for sr in sched.running.values():
+                sr.blocks = [remap.get(b, b) for b in sr.blocks]
+        elif alloc.hidden_blocks:
+            alloc.unhide_all()
+        else:
+            alloc.hide_blocks(int(rnd.integers(1, 3)))
+        alloc.check_invariants(
+            tables=[sr.blocks for sr in sched.running.values()])
+        now += int(rnd.integers(0, 3))
+    alloc.unhide_all()
+    for sr in list(sched.running.values()) + list(sched.preempted):
+        sched.finish(sr, now)
+    alloc.check_invariants()
+    assert alloc.free_blocks == alloc.capacity
 
 
 # ---------------------------------------------------------------------------
