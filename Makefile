@@ -2,7 +2,7 @@
 # ruff runs only when installed (the CI image always installs it).
 PY ?= python
 
-.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim serve-chaos
+.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim serve-chaos serve-validate
 
 ci: lint test
 
@@ -41,16 +41,31 @@ bench-prefill:
 
 # 50-request continuous-batching traffic sim (scheduler + paged KV pool
 # smoke: completion, O(1) dispatch/segment, and no-leak invariants).
+# Emits the run's metrics registry + Chrome trace (perfetto-openable) as
+# artifacts; `make serve-validate` smoke-checks them.
 serve-sim:
-	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --requests 50 --sim-only
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --requests 50 --sim-only \
+		--metrics-out serve_sim_metrics.prom --trace-out serve_sim_trace.json
 
 # 50-request seeded chaos smoke: hidden-block pool pressure, forced
 # preemption storms, NaN logits, and surprise cancels through the REAL
 # scheduler/allocator paths.  Asserts surviving requests are bit-identical
-# to the fault-free run, interrupted ones are clean prefixes, and the
-# allocator drains exactly full.
+# to the fault-free run, interrupted ones are clean prefixes, the
+# allocator drains exactly full, and the exported trace shows the injected
+# faults / preemptions / defrags as named events.
 serve-chaos:
-	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --chaos --smoke
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --chaos --smoke \
+		--metrics-out serve_chaos_metrics.prom --trace-out serve_chaos_trace.json
+
+# Validate the telemetry artifacts serve-sim / serve-chaos just wrote:
+# traces parse as Chrome trace-event JSON with the required phases
+# (X spans, i instants, C counters, M metadata) and serve events present.
+serve-validate:
+	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
+		serve_sim_trace.json --require-names segment,retire
+	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
+		serve_chaos_trace.json --require-names segment,preempt,retire \
+		--require-prefix fault:
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

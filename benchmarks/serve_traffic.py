@@ -57,6 +57,7 @@ from repro.core import backend as backend_lib
 from repro.models import model as model_lib
 from repro.serve import (ContinuousEngine, Engine, FaultInjector, Request,
                          RequestStatus)
+from repro.serve.telemetry import percentile, validate_chrome_trace
 
 
 def make_workload(n: int, *, vocab: int, mean_interarrival: float,
@@ -108,16 +109,20 @@ def run_continuous(ce: ContinuousEngine, reqs, *, iters: int):
         ts = [(float("nan"), float("nan"))]
     occ = [o for _, o in ce.occupancy_trace]
     frag = [f for _, f in ce.fragmentation_trace]
+    # Run stats come straight off the telemetry registry (the same values
+    # --metrics-out exports); the bench keeps no tallies of its own.
+    m = ce.metrics
     metrics = {
-        "segments": ce.last_run_segments,
-        "prefills": ce.last_run_prefills,
-        "prefill_chunks": ce.last_run_prefill_chunks,
-        "dispatches": ce.last_run_dispatches,
+        "segments": m.value("serve_segments_total"),
+        "prefills": m.value("serve_prefills_total"),
+        "prefill_chunks": m.value("serve_prefill_chunks_total"),
+        "dispatches": m.value("serve_dispatches_total"),
         "dispatches_per_segment":
-            (ce.last_run_dispatches - ce.last_run_prefills)
-            / max(ce.last_run_segments, 1),
-        "host_syncs": ce.last_run_host_syncs,
-        "defrags": ce.last_run_defrags,
+            (m.value("serve_dispatches_total")
+             - m.value("serve_prefills_total"))
+            / max(m.value("serve_segments_total"), 1),
+        "host_syncs": m.value("serve_host_syncs_total"),
+        "defrags": m.value("serve_defrags_total"),
         # Wall TTFT (eligible -> first sampled token) from the LAST timed
         # run: jit caches are warm, so this is steady-state admission
         # latency, separated from the decode-latency step percentiles.
@@ -183,10 +188,6 @@ def _status_counts(res) -> dict[str, int]:
     return counts
 
 
-def _pct(xs, q):
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
-
-
 def run_overload(args, cfg, params, plan) -> None:
     """Overload scenario: a burst workload against a pool far below its
     aggregate worst case, reservation baseline vs preemptive, equal pool.
@@ -227,10 +228,10 @@ def run_overload(args, cfg, params, plan) -> None:
             "sheds": ce.last_run_sheds,
             "timeouts": ce.last_run_timeouts,
             "status_counts": _status_counts(res),
-            "queue_delay_steps_p50": _pct(waits, 50),
-            "queue_delay_steps_p99": _pct(waits, 99),
-            "latency_steps_p50": _pct(lats, 50),
-            "latency_steps_p99": _pct(lats, 99),
+            "queue_delay_steps_p50": percentile(waits, 50, empty=0.0),
+            "queue_delay_steps_p99": percentile(waits, 99, empty=0.0),
+            "latency_steps_p50": percentile(lats, 50, empty=0.0),
+            "latency_steps_p99": percentile(lats, 99, empty=0.0),
             "ttft_p50_seconds": ce.ttft_percentile(50),
             "ttft_p99_seconds": ce.ttft_percentile(99),
         }
@@ -298,11 +299,28 @@ def run_chaos(args, cfg, params, plan) -> None:
             np.testing.assert_array_equal(got.tokens,
                                           want[:len(got.tokens)])
     counts = _status_counts(res)
+    # The faulted run's timeline must be a valid Chrome trace in which the
+    # chaos is *visible*: injected faults as fault:* instants, their
+    # fallout as preempt points and defrag spans (PR acceptance).
+    trace = validate_chrome_trace(
+        ce.tracer.to_chrome(),
+        require_names={"segment", "preempt", "retire"})
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert any(n.startswith("fault:") for n in names), \
+        f"no injected-fault events in the trace (names: {sorted(names)})"
+    assert (ce.last_run_defrags == 0) == ("defrag" not in names), \
+        "defrag spans must appear in the trace iff defrags ran"
+    if args.trace_out:
+        ce.export_trace(args.trace_out)
+    if args.metrics_out:
+        ce.export_metrics(args.metrics_out)
     print(f"[serve-chaos] {len(reqs)} requests, {len(fi.log)} fault "
           f"rounds, {ce.last_run_preemptions} preemptions, "
-          f"{ce.last_run_recomputes} recomputes, statuses {counts}: "
+          f"{ce.last_run_recomputes} recomputes, "
+          f"{ce.last_run_defrags} defrags, statuses {counts}: "
           f"{n_ok} OK bit-identical, interrupted all clean prefixes, "
-          f"pool drained — OK")
+          f"pool drained, trace valid "
+          f"({len(trace['traceEvents'])} events) — OK")
 
 
 def main() -> None:
@@ -348,6 +366,15 @@ def main() -> None:
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bound the admission queue (overload scenario)")
     ap.add_argument("--out", default="BENCH_PR3.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the (last) run's Chrome trace-event JSON "
+                    "here (perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the (last) run's metrics registry here "
+                    "(.json snapshot, else Prometheus text)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the tracer and raw rings (registry "
+                    "counters stay live; token streams are identical)")
     args = ap.parse_args()
 
     if args.overload or args.chaos:
@@ -391,7 +418,7 @@ def main() -> None:
         kv_blocks=args.kv_blocks, block_size=args.block_size,
         max_blocks_per_req=max_blocks_per_req,
         segment_len=args.segment_len, seq_bucket=args.seq_bucket,
-        paged_attn=args.paged_attn)
+        paged_attn=args.paged_attn, telemetry=not args.no_telemetry)
     reqs = make_workload(
         args.requests, vocab=cfg.vocab,
         mean_interarrival=args.mean_interarrival, prompt_lo=p_lo,
@@ -409,12 +436,41 @@ def main() -> None:
     lat = np.asarray([res[r.rid].latency_steps for r in reqs], np.float64)
 
     if args.sim_only:
+        if args.trace_out:
+            ce.export_trace(args.trace_out)
+        if args.metrics_out:
+            ce.export_metrics(args.metrics_out)
         print(f"[serve-sim] {len(reqs)} requests, "
               f"{useful_tokens} tokens, {metrics['segments']} segments, "
               f"{metrics['dispatches_per_segment']:.0f} dispatch/segment, "
-              f"p50 latency {np.percentile(lat, 50):.0f} steps, "
+              f"p50 latency {percentile(lat, 50, empty=0.0):.0f} steps, "
               f"occupancy max {metrics['kv_occupancy_max']:.2f} — OK")
         return
+
+    # Artifacts reflect the last telemetry-on run (the overhead gate below
+    # re-runs with the tracer off, which would leave an empty trace).
+    if args.trace_out:
+        ce.export_trace(args.trace_out)
+    if args.metrics_out:
+        ce.export_metrics(args.metrics_out)
+
+    # Telemetry-overhead gate: re-time the SAME warmed engine with the
+    # tracer and rings off (the registry stays live — counters back the
+    # run stats either way).  Full telemetry must cost < 3% wall tok/s;
+    # best-of-N on both sides keeps the gate about cost, not noise.
+    telemetry_overhead = float("nan")
+    if ce.telemetry.enabled and args.iters > 0:
+        ce.telemetry.set_enabled(False)
+        ts_off = []
+        for _ in range(args.iters):
+            t0 = time.perf_counter()
+            ce.run(reqs)
+            ts_off.append(time.perf_counter() - t0)
+        ce.telemetry.set_enabled(True)
+        telemetry_overhead = t_cont / min(ts_off) - 1.0
+        assert telemetry_overhead < 0.03, \
+            f"full telemetry costs {telemetry_overhead:.1%} wall clock " \
+            "vs --no-telemetry (gate: < 3%)"
 
     eng = Engine(frozen, cfg, max_len=ce.max_seq_len, plan=plan,
                  seq_bucket=args.seq_bucket)
@@ -456,8 +512,9 @@ def main() -> None:
         "prefill_seconds_continuous": t_cont_pf,
         "prefill_seconds_static": t_stat_pf,
         "static_decode_steps": static_steps,
-        "latency_steps_p50": float(np.percentile(lat, 50)),
-        "latency_steps_p99": float(np.percentile(lat, 99)),
+        "latency_steps_p50": percentile(lat, 50, empty=0.0),
+        "latency_steps_p99": percentile(lat, 99, empty=0.0),
+        "telemetry_overhead_frac": telemetry_overhead,
         **metrics,
     }
     with open(args.out, "w") as f:

@@ -68,6 +68,21 @@ def main():
     ap.add_argument("--deadline-steps", type=int, default=None,
                     help="continuous: retire any request still unfinished "
                     "this many decode steps after arrival as TIMEOUT")
+    ap.add_argument("--metrics-out", default=None,
+                    help="continuous: write the run's metrics registry "
+                    "here (.json -> snapshot, else Prometheus text)")
+    ap.add_argument("--trace-out", default=None,
+                    help="continuous: write the run's event timeline here "
+                    "(.jsonl -> one event per line, else Chrome "
+                    "trace-event JSON for perfetto / chrome://tracing)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="continuous: disable the tracer and raw rings "
+                    "(registry counters stay live; the token stream is "
+                    "identical either way)")
+    ap.add_argument("--profiler-annotations", action="store_true",
+                    help="continuous: wrap each jitted dispatch in a "
+                    "jax.profiler.TraceAnnotation named after its engine "
+                    "span (for captured device profiles)")
     args = ap.parse_args()
 
     if "XLA_FLAGS" not in os.environ:
@@ -112,7 +127,9 @@ def main():
             segment_len=args.segment_len, paged_attn=args.paged_attn,
             chunked_prefill=args.chunked_prefill,
             prefill_chunk=args.prefill_chunk,
-            preemption=args.preemption, max_queue=args.max_queue)
+            preemption=args.preemption, max_queue=args.max_queue,
+            telemetry=not args.no_telemetry,
+            profiler_annotations=args.profiler_annotations)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.poisson(2.0, size=args.batch))
         reqs = [
@@ -145,7 +162,14 @@ def main():
               f"{ce.last_run_sheds} shed, {ce.last_run_timeouts} timeout), "
               f"p50 latency {lat[len(lat)//2]} steps, TTFT p99 "
               f"{ce.ttft_percentile(99)*1e3:.1f}ms, peak pool occupancy "
-              f"{max(o for _, o in ce.occupancy_trace):.2f}")
+              f"{max((o for _, o in ce.occupancy_trace), default=0.0):.2f}")
+        if args.metrics_out:
+            ce.export_metrics(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
+        if args.trace_out:
+            ce.export_trace(args.trace_out)
+            print(f"trace -> {args.trace_out} (open in https://ui.perfetto."
+                  "dev or chrome://tracing)")
         return
 
     shape = tuple(int(x) for x in args.mesh_shape.split(","))

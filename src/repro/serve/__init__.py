@@ -6,13 +6,18 @@
 - scheduler               — request lifecycle + preemptive FCFS admission
 - server.ContinuousEngine — continuous batching over the pool
 - faults.FaultInjector    — seeded chaos schedule for robustness tests
+- telemetry               — metrics registry + request/segment tracer
+                            (Prometheus / JSONL / Chrome trace exports)
 """
 from repro.serve.engine import Engine, GenerationResult
 from repro.serve.faults import FaultInjector
 from repro.serve.scheduler import Request, RequestStatus, Scheduler, State
 from repro.serve.server import ContinuousEngine, RequestResult
+from repro.serve.telemetry import (MetricsRegistry, Telemetry, Tracer,
+                                   validate_chrome_trace)
 
 __all__ = [
     "Engine", "GenerationResult", "Request", "RequestStatus", "Scheduler",
     "State", "ContinuousEngine", "RequestResult", "FaultInjector",
+    "MetricsRegistry", "Telemetry", "Tracer", "validate_chrome_trace",
 ]

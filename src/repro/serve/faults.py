@@ -38,6 +38,25 @@ import dataclasses
 import numpy as np
 
 
+def describe(acts: dict) -> list[tuple[str, dict]]:
+    """Flatten one round's action dict into ``(event_name, args)`` pairs
+    for the trace timeline: ``{"hide": 2, "poison": [3]}`` becomes
+    ``[("fault:hide", {"n": 2}), ("fault:poison", {"rids": [3]})]``.  The
+    engine records each pair as a named instant, so a chaos run's injected
+    schedule is visually replayable next to its fallout (preemption
+    storms, FAILED quarantines) in perfetto."""
+    out = []
+    for kind, val in acts.items():
+        if isinstance(val, bool):
+            args: dict = {}
+        elif isinstance(val, (list, tuple)):
+            args = {"rids": [int(v) for v in val]}
+        else:
+            args = {"n": int(val)}
+        out.append((f"fault:{kind}", args))
+    return out
+
+
 @dataclasses.dataclass
 class FaultInjector:
     """Per-round chaos schedule for ``ContinuousEngine.run_stream``.

@@ -184,6 +184,17 @@ class BlockAllocator:
             return 0.0
         return self.hole_blocks / max(self._live)
 
+    def stats(self) -> dict:
+        """One-call pool health snapshot (the engine samples this once per
+        scheduler round for its gauges / trace counters)."""
+        return {"capacity": self.capacity,
+                "free": self.free_blocks,
+                "live": self.live_blocks,
+                "hidden": self.hidden_blocks,
+                "holes": self.hole_blocks,
+                "occupancy": self.occupancy(),
+                "fragmentation": self.fragmentation()}
+
     def alloc(self, n: int) -> list[int] | None:
         """n blocks, or None (all-or-nothing) when fewer than n are free."""
         if n < 0:

@@ -161,13 +161,18 @@ class ScheduledRequest:
 class Scheduler:
     def __init__(self, allocator: BlockAllocator, max_batch: int,
                  block_size: int, *, preemptive: bool = False,
-                 max_queue: int | None = None, debug: bool = False):
+                 max_queue: int | None = None, debug: bool = False,
+                 metrics=None):
         self.allocator = allocator
         self.max_batch = max_batch
         self.block_size = block_size
         self.preemptive = preemptive
         self.max_queue = max_queue
         self.debug = debug
+        # Optional telemetry.MetricsRegistry: the scheduler reports its own
+        # decisions (submissions, admissions, queue depth) and stays fully
+        # functional without one (standalone/unit use).
+        self.metrics = metrics
         self.pending: collections.deque[Request] = collections.deque()
         self.arrived: collections.deque[Request] = collections.deque()
         self.preempted: list[ScheduledRequest] = []   # FCFS by submit order
@@ -199,6 +204,8 @@ class Scheduler:
         self._last_arrival = req.arrival_step
         self._submit_seq[req.rid] = len(self._submit_seq)
         self.pending.append(req)
+        if self.metrics is not None:
+            self.metrics.counter("serve_submitted_total").inc()
 
     @property
     def has_work(self) -> bool:
@@ -298,6 +305,11 @@ class Scheduler:
             self.running[sr.row] = sr
             self.arrived.popleft()
             admitted.append(sr)
+        if self.metrics is not None:
+            if admitted:
+                self.metrics.counter("serve_admissions_total").inc(
+                    len(admitted))
+            self.metrics.gauge("serve_queue_depth").set(self.queue_len)
         return admitted
 
     def ensure_capacity(self, sr: ScheduledRequest,

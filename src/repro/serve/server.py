@@ -96,7 +96,9 @@ import numpy as np
 from repro.core import backend as backend_lib
 from repro.kernels import autotune
 from repro.models import model as model_lib
+from repro.serve import faults as faults_lib
 from repro.serve import kv_pool
+from repro.serve import telemetry as telemetry_lib
 from repro.serve.engine import Engine
 from repro.serve.scheduler import (Request, RequestStatus, ScheduledRequest,
                                    Scheduler, State)
@@ -151,7 +153,10 @@ class ContinuousEngine:
                  prefill_chunk: int | None = None,
                  preemption: str = "recompute",
                  max_queue: int | None = None,
-                 debug_invariants: bool = False):
+                 debug_invariants: bool = False,
+                 telemetry=None,
+                 trace_samples: int = 4096,
+                 profiler_annotations: bool = False):
         if cfg.arch_type != "dense" or cfg.sliding_window is not None:
             raise ValueError(
                 "continuous batching serves dense-attention archs without "
@@ -215,35 +220,63 @@ class ContinuousEngine:
         self.pages = kv_pool.init_pages(cfg, kv_blocks, block_size, dtype)
         self._fn_cache: dict = {}
         self._cancel_req: set[int] = set()
-        # Host->device dispatch accounting (jitted executions) and
-        # device->host sync accounting (blocking transfers: one per segment
-        # harvest and one per admission *round*, never one per request).
-        self.dispatch_count = 0
-        self.last_run_segments = 0
-        self.last_run_prefills = 0
-        self.last_run_prefill_chunks = 0
-        self.last_run_dispatches = 0
-        self.last_run_host_syncs = 0
-        self.last_run_defrags = 0
-        self.last_run_preemptions = 0
-        self.last_run_recomputes = 0
-        self.last_run_sheds = 0
-        self.last_run_timeouts = 0
-        self.last_run_cancels = 0
-        self.last_run_failed = 0
-        self.last_run_max_concurrency = 0
-        self.last_run_prefill_seconds = 0.0
-        self.last_run_ttft_seconds: dict[int, float] = {}
-        self.occupancy_trace: list[tuple[int, float]] = []
-        self.fragmentation_trace: list[tuple[int, float]] = []
+        # All run accounting lives in ONE place: the telemetry registry
+        # (counters/gauges/histograms) plus the tracer's event timeline.
+        # The legacy `last_run_*` attributes are thin registry reads (see
+        # the property loop below the class) and the old hand-maintained
+        # reset blocks collapse into Telemetry.reset_run().
+        if isinstance(telemetry, telemetry_lib.Telemetry):
+            self.telemetry = telemetry
+        else:
+            self.telemetry = telemetry_lib.Telemetry(
+                enabled=True if telemetry is None else bool(telemetry),
+                trace_samples=trace_samples,
+                profiler_annotations=profiler_annotations)
+
+    # ------------------------------------------------------------ telemetry
+
+    @property
+    def metrics(self) -> telemetry_lib.MetricsRegistry:
+        return self.telemetry.metrics
+
+    @property
+    def tracer(self) -> telemetry_lib.Tracer:
+        return self.telemetry.tracer
+
+    @property
+    def dispatch_count(self) -> int:
+        """Jitted dispatches since engine construction (lifetime)."""
+        return self.metrics.value("serve_lifetime_dispatches_total")
+
+    @property
+    def last_run_ttft_seconds(self) -> dict[int, float]:
+        """{rid: wall TTFT seconds} over the last run."""
+        return self.telemetry.ttft_seconds
+
+    @property
+    def occupancy_trace(self):
+        """Bounded per-round ring of (sim_step, pool occupancy)."""
+        return self.telemetry.occupancy_trace
+
+    @property
+    def fragmentation_trace(self):
+        """Bounded per-round ring of (sim_step, pool fragmentation)."""
+        return self.telemetry.fragmentation_trace
+
+    def export_metrics(self, path: str) -> None:
+        """Write the registry: .json -> snapshot, else Prometheus text."""
+        self.metrics.write(path)
+
+    def export_trace(self, path: str) -> None:
+        """Write the event timeline: .jsonl -> one event per line, else
+        Chrome trace-event JSON (opens in perfetto / chrome://tracing)."""
+        self.tracer.write(path)
 
     def ttft_percentile(self, pct: float) -> float:
         """Wall-clock time-to-first-token percentile over the last run
         (eligible-for-admission -> first sampled token harvested)."""
-        vals = list(self.last_run_ttft_seconds.values())
-        if not vals:
-            return float("nan")
-        return float(np.percentile(np.asarray(vals, np.float64), pct))
+        return telemetry_lib.percentile(
+            self.telemetry.ttft_seconds.values(), pct)
 
     def cancel(self, rid: int) -> None:
         """Request cancellation of `rid`.  Honored at the next scheduler
@@ -254,10 +287,15 @@ class ContinuousEngine:
         ignored."""
         self._cancel_req.add(rid)
 
-    def _dispatch(self, fn, *args):
-        self.dispatch_count += 1
-        self.last_run_dispatches += 1
-        return fn(*args)
+    def _dispatch(self, fn, *args, name: str = "dispatch"):
+        self.metrics.counter("serve_dispatches_total").inc()
+        self.metrics.counter("serve_lifetime_dispatches_total").inc()
+        # Optional jax.profiler.TraceAnnotation scope: a device profile
+        # captured around run() shows each dispatch named after the engine
+        # span it belongs to, so profiler rows line up with the tracer's
+        # segment spans in perfetto.
+        with self.telemetry.annotate(f"serve/{name}"):
+            return fn(*args)
 
     # ------------------------------------------------------------------ jit
 
@@ -436,21 +474,24 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------ run
 
-    def _maybe_defrag(self, sched: Scheduler,
-                      tables: np.ndarray) -> np.ndarray:
+    def _maybe_defrag(self, sched: Scheduler, tables: np.ndarray,
+                      now: int = -1) -> np.ndarray:
         """Compact live blocks onto the lowest page slots (maintenance;
         correctness never depends on placement, tested).  Rewrites the row
         block tables AND every running request's scheduler-side block list
         so later growth/free operate on the moved ids."""
         if not self.allocator.fragmented:
             return tables
+        t0 = self.tracer.now()
         remap = self.allocator.defrag()
         if remap:
             self.pages, tables = kv_pool.apply_defrag(
                 self.pages, tables, remap)
             for sr in sched.running.values():
                 sr.blocks = [remap.get(b, b) for b in sr.blocks]
-            self.last_run_defrags += 1
+            self.metrics.counter("serve_defrags_total").inc()
+            self.tracer.span("defrag", t0, self.tracer.now(), cat="pool",
+                             args={"step": now, "moved": len(remap)})
         return tables
 
     def run(self, requests: Sequence[Request], *, key=None,
@@ -493,10 +534,17 @@ class ContinuousEngine:
         seg_len = self.segment_len
         stop_w = max((len(r.stop_tokens) for r in requests), default=0) or 1
 
+        # ONE run-scoped reset for every counter, histogram, ring, and the
+        # trace buffer (the two hand-maintained last_run_* blocks this
+        # replaces had already drifted once; the registry cannot).
+        self._cancel_req = set()
+        self.telemetry.reset_run()
+
         sched = Scheduler(self.allocator, self.max_batch, self.block_size,
                           preemptive=self.preemption == "recompute",
                           max_queue=self.max_queue,
-                          debug=self.debug_invariants)
+                          debug=self.debug_invariants,
+                          metrics=self.metrics)
         for r in sorted(requests, key=lambda r: r.arrival_step):
             sched.submit(r)
 
@@ -510,25 +558,6 @@ class ContinuousEngine:
         stops = np.full((mb, stop_w), -1, np.int32)
         tables = np.zeros((mb, nbr), np.int32)
         streams: dict[int, tuple[list, list]] = {}
-
-        self._cancel_req = set()
-        self.last_run_segments = 0
-        self.last_run_prefills = 0
-        self.last_run_prefill_chunks = 0
-        self.last_run_dispatches = 0
-        self.last_run_host_syncs = 0
-        self.last_run_defrags = 0
-        self.last_run_preemptions = 0
-        self.last_run_recomputes = 0
-        self.last_run_sheds = 0
-        self.last_run_timeouts = 0
-        self.last_run_cancels = 0
-        self.last_run_failed = 0
-        self.last_run_max_concurrency = 0
-        self.last_run_prefill_seconds = 0.0
-        self.last_run_ttft_seconds = {}
-        self.occupancy_trace = []
-        self.fragmentation_trace = []
 
         seg_fn = self._segment_fn(plan, greedy, seg_len, stop_w)
         pad = jnp.asarray(-1, jnp.int32)
@@ -561,6 +590,11 @@ class ContinuousEngine:
             logprobs=np.zeros(0, np.float32), finish_reason=status.value,
             arrival_step=req.arrival_step, admitted_step=-1,
             first_token_step=-1, finished_step=now, status=status)
+        self.metrics.counter(
+            "serve_requests_total", "Requests retired, by terminal status",
+            labels={"status": status.value}).inc()
+        self.tracer.request_retire(req.rid, status.value, step=now,
+                                   n_tokens=0)
         return {"event": "finish", "rid": req.rid, "step": now,
                 "result": result}
 
@@ -588,6 +622,11 @@ class ContinuousEngine:
             ttft_seconds=self.last_run_ttft_seconds.get(
                 sr.rid, float("nan")),
             status=status, n_preemptions=sr.n_preempt)
+        self.metrics.counter(
+            "serve_requests_total", "Requests retired, by terminal status",
+            labels={"status": status.value}).inc()
+        self.tracer.request_retire(sr.rid, status.value, step=now,
+                                   n_tokens=len(toks))
         return {"event": "finish", "rid": sr.rid, "step": now,
                 "result": result}
 
@@ -623,11 +662,13 @@ class ContinuousEngine:
         tables[row] = kv_pool.NULL_BLOCK
         lens[row] = 0
         done[row] = True
-        self.last_run_preemptions += 1
+        self.metrics.counter("serve_preemptions_total").inc()
+        self.tracer.request_point(victim.rid, "preempt", step=now,
+                                  n_out=victim.n_out)
         yield {"event": "preempt", "rid": victim.rid, "step": now,
                "n_out": victim.n_out}
         if evicted is not None:
-            self.last_run_sheds += 1
+            self.metrics.counter("serve_sheds_total").inc()
             yield self._retire_unadmitted(evicted, RequestStatus.SHED, now)
         if not requeued:
             yield self._retire_record(sched, victim,
@@ -680,6 +721,13 @@ class ContinuousEngine:
                     [sr.rid for sr in sched.running.values()],
                     [r.rid for r in sched.arrived]
                     + [s.rid for s in sched.preempted])
+                # Every injected action lands in the trace as a named
+                # instant, so a chaos run is visually replayable: the
+                # preemption storm that follows a fault:hide is right
+                # there on the timeline.
+                for ev_name, ev_args in faults_lib.describe(acts):
+                    self.tracer.instant(ev_name, cat="fault",
+                                        args={"step": now, **ev_args})
                 if acts.get("unhide"):
                     self.allocator.unhide_all()
                 if acts.get("hide"):
@@ -699,25 +747,26 @@ class ContinuousEngine:
 
             # ---- arrivals, overload shedding, cancels, deadlines -------
             for req in sched.poll_arrivals(now):
-                self.last_run_sheds += 1
+                self.metrics.counter("serve_sheds_total").inc()
                 yield self._retire_unadmitted(req, RequestStatus.SHED, now)
             if self._cancel_req:
+                cancels = self.metrics.counter("serve_cancels_total")
                 for rid in sorted(self._cancel_req):
                     sr = next((s for s in sched.running.values()
                                if s.rid == rid), None)
                     if sr is not None:
-                        self.last_run_cancels += 1
+                        cancels.inc()
                         yield self._retire_record(
                             sched, sr, RequestStatus.CANCELLED, now,
                             streams, tables, lens, done)
                         continue
                     obj = sched.remove_queued(rid)
                     if isinstance(obj, Request):
-                        self.last_run_cancels += 1
+                        cancels.inc()
                         yield self._retire_unadmitted(
                             obj, RequestStatus.CANCELLED, now)
                     elif obj is not None:      # preempted, holds progress
-                        self.last_run_cancels += 1
+                        cancels.inc()
                         yield self._retire_record(
                             sched, obj, RequestStatus.CANCELLED, now,
                             streams, tables, lens, done)
@@ -725,7 +774,7 @@ class ContinuousEngine:
             for sr in list(sched.running.values()) + list(sched.preempted):
                 dl = sr.req.deadline_steps
                 if dl is not None and now - sr.req.arrival_step >= dl:
-                    self.last_run_timeouts += 1
+                    self.metrics.counter("serve_timeouts_total").inc()
                     yield self._retire_record(
                         sched, sr, RequestStatus.TIMEOUT, now, streams,
                         tables, lens, done)
@@ -733,7 +782,7 @@ class ContinuousEngine:
                         if r.deadline_steps is not None
                         and now - r.arrival_step >= r.deadline_steps]:
                 sched.arrived.remove(req)
-                self.last_run_timeouts += 1
+                self.metrics.counter("serve_timeouts_total").inc()
                 yield self._retire_unadmitted(req, RequestStatus.TIMEOUT,
                                               now)
 
@@ -742,7 +791,9 @@ class ContinuousEngine:
             # sampled token harvested (so queueing behind a busy pool AND
             # head-of-line prefill stalls both count).
             for r in sched.arrived:
-                eligible_wall.setdefault(r.rid, t_round)
+                if r.rid not in eligible_wall:
+                    eligible_wall[r.rid] = t_round
+                    self.tracer.request_point(r.rid, "arrive", step=now)
             # Defrag policy: a fixed interval when configured (tests /
             # worst-case bounding), else adaptively whenever the live span's
             # hole fraction crosses the threshold — keeps block tables
@@ -753,12 +804,12 @@ class ContinuousEngine:
             # permutation to relocate a couple of blocks.
             if self.defrag_interval:
                 if n_loops % self.defrag_interval == 0:
-                    tables = self._maybe_defrag(sched, tables)
+                    tables = self._maybe_defrag(sched, tables, now)
             elif (self.defrag_threshold is not None
                   and self.allocator.hole_blocks >= self.defrag_min_holes
                   and self.allocator.fragmentation()
                   >= self.defrag_threshold):
-                tables = self._maybe_defrag(sched, tables)
+                tables = self._maybe_defrag(sched, tables, now)
 
             # ---- admission (fresh arrivals AND recompute re-admits) ----
             pending_tok0: list[tuple[ScheduledRequest, Any]] = []
@@ -774,7 +825,14 @@ class ContinuousEngine:
                 tables[row, :len(sr.blocks)] = sr.blocks
                 streams.setdefault(req.rid, ([], []))
                 if sr.n_preempt > 0:
-                    self.last_run_recomputes += 1
+                    self.metrics.counter("serve_recomputes_total").inc()
+                else:
+                    self.metrics.histogram(
+                        "serve_queue_delay_steps").observe(
+                            now - req.arrival_step)
+                self.tracer.request_point(
+                    req.rid, "resume" if sr.n_preempt > 0 else "admit",
+                    step=now, row=row, blocks=len(sr.blocks))
                 if chunked:
                     # The (possibly resumed) prompt streams into the pool
                     # chunk by chunk inside the mixed segments; the row
@@ -790,9 +848,13 @@ class ContinuousEngine:
                     lens[row] = sr.cur_prompt_len
                     done[row] = False
                     t0 = time.perf_counter()
+                    ta = self.tracer.now()
                     pending_tok0.append(
                         (sr, self._admit(sr, plan, greedy, rng, temp)))
                     pf_wall += time.perf_counter() - t0
+                    self.tracer.span(
+                        "admit_prefill", ta, self.tracer.now(),
+                        cat="prefill", args={"step": now, "rid": req.rid})
                 yield {"event": "admit", "rid": req.rid, "step": now,
                        "recompute": sr.n_preempt > 0}
             if pending_tok0:
@@ -801,20 +863,44 @@ class ContinuousEngine:
                 # the round joins once, instead of each admission blocking
                 # on its own int(tok0[0]).
                 t0 = time.perf_counter()
+                ta = self.tracer.now()
                 vals = jax.device_get([t for _, t in pending_tok0])
-                self.last_run_host_syncs += 1
+                self.metrics.counter("serve_host_syncs_total").inc()
                 for (sr, _), v in zip(pending_tok0, vals):
                     sr._tok0 = int(v[0])
                     tok[sr.row] = sr._tok0
                 # Dispatch + join time only: the run_stream consumer's
                 # per-event work between admissions is not prefill cost.
-                self.last_run_prefill_seconds += \
-                    pf_wall + (time.perf_counter() - t0)
-            self.last_run_max_concurrency = max(
-                self.last_run_max_concurrency, len(sched.running))
-            self.occupancy_trace.append((now, self.allocator.occupancy()))
-            self.fragmentation_trace.append(
-                (now, self.allocator.fragmentation()))
+                self.metrics.counter("serve_prefill_seconds_total").inc(
+                    pf_wall + (time.perf_counter() - t0))
+                self.tracer.span(
+                    "admit_join", ta, self.tracer.now(), cat="prefill",
+                    args={"step": now, "n_requests": len(pending_tok0)})
+            self.metrics.gauge("serve_max_concurrency").set_max(
+                len(sched.running))
+            # Pool / batch health sampled once per round: gauges carry the
+            # latest value, bounded rings keep the raw per-round series,
+            # and 'C' trace events render stacked charts in perfetto.
+            stats = self.allocator.stats()
+            self.metrics.gauge("serve_pool_occupancy").set(
+                stats["occupancy"])
+            self.metrics.gauge("serve_pool_fragmentation").set(
+                stats["fragmentation"])
+            self.metrics.gauge("serve_running").set(len(sched.running))
+            if self.telemetry.enabled:
+                self.telemetry.occupancy_trace.append(
+                    (now, stats["occupancy"]))
+                self.telemetry.fragmentation_trace.append(
+                    (now, stats["fragmentation"]))
+                ts_round = self.tracer.now()
+                self.tracer.counter(
+                    "pool blocks", {"live": stats["live"],
+                                    "free": stats["free"],
+                                    "hidden": stats["hidden"]},
+                    ts=ts_round)
+                self.tracer.counter(
+                    "requests", {"running": len(sched.running),
+                                 "queued": sched.queue_len}, ts=ts_round)
 
             if not sched.running:
                 if not sched.has_work:
@@ -950,21 +1036,24 @@ class ContinuousEngine:
                 mixed_fn = self._mixed_segment_fn(
                     plan, greedy, self.segment_len, stop_w, chunk, pb,
                     has_past)
+                t_seg = self.tracer.now()
                 outs = self._dispatch(
                     mixed_fn, self.params, self.pages, seg_tables, pf_idx,
                     pf_tables, pf_tok, pf_pos, pf_cnt, pf_on, pf_fin,
                     pf_t0, tok, n_out, lens, done, rids, max_new, stops,
-                    poison_v, rng, temp, pad)
-                self.last_run_prefill_chunks += len(pf_rows)
+                    poison_v, rng, temp, pad, name="mixed_segment")
+                self.metrics.counter("serve_prefill_chunks_total").inc(
+                    len(pf_rows))
             else:
+                t_seg = self.tracer.now()
                 outs = self._dispatch(
                     seg_fn, self.params, self.pages, seg_tables, tok,
                     n_out, lens, done, rids, max_new, stops, poison_v,
-                    rng, temp, pad)
+                    rng, temp, pad, name="decode_segment")
             (pages, tok_d, n_out_d, lens_d, done_d, failed_d, out_t,
              out_lp, i_exec) = outs
             self.pages = pages
-            self.last_run_segments += 1
+            self.metrics.counter("serve_segments_total").inc()
             # ONE device->host transfer for the whole harvest (np.array
             # copies: the row state is mutated on admit/finish and raw jax
             # buffers are read-only); the pages stay device-resident.
@@ -972,13 +1061,29 @@ class ContinuousEngine:
                 np.array(a) for a in jax.device_get(
                     (tok_d, n_out_d, lens_d, done_d, failed_d, out_t,
                      out_lp, i_exec)))
-            self.last_run_host_syncs += 1
+            self.metrics.counter("serve_host_syncs_total").inc()
             t_harvest = time.perf_counter()
+            # The segment span covers dispatch -> harvested (device work +
+            # the one blocking join), i.e. everything between two
+            # scheduler rounds that isn't host bookkeeping.
+            self.tracer.span(
+                "segment", t_seg, self.tracer.now(),
+                args={"step": now,
+                      "index": self.metrics.value("serve_segments_total"),
+                      "kind": "mixed" if pf_rows else "decode",
+                      "rows_live": len(sched.running),
+                      "rows_prefill": len(pf_rows),
+                      "steps": int(i_exec), "table_width": int(w),
+                      "occupancy": stats["occupancy"],
+                      "fragmentation": stats["fragmentation"]})
             n_out = n_out_new          # sr.n_out still holds the pre-segment
             #                            count until each row is harvested
             for row, sr, cnt, fin in pf_rows:
                 sr.pf_written += cnt
                 sr.ctx_len = sr.pf_written
+                self.tracer.request_point(
+                    sr.rid, "prefill_chunk", step=now, n_tok=cnt,
+                    written=sr.pf_written, final=fin)
 
             for row, sr in list(sched.running.items()):
                 if chunked and sr.state is State.PREFILL \
@@ -988,9 +1093,19 @@ class ContinuousEngine:
                 if cnt > 0:
                     if sr.n_out == 0:
                         sr.first_token_step = now + 1
-                        self.last_run_ttft_seconds[sr.rid] = (
-                            t_harvest
-                            - eligible_wall.get(sr.rid, t_harvest))
+                        ttft = (t_harvest
+                                - eligible_wall.get(sr.rid, t_harvest))
+                        if sr.rid not in self.telemetry.ttft_seconds:
+                            # First token ever for this rid: one histogram
+                            # sample + one timeline milestone per request
+                            # (an int8 full-restart recompute re-enters
+                            # n_out==0 and would otherwise double-count).
+                            self.metrics.histogram(
+                                "serve_ttft_seconds").observe(ttft)
+                            self.tracer.request_point(
+                                sr.rid, "first_token", step=now + 1,
+                                ttft_s=ttft)
+                        self.telemetry.ttft_seconds[sr.rid] = ttft
                     if sr.state is State.PREFILL:
                         sr.state = State.DECODE
                     streams[sr.rid][0].extend(
@@ -1007,7 +1122,7 @@ class ContinuousEngine:
                     # Non-finite logits quarantined this row mid-segment:
                     # its clean prefix was harvested above; the batch
                     # peers never saw the NaN.
-                    self.last_run_failed += 1
+                    self.metrics.counter("serve_failed_total").inc()
                     yield self._retire_record(
                         sched, sr, RequestStatus.FAILED, now + cnt,
                         streams, tables, lens, done)
@@ -1022,6 +1137,17 @@ class ContinuousEngine:
                     # valid positions until the row is reused.
                     tables[row] = kv_pool.NULL_BLOCK
                     lens[row] = 0
+                    self.metrics.counter(
+                        "serve_requests_total",
+                        "Requests retired, by terminal status",
+                        labels={"status": RequestStatus.OK.value}).inc()
+                    self.metrics.histogram(
+                        "serve_request_latency_steps").observe(
+                            sr.finished_step - sr.req.arrival_step)
+                    self.tracer.request_retire(
+                        sr.rid, RequestStatus.OK.value,
+                        step=sr.finished_step, n_tokens=len(toks),
+                        finish_reason=reason)
                     result = RequestResult(
                         rid=sr.rid,
                         tokens=np.asarray(toks, np.int32),
@@ -1064,6 +1190,43 @@ class ContinuousEngine:
             fn, self.params, self.pages, batch["tokens"],
             jnp.asarray(sr.cur_prompt_len, jnp.int32), bt_pf,
             jnp.asarray([req.rid], jnp.int32), rng,
-            jnp.asarray(sr.n_out, jnp.int32), temp)
-        self.last_run_prefills += 1
+            jnp.asarray(sr.n_out, jnp.int32), temp, name="prefill")
+        self.metrics.counter("serve_prefills_total").inc()
         return tok0
+
+
+# ---------------------------------------------------------------------------
+# Back-compat: the legacy hand-maintained ``last_run_*`` integers are now
+# read-only views of the registry (one metric each).  Existing callers
+# (benchmarks, launch printouts, tests) keep working unchanged; new code
+# should read the registry / exports directly.
+# ---------------------------------------------------------------------------
+
+_RUN_METRIC_ATTRS = {
+    "last_run_segments": "serve_segments_total",
+    "last_run_prefills": "serve_prefills_total",
+    "last_run_prefill_chunks": "serve_prefill_chunks_total",
+    "last_run_dispatches": "serve_dispatches_total",
+    "last_run_host_syncs": "serve_host_syncs_total",
+    "last_run_defrags": "serve_defrags_total",
+    "last_run_preemptions": "serve_preemptions_total",
+    "last_run_recomputes": "serve_recomputes_total",
+    "last_run_sheds": "serve_sheds_total",
+    "last_run_timeouts": "serve_timeouts_total",
+    "last_run_cancels": "serve_cancels_total",
+    "last_run_failed": "serve_failed_total",
+    "last_run_max_concurrency": "serve_max_concurrency",
+    "last_run_prefill_seconds": "serve_prefill_seconds_total",
+}
+
+
+def _run_metric_property(metric: str) -> property:
+    def read(self):
+        return self.metrics.value(metric)
+    read.__doc__ = f"Legacy run stat: reads the {metric!r} registry value."
+    return property(read)
+
+
+for _attr, _metric in _RUN_METRIC_ATTRS.items():
+    setattr(ContinuousEngine, _attr, _run_metric_property(_metric))
+del _attr, _metric
