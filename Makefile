@@ -2,7 +2,7 @@
 # ruff runs only when installed (the CI image always installs it).
 PY ?= python
 
-.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim serve-chaos serve-validate
+.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim serve-chaos serve-recover serve-validate
 
 ci: lint test
 
@@ -20,7 +20,7 @@ bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
 	PYTHONPATH=src $(PY) benchmarks/paged_attention.py --smoke --check --out BENCH_PR4.json
 	PYTHONPATH=src $(PY) benchmarks/prefill.py --smoke --check --out BENCH_PR5.json
-	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --overload --smoke --out BENCH_PR7.json
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --overload --smoke --out BENCH_PR9.json
 
 # Paged-attention gate: measures fresh (never trusts a checked-in JSON)
 # and asserts the fused path's decode tok/s >= the gather-dense path at
@@ -57,15 +57,33 @@ serve-chaos:
 	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --chaos --smoke \
 		--metrics-out serve_chaos_metrics.prom --trace-out serve_chaos_trace.json
 
-# Validate the telemetry artifacts serve-sim / serve-chaos just wrote:
-# traces parse as Chrome trace-event JSON with the required phases
-# (X spans, i instants, C counters, M metadata) and serve events present.
+# Crash-point recovery chaos: a page-out run with periodic snapshots is
+# killed mid-flight by a scripted CrashPoint; a FRESH engine restores the
+# last snapshot and resumes.  Asserts every request completes
+# bit-identically to an uninterrupted run, and exports the crash + resume
+# traces (spill / snapshot / recover spans) plus the snapshot directory.
+serve-recover:
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --recover --smoke \
+		--snapshot-dir serve_recover_snaps \
+		--metrics-out serve_recover_metrics.prom \
+		--trace-out serve_recover_trace.json
+
+# Validate the telemetry artifacts serve-sim / serve-chaos / serve-recover
+# just wrote: traces parse as Chrome trace-event JSON with the required
+# phases (X spans, i instants, C counters, M metadata) and serve events
+# present.
 serve-validate:
 	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
 		serve_sim_trace.json --require-names segment,retire
 	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
 		serve_chaos_trace.json --require-names segment,preempt,retire \
 		--require-prefix fault:
+	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
+		serve_recover_trace.json \
+		--require-names segment,spill,snapshot,preempt --require-prefix fault:
+	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
+		serve_recover_trace_resume.json \
+		--require-names recover,segment,retire
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \

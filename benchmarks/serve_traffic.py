@@ -20,26 +20,37 @@ On CPU absolute numbers are structural, not silicon (kernels run in
 interpret mode); the headline fields are the continuous/static ratio and
 the dispatch counts, which transfer.
 
-Two robustness modes ride on the same harness:
+Three robustness modes ride on the same harness:
 
-  * --overload (BENCH_PR7.json): the same burst workload through a pool
+  * --overload (BENCH_PR9.json): the same burst workload through a pool
     far below its aggregate worst case, once under the reservation
-    baseline (preemption off: admission reserves worst-case blocks) and
-    once preemptive (admit on actual prompt blocks, evict + recompute on
-    growth failure).  Reports max concurrency, preempt / recompute /
-    shed / timeout counts, queue-delay and latency percentiles — and
-    asserts the preemptive scheduler sustains strictly more concurrent
-    requests at equal pool size.
+    baseline (preemption off: admission reserves worst-case blocks),
+    once preemptive-recompute (admit on actual prompt blocks, evict +
+    recompute on growth failure), and once page-out (evict by spilling
+    the victim's KV pages to host, scatter them back on re-admission).
+    Reports max concurrency, preempt / recompute / spill / shed /
+    timeout counts, spill bytes, queue-delay / latency / victim-resume
+    percentiles — and asserts (a) preemptive admission sustains strictly
+    more concurrent requests than reservation at equal pool size and
+    (b) page-out beats recompute on median victim resume latency (a
+    host->device scatter vs a full re-prefill forward).
   * --chaos: seeded FaultInjector chaos (hidden blocks, forced
     preemptions, NaN logits, surprise cancels) over ~50 requests; every
     surviving request must be bit-identical to the fault-free run, every
     interrupted one a clean prefix, and the pool must drain exactly full.
+  * --recover: crash-point chaos — a page-out run with periodic
+    snapshots is killed mid-flight by a scripted CrashPoint; a FRESH
+    engine restores the last snapshot and resumes, and every request
+    must complete bit-identically to an uninterrupted reference run.
+    Crash + resume traces (spill / snapshot / recover spans) and the
+    snapshot directory are the CI artifacts.
 
 Usage:
   PYTHONPATH=src python benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
   PYTHONPATH=src python benchmarks/serve_traffic.py --requests 50 --sim-only
   PYTHONPATH=src python benchmarks/serve_traffic.py --overload --smoke
   PYTHONPATH=src python benchmarks/serve_traffic.py --chaos --requests 50
+  PYTHONPATH=src python benchmarks/serve_traffic.py --recover --smoke
 """
 from __future__ import annotations
 
@@ -188,13 +199,33 @@ def _status_counts(res) -> dict[str, int]:
     return counts
 
 
+def _victim_resume_latencies(ce: ContinuousEngine, reqs) -> list[float]:
+    """Streamed re-run (jit caches warm) measuring, per eviction, the wall
+    seconds from the 'preempt' event to the victim's next 'tokens' event —
+    the price of bringing an evicted request back (recompute: a full
+    re-prefill forward; page_out: a host->device block scatter).  The
+    rounds spent *waiting* for blocks are identical between the two modes
+    (both re-admit on the same block count, and both streams are
+    bit-identical), so the difference is pure resume work."""
+    preempted_at: dict[int, float] = {}
+    lats: list[float] = []
+    for ev in ce.run_stream(reqs):
+        t = time.perf_counter()
+        if ev["event"] == "preempt":
+            preempted_at[ev["rid"]] = t
+        elif ev["event"] == "tokens" and ev["rid"] in preempted_at:
+            lats.append(t - preempted_at.pop(ev["rid"]))
+    return lats
+
+
 def run_overload(args, cfg, params, plan) -> None:
     """Overload scenario: a burst workload against a pool far below its
-    aggregate worst case, reservation baseline vs preemptive, equal pool.
-    Writes BENCH_PR7.json."""
+    aggregate worst case — reservation baseline vs preemptive-recompute
+    vs page-out, equal pool.  Writes BENCH_PR9.json."""
     # Long output budgets against a small pool: reservation admission must
     # serialize (worst-case blocks reserved up front), preemptive admission
-    # only commits prompt blocks and evicts+recomputes on growth failure.
+    # only commits prompt blocks and evicts on growth failure — recompute
+    # re-prefills the victim, page_out round-trips its KV through host RAM.
     reqs = make_workload(
         args.requests, vocab=cfg.vocab, mean_interarrival=0.25,
         prompt_lo=4, prompt_hi=8, new_lo=16, new_hi=32,
@@ -205,17 +236,21 @@ def run_overload(args, cfg, params, plan) -> None:
     worst = max(-(-(r.prompt_len + r.max_new + args.seq_bucket)
                   // args.block_size) for r in reqs)
     assert worst <= kv_blocks - 1, "pool must at least fit one request"
-    sides = {}
-    for mode in ("off", "recompute"):
+    sides, results = {}, {}
+    for mode in ("off", "recompute", "page_out"):
         ce = ContinuousEngine(
             params, cfg, plan=plan, max_batch=args.max_batch,
             kv_blocks=kv_blocks, block_size=args.block_size,
             max_blocks_per_req=worst, segment_len=args.segment_len,
             seq_bucket=args.seq_bucket, preemption=mode,
             max_queue=args.max_queue)
-        res = ce.run(reqs)
+        res = ce.run(reqs)                   # stats + jit warmup
         assert ce.allocator.live_blocks == 0, "KV pool leaked blocks"
         assert ce.allocator.hidden_blocks == 0
+        assert len(ce.spill) == 0, "spill store must drain with the run"
+        resume_lats = ([] if mode == "off"
+                       else _victim_resume_latencies(ce, reqs))
+        results[mode] = res
         ok = [r for r in res.values() if r.status is RequestStatus.OK]
         waits = [r.admitted_step - reqs[r.rid].arrival_step
                  for r in res.values() if r.admitted_step >= 0]
@@ -225,6 +260,9 @@ def run_overload(args, cfg, params, plan) -> None:
             "completed_ok": len(ok),
             "preemptions": ce.last_run_preemptions,
             "recomputes": ce.last_run_recomputes,
+            "spills": ce.last_run_spills,
+            "restores": ce.last_run_restores,
+            "spill_bytes": ce.last_run_spill_bytes,
             "sheds": ce.last_run_sheds,
             "timeouts": ce.last_run_timeouts,
             "status_counts": _status_counts(res),
@@ -234,6 +272,11 @@ def run_overload(args, cfg, params, plan) -> None:
             "latency_steps_p99": percentile(lats, 99, empty=0.0),
             "ttft_p50_seconds": ce.ttft_percentile(50),
             "ttft_p99_seconds": ce.ttft_percentile(99),
+            "victim_resumes_measured": len(resume_lats),
+            "victim_resume_p50_seconds": percentile(resume_lats, 50,
+                                                    empty=float("nan")),
+            "victim_resume_p99_seconds": percentile(resume_lats, 99,
+                                                    empty=float("nan")),
         }
     report = {
         "bench": "serve_overload",
@@ -249,9 +292,13 @@ def run_overload(args, cfg, params, plan) -> None:
         "max_queue": args.max_queue,
         "reservation": sides["off"],
         "preemptive": sides["recompute"],
+        "page_out": sides["page_out"],
         "concurrency_gain":
             sides["recompute"]["max_concurrency"]
             / max(sides["off"]["max_concurrency"], 1),
+        "page_out_resume_speedup":
+            sides["recompute"]["victim_resume_p50_seconds"]
+            / sides["page_out"]["victim_resume_p50_seconds"],
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -261,6 +308,23 @@ def run_overload(args, cfg, params, plan) -> None:
         "preemptive admission must sustain strictly more concurrent " \
         "requests than worst-case reservation at equal pool size"
     assert sides["recompute"]["completed_ok"] >= sides["off"]["completed_ok"]
+    # Page-out is a different eviction mechanism under the SAME scheduler:
+    # identical streams (checked), zero recompute, and a cheaper resume.
+    po, rc = sides["page_out"], sides["recompute"]
+    assert po["spills"] >= 1 and po["restores"] == po["spills"]
+    assert po["recomputes"] == 0, "page_out must never recompute"
+    for r in reqs:
+        a, b = results["page_out"][r.rid], results["recompute"][r.rid]
+        assert a.status is b.status
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert po["victim_resumes_measured"] >= 1 \
+        and rc["victim_resumes_measured"] >= 1
+    assert (po["victim_resume_p50_seconds"]
+            < rc["victim_resume_p50_seconds"]), \
+        "page-out resume (host->device scatter) must beat recompute " \
+        "resume (full re-prefill forward) at equal pool size: " \
+        f"{po['victim_resume_p50_seconds']:.4f}s vs " \
+        f"{rc['victim_resume_p50_seconds']:.4f}s"
 
 
 def run_chaos(args, cfg, params, plan) -> None:
@@ -323,6 +387,94 @@ def run_chaos(args, cfg, params, plan) -> None:
           f"({len(trace['traceEvents'])} events) — OK")
 
 
+def run_recover(args, cfg, params, plan) -> None:
+    """Crash-point chaos: a page-out run with periodic snapshots is killed
+    mid-flight (scripted CrashPoint, preceded by a forced eviction so the
+    spill path is hot), then a FRESH engine restores the last snapshot
+    and resumes.  Asserts every request completes bit-identically to an
+    uninterrupted reference run, and that crash + resume traces carry the
+    durability spans (spill / snapshot / recover)."""
+    from repro.serve import CrashPoint
+
+    reqs = make_workload(
+        args.requests, vocab=cfg.vocab, mean_interarrival=1.0,
+        prompt_lo=4, prompt_hi=8, new_lo=8, new_hi=16,
+        tail_frac=0.25, seed=args.seed)
+
+    def mk(snapdir=None):
+        return ContinuousEngine(
+            params, cfg, plan=plan, max_batch=args.max_batch,
+            kv_blocks=args.kv_blocks, block_size=args.block_size,
+            max_blocks_per_req=-(-(8 + 16 + args.seq_bucket)
+                                 // args.block_size),
+            segment_len=args.segment_len, seq_bucket=args.seq_bucket,
+            preemption="page_out", debug_invariants=True,
+            snapshot_dir=snapdir,
+            snapshot_interval=args.snapshot_interval if snapdir else None)
+
+    ref = mk().run(reqs)                     # uninterrupted reference
+    assert all(r.status is RequestStatus.OK for r in ref.values())
+
+    # Crash run: forced eviction two rounds before the kill keeps a spill
+    # entry alive across the snapshot/crash window.
+    ce = mk(args.snapshot_dir)
+    fi = FaultInjector.crash_at(
+        args.crash_round, **{str(args.crash_round - 2): {"preempt": 1}})
+    crashed = {}
+    try:
+        for ev in ce.run_stream(reqs, faults=fi):
+            if ev["event"] == "finish":
+                crashed[ev["rid"]] = ev["result"]
+        raise AssertionError(
+            f"run finished before the scripted crash at round "
+            f"{args.crash_round} — enlarge the workload")
+    except CrashPoint as e:
+        crash = e
+    snap = ce.last_snapshot_path
+    assert snap is not None, "crash happened before the first snapshot"
+    crash_trace = validate_chrome_trace(
+        ce.tracer.to_chrome(),
+        require_names={"segment", "snapshot", "spill", "preempt"})
+    names = {e["name"] for e in crash_trace["traceEvents"]}
+    assert any(n.startswith("fault:") for n in names), \
+        f"no injected-fault events in the crash trace ({sorted(names)})"
+    if args.trace_out:
+        ce.export_trace(args.trace_out)
+    if args.metrics_out:
+        ce.export_metrics(args.metrics_out)
+
+    # Warm restart: a NEW engine, same geometry, state only from the file.
+    ce2 = mk(args.snapshot_dir).restore(snap)
+    resumed = ce2.resume()
+    assert ce2.last_run_recoveries >= 1, "nothing was recovered"
+    resume_trace = validate_chrome_trace(
+        ce2.tracer.to_chrome(), require_names={"recover", "segment",
+                                               "retire"})
+    if args.trace_out:
+        base, ext = args.trace_out.rsplit(".", 1)
+        ce2.export_trace(f"{base}_resume.{ext}")
+
+    # Rounds between the last snapshot and the crash are REPLAYED on
+    # resume; determinism makes both copies identical, and the resumed
+    # copy is authoritative in the merge.
+    merged = {**crashed, **resumed}
+    assert set(merged) == set(ref), \
+        f"lost requests across the crash: {sorted(set(ref) - set(merged))}"
+    for r in reqs:
+        got, want = merged[r.rid], ref[r.rid]
+        assert got.status is RequestStatus.OK, (r.rid, got.status)
+        np.testing.assert_array_equal(got.tokens, want.tokens)
+        np.testing.assert_array_equal(got.logprobs, want.logprobs)
+    print(f"[serve-recover] {len(reqs)} requests; crashed at round "
+          f"{crash.round_idx} (sim step {crash.now}) with "
+          f"{len(crashed)} already finished; restored {snap} and resumed "
+          f"{len(resumed)} ({ce2.last_run_recoveries} recovered, "
+          f"{ce2.last_run_restores} spill restores) — all bit-identical "
+          f"to the uninterrupted run; traces valid "
+          f"({len(crash_trace['traceEvents'])} crash / "
+          f"{len(resume_trace['traceEvents'])} resume events) — OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-8b")
@@ -356,11 +508,24 @@ def main() -> None:
                     help="run the traffic sim as a smoke test (no static "
                     "baseline, no JSON) and assert pool/dispatch invariants")
     ap.add_argument("--overload", action="store_true",
-                    help="overload scenario: reservation vs preemptive "
-                    "scheduling at equal (small) pool -> BENCH_PR7.json")
+                    help="overload scenario: reservation vs preemptive-"
+                    "recompute vs page-out at equal (small) pool "
+                    "-> BENCH_PR9.json")
     ap.add_argument("--chaos", action="store_true",
                     help="seeded fault-injection smoke: survivors must be "
                     "bit-identical to a fault-free run, pool must drain")
+    ap.add_argument("--recover", action="store_true",
+                    help="crash-point chaos: snapshot, scripted mid-flight "
+                    "crash, warm restart from the last snapshot, assert "
+                    "every request completes bit-identically")
+    ap.add_argument("--snapshot-dir", default="serve_recover_snaps",
+                    help="recover scenario: engine checkpoint directory")
+    ap.add_argument("--snapshot-interval", type=int, default=4,
+                    help="recover scenario: scheduler rounds between "
+                    "periodic snapshots")
+    ap.add_argument("--crash-round", type=int, default=10,
+                    help="recover scenario: scheduler round the scripted "
+                    "CrashPoint fires at")
     ap.add_argument("--deadline-steps", type=int, default=300,
                     help="per-request deadline for the overload scenario")
     ap.add_argument("--max-queue", type=int, default=None,
@@ -377,9 +542,11 @@ def main() -> None:
                     "counters stay live; token streams are identical)")
     args = ap.parse_args()
 
-    if args.overload or args.chaos:
+    if args.overload or args.chaos or args.recover:
         if args.smoke:
             args.requests = 16 if args.overload else 50
+            if args.recover:
+                args.requests = 12
         if args.chaos:
             # Small pool: hidden-block pressure and forced preemptions bite.
             args.max_batch, args.kv_blocks = 4, 24
@@ -390,7 +557,14 @@ def main() -> None:
             args.max_batch, args.kv_blocks = 4, 9
             args.block_size = args.segment_len = args.seq_bucket = 8
             if args.out == "BENCH_PR3.json":
-                args.out = "BENCH_PR7.json"
+                args.out = "BENCH_PR9.json"
+        if args.recover:
+            # Tight pool under a modest stream: growth-pressure spills plus
+            # the scripted eviction, short segments so the crash round
+            # lands mid-flight.
+            args.max_batch, args.kv_blocks = 3, 12
+            args.block_size = args.segment_len = 4
+            args.seq_bucket = 8
         cfg = cfg_lib.reduced_config(args.arch, n_layers=args.layers)
         plan = backend_lib.load_plan(args.plan)
         params = model_lib.freeze_params(
@@ -398,6 +572,8 @@ def main() -> None:
             plan=plan)
         if args.overload:
             run_overload(args, cfg, params, plan)
+        elif args.recover:
+            run_recover(args, cfg, params, plan)
         else:
             run_chaos(args, cfg, params, plan)
         return

@@ -57,11 +57,31 @@ def main():
                     help="continuous: tokens per prefill chunk (block-size "
                     "multiple; default: autotuned)")
     ap.add_argument("--preemption", default="recompute",
-                    choices=["off", "recompute"],
+                    choices=["off", "recompute", "page_out"],
                     help="continuous: 'recompute' admits on actual prompt "
                     "blocks and evicts+recomputes the newest request when "
-                    "KV growth fails; 'off' reserves worst-case blocks at "
-                    "admission (preemption-free baseline)")
+                    "KV growth fails; 'page_out' spills the victim's KV "
+                    "pages to host memory and scatters them back on "
+                    "re-admission (zero recompute, bit-identical resume); "
+                    "'off' reserves worst-case blocks at admission "
+                    "(preemption-free baseline)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="continuous: directory for engine checkpoints; "
+                    "with --snapshot-interval the run writes serve_snap.npz "
+                    "at every Nth segment boundary (crash-recoverable)")
+    ap.add_argument("--snapshot-interval", type=int, default=None,
+                    help="continuous: scheduler rounds between periodic "
+                    "snapshots (requires --snapshot-dir)")
+    ap.add_argument("--drain-deadline", type=int, default=None,
+                    help="continuous: graceful-shutdown demo — at the "
+                    "first completion stop admissions, give in-flight "
+                    "requests this many sim steps, spill/checkpoint the "
+                    "stragglers, and end the run with a final snapshot "
+                    "(serve the remainder later with --restore)")
+    ap.add_argument("--restore", default=None,
+                    help="continuous: cold-start from this snapshot file "
+                    "instead of a fresh request stream — resumes every "
+                    "in-flight request bit-identically")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="continuous: bound the admission queue; arrivals "
                     "beyond the bound are load-shed (default: unbounded)")
@@ -128,20 +148,47 @@ def main():
             chunked_prefill=args.chunked_prefill,
             prefill_chunk=args.prefill_chunk,
             preemption=args.preemption, max_queue=args.max_queue,
+            snapshot_dir=args.snapshot_dir,
+            snapshot_interval=args.snapshot_interval,
             telemetry=not args.no_telemetry,
             profiler_annotations=args.profiler_annotations)
-        rng = np.random.default_rng(0)
-        arrivals = np.cumsum(rng.poisson(2.0, size=args.batch))
-        reqs = [
-            Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab, args.prompt_len),
-                    max_new=args.tokens, arrival_step=int(t),
-                    deadline_steps=args.deadline_steps)
-            for i, t in enumerate(arrivals)
-        ]
-        t0 = time.perf_counter()
-        res = ce.run(reqs)
-        dt = time.perf_counter() - t0
+        if args.restore is not None:
+            # Cold start from a checkpoint: no synthetic stream — serve
+            # whatever the snapshot holds in flight to completion.
+            t0 = time.perf_counter()
+            res = ce.restore(args.restore).resume()
+            reqs = list(res.values())
+            dt = time.perf_counter() - t0
+        else:
+            rng = np.random.default_rng(0)
+            arrivals = np.cumsum(rng.poisson(2.0, size=args.batch))
+            reqs = [
+                Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab, args.prompt_len),
+                        max_new=args.tokens, arrival_step=int(t),
+                        deadline_steps=args.deadline_steps)
+                for i, t in enumerate(arrivals)
+            ]
+            t0 = time.perf_counter()
+            if args.drain_deadline is not None:
+                # Graceful-shutdown demo: latch the drain at the first
+                # completion — admissions close, in-flight requests get
+                # the deadline, stragglers spill into the final snapshot
+                # (serve them later with --restore).
+                res, latched = {}, False
+                for ev in ce.run_stream(reqs):
+                    if ev["event"] == "finish":
+                        res[ev["rid"]] = ev["result"]
+                        if not latched:
+                            ce.drain(args.drain_deadline)
+                            latched = True
+                if not latched:
+                    raise SystemExit("--drain-deadline: no request "
+                                     "finished before the drain could "
+                                     "latch; raise --tokens")
+            else:
+                res = ce.run(reqs)
+            dt = time.perf_counter() - t0
         total = sum(len(r.tokens) for r in res.values())
         n_ok = sum(r.status is RequestStatus.OK for r in res.values())
         lat = sorted(r.latency_steps for r in res.values()
@@ -159,10 +206,16 @@ def main():
               f"{ce.last_run_defrags} defrags, "
               f"{n_ok}/{len(reqs)} OK ({ce.last_run_preemptions} preempts, "
               f"{ce.last_run_recomputes} recomputes, "
+              f"{ce.last_run_spills} SPILLED / {ce.last_run_restores} "
+              f"restored ({ce.last_run_spill_bytes} spill bytes), "
+              f"{ce.last_run_snapshots} snapshots, "
+              f"{ce.last_run_recoveries} RECOVERED, "
               f"{ce.last_run_sheds} shed, {ce.last_run_timeouts} timeout), "
               f"p50 latency {lat[len(lat)//2]} steps, TTFT p99 "
               f"{ce.ttft_percentile(99)*1e3:.1f}ms, peak pool occupancy "
               f"{max((o for _, o in ce.occupancy_trace), default=0.0):.2f}")
+        if ce.last_snapshot_path:
+            print(f"snapshot -> {ce.last_snapshot_path}")
         if args.metrics_out:
             ce.export_metrics(args.metrics_out)
             print(f"metrics -> {args.metrics_out}")

@@ -6,11 +6,15 @@
 - scheduler               — request lifecycle + preemptive FCFS admission
 - server.ContinuousEngine — continuous batching over the pool
 - faults.FaultInjector    — seeded chaos schedule for robustness tests
+                            (CrashPoint: recoverable injected process death)
+- snapshot                — engine checkpoint format (save/load .npz)
+- kv_pool.SpillStore      — host-side KV for page-out preemption
 - telemetry               — metrics registry + request/segment tracer
                             (Prometheus / JSONL / Chrome trace exports)
 """
 from repro.serve.engine import Engine, GenerationResult
-from repro.serve.faults import FaultInjector
+from repro.serve.faults import CrashPoint, FaultInjector
+from repro.serve.kv_pool import SpillEntry, SpillStore
 from repro.serve.scheduler import Request, RequestStatus, Scheduler, State
 from repro.serve.server import ContinuousEngine, RequestResult
 from repro.serve.telemetry import (MetricsRegistry, Telemetry, Tracer,
@@ -19,5 +23,6 @@ from repro.serve.telemetry import (MetricsRegistry, Telemetry, Tracer,
 __all__ = [
     "Engine", "GenerationResult", "Request", "RequestStatus", "Scheduler",
     "State", "ContinuousEngine", "RequestResult", "FaultInjector",
+    "CrashPoint", "SpillEntry", "SpillStore",
     "MetricsRegistry", "Telemetry", "Tracer", "validate_chrome_trace",
 ]

@@ -38,6 +38,22 @@ import dataclasses
 import numpy as np
 
 
+class CrashPoint(RuntimeError):
+    """Raised out of the serve loop by a ``{"crash": True}`` fault action:
+    the simulated hard process death for crash-recovery chaos.  In-flight
+    requests are NOT retired (no finish events, no partial results) —
+    exactly like a kill -9 — so the recovery path must rebuild everything
+    from the last snapshot file (``ContinuousEngine.restore`` +
+    ``resume``); only process-hygiene cleanup (in-memory block frees)
+    runs via the generator's normal teardown."""
+
+    def __init__(self, round_idx: int, now: int):
+        super().__init__(
+            f"injected crash at scheduler round {round_idx} (sim step {now})")
+        self.round_idx = round_idx
+        self.now = now
+
+
 def describe(acts: dict) -> list[tuple[str, dict]]:
     """Flatten one round's action dict into ``(event_name, args)`` pairs
     for the trace timeline: ``{"hide": 2, "poison": [3]}`` becomes
@@ -68,7 +84,9 @@ class FaultInjector:
     ``{"unhide": True}``   release all hidden blocks,
     ``{"preempt": k}``     force-preempt k newest-admitted requests,
     ``{"poison": [rids]}`` NaN the logits of these requests' rows,
-    ``{"cancel": [rids]}`` cancel these requests.
+    ``{"cancel": [rids]}`` cancel these requests,
+    ``{"crash": True}``    raise :class:`CrashPoint` — kill the run loop
+    mid-flight with no cleanup (recoverable only via snapshot/restore).
 
     Probabilistic mode draws each action independently per round inside
     the ``[start_round, stop_round)`` window; after ``stop_round`` it only
@@ -97,6 +115,16 @@ class FaultInjector:
         fi = cls()
         fi._script = {int(k): dict(v) for k, v in events.items()}
         return fi
+
+    @classmethod
+    def crash_at(cls, round_idx: int, **extra: dict) -> "FaultInjector":
+        """Scripted injector that kills the run loop at ``round_idx``
+        (plus any extra per-round actions, e.g. pre-crash preemptions):
+        ``FaultInjector.crash_at(10, **{"6": {"preempt": 2}})``."""
+        events: dict[int, dict] = {int(k): dict(v)
+                                   for k, v in extra.items()}
+        events.setdefault(round_idx, {})["crash"] = True
+        return cls.scripted(events)
 
     def reset(self) -> None:
         """Rewind to the start of the schedule (call between runs when

@@ -26,6 +26,8 @@ tables) rather than a copy of live state through the host.
 from __future__ import annotations
 
 import collections
+import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -115,6 +117,114 @@ def apply_defrag(pages, block_tables, remap: dict[int, int]):
     perm_d = jnp.asarray(perm)
     pages = jax.tree.map(lambda p: p[:, perm_d], pages)
     return pages, lut[np.asarray(block_tables)].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host spill (page-out preemption / snapshot)
+# ---------------------------------------------------------------------------
+
+# One fused dispatch each way (jit cache keyed by the block count); the
+# scatter donates the pool so re-paging KV in never copies the whole pool.
+# QTensor pages are registered pytrees, so tree.map reaches the raw
+# codes/scale leaves and the int8 round trip moves exact bytes.
+_gather_blocks = jax.jit(
+    lambda pages, ids: jax.tree.map(lambda a: a[:, ids], pages))
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _scatter_blocks(pages, ids, vals):
+    return jax.tree.map(lambda page, v: page.at[:, ids].set(v), pages, vals)
+
+
+def extract_blocks(pages, block_ids) -> dict[str, np.ndarray]:
+    """Gather the listed pool blocks to host memory, exact bytes.
+
+    Returns ``{"k", "v"}`` numpy arrays ``[L, n, block_size, KVH, HD]`` for a
+    dense pool, or ``{"k_q", "k_scale", "v_q", "v_scale"}`` for an int8 pool
+    (codes + scales separately, so the round trip through the host never
+    re-quantizes).  Inverse of :func:`insert_blocks` up to block placement."""
+    ids = jnp.asarray(list(block_ids), jnp.int32)
+    got = jax.device_get(_gather_blocks(pages, ids))
+    out = {}
+    for name in ("k", "v"):
+        page = got[name]
+        if isinstance(page, quant.QTensor):
+            out[f"{name}_q"] = np.asarray(page.q)
+            out[f"{name}_scale"] = np.asarray(page.scale)
+        else:
+            out[name] = np.asarray(page)
+    return out
+
+
+def insert_blocks(pages, host_kv: dict[str, np.ndarray], block_ids):
+    """Scatter :func:`extract_blocks` output back into pool pages at
+    ``block_ids`` (possibly different blocks than it came from — tables are
+    the only names that matter).  Returns the new pages pytree; the input
+    pages are DONATED (the caller must rebind, which the engine does)."""
+    ids = jnp.asarray(list(block_ids), jnp.int32)
+    vals = {}
+    for name in ("k", "v"):
+        page = pages[name]
+        if isinstance(page, quant.QTensor):
+            vals[name] = quant.QTensor(
+                jnp.asarray(host_kv[f"{name}_q"], jnp.int8),
+                jnp.asarray(host_kv[f"{name}_scale"], page.scale.dtype))
+        else:
+            vals[name] = jnp.asarray(host_kv[name], page.dtype)
+    return _scatter_blocks(pages, ids, vals)
+
+
+@dataclasses.dataclass
+class SpillEntry:
+    """One paged-out request: its KV bytes plus the host cursors needed to
+    resume decode with zero recompute (``pending_tok`` is the sampled-but-
+    not-yet-emitted next token the engine keeps between segments)."""
+    kv: dict[str, np.ndarray]
+    n_blocks: int
+    ctx_len: int
+    n_out: int
+    pending_tok: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(a.nbytes for a in self.kv.values()))
+
+
+class SpillStore:
+    """Host-side store of paged-out KV state keyed by request id.  Plain
+    dict semantics plus byte accounting for the spill_bytes metric."""
+
+    def __init__(self):
+        self._entries: dict[int, SpillEntry] = {}
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def put(self, rid: int, entry: SpillEntry) -> None:
+        if rid in self._entries:
+            raise RuntimeError(f"request {rid} already spilled")
+        self._entries[rid] = entry
+
+    def get(self, rid: int) -> SpillEntry:
+        return self._entries[rid]
+
+    def pop(self, rid: int) -> SpillEntry:
+        return self._entries.pop(rid)
+
+    def discard(self, rid: int) -> None:
+        self._entries.pop(rid, None)
+
+    def rids(self) -> list[int]:
+        return sorted(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
 
 
 # ---------------------------------------------------------------------------
@@ -233,14 +343,36 @@ class BlockAllocator:
         self._hidden = []
         return n
 
-    def check_invariants(self, tables=None) -> None:
+    def to_state(self) -> dict:
+        """Plain-python snapshot of the books (free-list ORDER included —
+        restore must hand out the same block ids in the same order for
+        bit-replayable admission)."""
+        return {"num_blocks": self.num_blocks,
+                "free": [int(b) for b in self._free],
+                "live": sorted(int(b) for b in self._live),
+                "hidden": [int(b) for b in self._hidden]}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "BlockAllocator":
+        """Rebuild an allocator from :meth:`to_state`; the books are
+        re-proven before anything trusts them."""
+        alloc = cls(int(state["num_blocks"]))
+        alloc._free = collections.deque(int(b) for b in state["free"])
+        alloc._live = {int(b) for b in state["live"]}
+        alloc._hidden = [int(b) for b in state["hidden"]]
+        alloc.check_invariants()
+        return alloc
+
+    def check_invariants(self, tables=None, spilled=None) -> None:
         """Prove the allocator's books balance; raises RuntimeError on the
         first violation.  Checks: free + live + hidden == capacity with no
         overlap and no out-of-range/null ids (a free-list duplicate is the
-        signature of a double-free), and — given `tables`, an iterable of
-        block-id sequences — that tables reference only live blocks (or
+        signature of a double-free); given `tables`, an iterable of
+        block-id sequences, that tables reference only live blocks (or
         the null block as padding) and that no block appears in two
-        tables."""
+        tables; given `spilled`, an iterable of (rid, blocks) pairs for
+        paged-out requests, that none of them still holds device blocks
+        (spilled KV lives on the host — a retained block is a leak)."""
         free = list(self._free)
         if len(set(free)) != len(free):
             raise RuntimeError("allocator: duplicate ids on the free list "
@@ -280,6 +412,13 @@ class BlockAllocator:
                         raise RuntimeError(
                             f"block {b} owned by two tables")
                     seen.add(b)
+        if spilled is not None:
+            for rid, blocks in spilled:
+                held = [int(b) for b in blocks if int(b) != NULL_BLOCK]
+                if held:
+                    raise RuntimeError(
+                        f"spilled request {rid} still holds device blocks "
+                        f"{held}")
 
     def defrag(self) -> dict[int, int]:
         """Compact live blocks onto the lowest ids; returns {old: new} for

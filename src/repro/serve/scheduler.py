@@ -140,6 +140,8 @@ class ScheduledRequest:
     admit_seq: int = -1           # monotonic admission stamp (victim order)
     n_preempt: int = 0            # times evicted (re-admission recomputes)
     resume_prompt: np.ndarray | None = None   # prompt + generated-so-far
+    spilled: bool = False         # page-out: KV lives in the host SpillStore
+    spill_blocks: int = 0         # blocks the spilled KV needs at re-admission
 
     @property
     def rid(self) -> int:
@@ -265,7 +267,11 @@ class Scheduler:
         while self._free_rows:
             if self.preempted:
                 sr = self.preempted[0]
-                need = blocks_for(sr.cur_prompt_len, self.block_size)
+                # A spilled record re-admits onto exactly the blocks its
+                # host-side KV needs (scatter, no recompute); a recompute
+                # record re-admits onto its grown-prompt prefill need.
+                need = (sr.spill_blocks if sr.spilled
+                        else blocks_for(sr.cur_prompt_len, self.block_size))
                 got = None
                 if self.allocator.free_blocks >= need:
                     got = self.allocator.alloc(need)
@@ -275,8 +281,12 @@ class Scheduler:
                 sr.state = State.PREFILL
                 sr.row = self._free_rows.pop()
                 sr.blocks = got
-                sr.ctx_len = sr.cur_prompt_len
-                sr.pf_written = 0
+                if not sr.spilled:
+                    # Recompute path: the re-prefill rebuilds ctx from the
+                    # grown prompt.  Spilled records keep their cursors —
+                    # the engine restores ctx_len/n_out from the SpillEntry.
+                    sr.ctx_len = sr.cur_prompt_len
+                    sr.pf_written = 0
                 sr.admit_seq = self._admit_seq
                 self._admit_seq += 1
                 self.running[sr.row] = sr
@@ -351,11 +361,16 @@ class Scheduler:
             return None
         return max(cands, key=lambda s: s.admit_seq)
 
-    def preempt(self, sr: ScheduledRequest,
-                now: int) -> tuple[bool, Request | None]:
+    def preempt(self, sr: ScheduledRequest, now: int, *,
+                spill_blocks: int | None = None
+                ) -> tuple[bool, Request | None]:
         """Evict a running request: free its blocks, release its row, and
-        requeue it for recompute-on-readmit (the caller stashes
-        ``resume_prompt`` first).  Returns ``(requeued, evicted)``:
+        requeue it.  With ``spill_blocks=None`` the re-admission recomputes
+        from ``resume_prompt`` (the caller stashes it first); with
+        ``spill_blocks=n`` the record is marked *spilled* — its KV bytes
+        live in the engine's host SpillStore and re-admission allocates
+        exactly ``n`` blocks to scatter them back into, no recompute.
+        Returns ``(requeued, evicted)``:
 
         * queue has room -> ``(True, None)``;
         * queue full but holds a never-admitted arrival -> the newest such
@@ -374,6 +389,12 @@ class Scheduler:
         sr.state = State.WAITING
         sr.pf_written = 0
         sr.n_preempt += 1
+        if spill_blocks is not None:
+            sr.spilled = True
+            sr.spill_blocks = spill_blocks
+        else:
+            sr.spilled = False
+            sr.spill_blocks = 0
         evicted = None
         if self.max_queue is not None and self.queue_len >= self.max_queue:
             if self.arrived:
@@ -406,4 +427,80 @@ class Scheduler:
         self.finished.append(sr)
         if self.debug:
             self.allocator.check_invariants(
-                tables=[r.blocks for r in self.running.values()])
+                tables=[r.blocks for r in self.running.values()],
+                spilled=[(r.rid, r.blocks) for r in self.preempted
+                         if r.spilled])
+
+    # ------------------------------------------------------ state round-trip
+
+    def to_state(self) -> dict:
+        """Plain-python snapshot of every queue and record (prompts/tokens
+        are serialized by the engine's snapshot layer; records reference
+        requests by rid).  Paired with :meth:`load_state`."""
+        def rec(sr: ScheduledRequest) -> dict:
+            return {"rid": sr.rid, "state": sr.state.value, "row": sr.row,
+                    "blocks": [int(b) for b in sr.blocks],
+                    "total_blocks": sr.total_blocks, "ctx_len": sr.ctx_len,
+                    "n_out": sr.n_out, "pf_written": sr.pf_written,
+                    "admitted_step": sr.admitted_step,
+                    "first_token_step": sr.first_token_step,
+                    "admit_seq": sr.admit_seq, "n_preempt": sr.n_preempt,
+                    "spilled": sr.spilled, "spill_blocks": sr.spill_blocks,
+                    "has_resume": sr.resume_prompt is not None}
+        return {"pending": [r.rid for r in self.pending],
+                "arrived": [r.rid for r in self.arrived],
+                "preempted": [rec(sr) for sr in self.preempted],
+                "running": [rec(sr) for sr in self.running.values()],
+                "free_rows": list(self._free_rows),
+                "outstanding": self.outstanding,
+                "last_arrival": self._last_arrival,
+                "submit_seq": [[int(r), int(s)]
+                               for r, s in self._submit_seq.items()],
+                "admit_seq": self._admit_seq}
+
+    def load_state(self, state: dict, requests: dict,
+                   resume_prompts: dict | None = None) -> None:
+        """Repopulate a freshly constructed scheduler from :meth:`to_state`.
+        ``requests`` maps rid -> Request for every rid the state references;
+        ``resume_prompts`` maps rid -> token array for records whose
+        re-admission recomputes (``has_resume``)."""
+        resume_prompts = resume_prompts or {}
+
+        def rec(d: dict) -> ScheduledRequest:
+            sr = ScheduledRequest(
+                req=requests[d["rid"]], state=State(d["state"]),
+                row=int(d["row"]),
+                blocks=[int(b) for b in d["blocks"]],
+                total_blocks=int(d["total_blocks"]),
+                ctx_len=int(d["ctx_len"]), n_out=int(d["n_out"]),
+                pf_written=int(d["pf_written"]),
+                admitted_step=int(d["admitted_step"]),
+                first_token_step=int(d["first_token_step"]),
+                admit_seq=int(d["admit_seq"]),
+                n_preempt=int(d["n_preempt"]), spilled=bool(d["spilled"]),
+                spill_blocks=int(d["spill_blocks"]))
+            if d["has_resume"]:
+                sr.resume_prompt = np.asarray(
+                    resume_prompts[d["rid"]], np.int32)
+            return sr
+
+        self.pending = collections.deque(
+            requests[rid] for rid in state["pending"])
+        self.arrived = collections.deque(
+            requests[rid] for rid in state["arrived"])
+        self.preempted = [rec(d) for d in state["preempted"]]
+        self.running = {}
+        for d in state["running"]:
+            sr = rec(d)
+            self.running[sr.row] = sr
+        self._free_rows = [int(r) for r in state["free_rows"]]
+        self.outstanding = int(state["outstanding"])
+        last = state["last_arrival"]
+        self._last_arrival = None if last is None else int(last)
+        self._submit_seq = {int(r): int(s) for r, s in state["submit_seq"]}
+        self._admit_seq = int(state["admit_seq"])
+        if self.debug:
+            self.allocator.check_invariants(
+                tables=[r.blocks for r in self.running.values()],
+                spilled=[(r.rid, r.blocks) for r in self.preempted
+                         if r.spilled])

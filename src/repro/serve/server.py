@@ -67,8 +67,40 @@ compensation: a fast datapath is only useful if it degrades gracefully):
   jitted segment.
 * **Fault injection** — ``run_stream(..., faults=FaultInjector(...))``
   drives a seeded chaos schedule (hidden pool blocks, forced preemption
-  storms, poisoned logits, surprise cancels) through the real code paths;
-  see serve/faults.py and tests/test_serve_faults.py.
+  storms, poisoned logits, surprise cancels, crash points) through the
+  real code paths; see serve/faults.py and tests/test_serve_faults.py.
+
+Durability layer (PR 9 — the serving analog of the paper's charge-domain
+persistence: MAC state survives until a single A/D conversion; here a
+request's KV state survives eviction and even process death):
+
+* **Page-out preemption** (``preemption='page_out'``) — instead of
+  discarding a victim's KV and recomputing it, the victim's live pool
+  blocks are gathered to a host-side :class:`~repro.serve.kv_pool
+  .SpillStore` (int8 codes+scales or fp bytes, exact) together with its
+  host cursors (ctx_len / n_out / the pending sampled-but-unemitted
+  token).  Re-admission allocates fresh (possibly different) blocks,
+  scatters the bytes back, rewrites the table, and resumes decode with
+  ZERO recompute — bit-identical for fp AND int8 pools, since the exact
+  quantized codes round-trip.  Mid-chunked-prefill victims fall back to
+  the recompute path (their prompt is not fully resident yet).
+* **Snapshot / restore / drain** — every scheduler round starts at a
+  *segment boundary*: all device progress has been harvested and host
+  state (scheduler queues, block tables, streams, RNG, sim clock) is
+  consistent.  ``snapshot_dir`` + ``snapshot_interval`` checkpoint these
+  boundaries to an ``.npz`` (serve/snapshot.py: live pool blocks, spill
+  store, allocator free-list order, everything); a NEW engine with the
+  same geometry can :meth:`ContinuousEngine.restore` the file and
+  :meth:`ContinuousEngine.resume` all in-flight requests bit-identically.
+  :meth:`ContinuousEngine.drain` stops admissions, lets running requests
+  finish until a deadline, spills the stragglers (page_out mode), and
+  writes a final snapshot.
+* **Crash recovery** — a ``{"crash": True}`` fault action raises
+  :class:`~repro.serve.faults.CrashPoint` out of the loop mid-flight (no
+  finish events, like a kill -9); the chaos harness restores the last
+  periodic snapshot into a fresh engine and asserts every non-retired
+  request completes with the identical stream (benchmarks/serve_traffic
+  ``--recover``, ``make serve-recover``).
 
 Finished and idle rows still occupy compute lanes within a segment (static
 shapes); their writes are masked to the pool's null block and their outputs
@@ -86,6 +118,7 @@ forces a fixed cadence when set.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Iterator, Sequence
 
@@ -98,6 +131,7 @@ from repro.kernels import autotune
 from repro.models import model as model_lib
 from repro.serve import faults as faults_lib
 from repro.serve import kv_pool
+from repro.serve import snapshot as snapshot_lib
 from repro.serve import telemetry as telemetry_lib
 from repro.serve.engine import Engine
 from repro.serve.scheduler import (Request, RequestStatus, ScheduledRequest,
@@ -129,6 +163,35 @@ class RequestResult:
         return self.first_token_step - self.arrival_step
 
 
+@dataclasses.dataclass
+class _RunState:
+    """Everything one serve run owns besides the device pages: scheduler,
+    host row arrays, emitted streams, and the sim clock.  Factoring it out
+    of the loop's locals is what makes the run *durable* — a snapshot is a
+    faithful serialization of this record (plus pages / allocator / spill
+    store) at a segment boundary, and ``restore`` rebuilds it so
+    ``resume`` re-enters the same loop."""
+    sched: Scheduler
+    requests: dict[int, Request]
+    rng: Any                      # raw PRNGKey (uint32 [2])
+    temperature: float
+    greedy: bool
+    stop_w: int
+    tok: np.ndarray               # [mb] pending (sampled, unemitted) token
+    n_out: np.ndarray             # [mb] emitted counts (post-harvest)
+    lens: np.ndarray              # [mb] cache positions written
+    done: np.ndarray              # [mb] idle/finished row mask
+    rids: np.ndarray              # [mb]
+    max_new: np.ndarray           # [mb]
+    stops: np.ndarray             # [mb, stop_w]
+    tables: np.ndarray            # [mb, max_blocks_per_req]
+    streams: dict[int, tuple[list, list]]
+    now: int = 0                  # sim clock (decode steps)
+    n_loops: int = 0              # scheduler rounds completed
+    drain_at: int | None = None   # sim deadline of an active drain
+    drain_path: str | None = None
+
+
 class ContinuousEngine:
     """Continuous-batching engine over a paged KV pool.
 
@@ -156,7 +219,9 @@ class ContinuousEngine:
                  debug_invariants: bool = False,
                  telemetry=None,
                  trace_samples: int = 4096,
-                 profiler_annotations: bool = False):
+                 profiler_annotations: bool = False,
+                 snapshot_dir: str | None = None,
+                 snapshot_interval: int | None = None):
         if cfg.arch_type != "dense" or cfg.sliding_window is not None:
             raise ValueError(
                 "continuous batching serves dense-attention archs without "
@@ -167,10 +232,20 @@ class ContinuousEngine:
                 "continuous batching does not support M-RoPE archs: paged "
                 "decode derives per-row positions from the pool lengths, "
                 "which has no 3-axis (t/h/w) position layout")
-        if preemption not in ("off", "recompute"):
+        if preemption not in ("off", "recompute", "page_out"):
             raise ValueError("preemption must be 'off' (worst-case "
-                             "reservation) or 'recompute' (preempt + "
-                             f"re-prefill), got {preemption!r}")
+                             "reservation), 'recompute' (preempt + "
+                             "re-prefill), or 'page_out' (spill victim KV "
+                             f"to the host, no recompute), got "
+                             f"{preemption!r}")
+        if snapshot_interval is not None:
+            if snapshot_interval < 1:
+                raise ValueError(
+                    f"snapshot_interval must be >= 1, got {snapshot_interval}")
+            if snapshot_dir is None:
+                raise ValueError(
+                    "snapshot_interval requires snapshot_dir (where else "
+                    "would the periodic checkpoints land?)")
         if plan is None and mode is not None:
             plan = backend_lib.as_plan(mode)
         if paged_attn:
@@ -220,6 +295,16 @@ class ContinuousEngine:
         self.pages = kv_pool.init_pages(cfg, kv_blocks, block_size, dtype)
         self._fn_cache: dict = {}
         self._cancel_req: set[int] = set()
+        # Durability: host spill store (page-out preemption), periodic
+        # snapshot config, and the restore/resume handshake state.
+        self.spill = kv_pool.SpillStore()
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_interval = snapshot_interval
+        self.last_snapshot_path: str | None = None
+        self._run_state: _RunState | None = None
+        self._restored: _RunState | None = None
+        self._at_boundary = False
+        self._drain_req: tuple[int, str | None] | None = None
         # All run accounting lives in ONE place: the telemetry registry
         # (counters/gauges/histograms) plus the tracer's event timeline.
         # The legacy `last_run_*` attributes are thin registry reads (see
@@ -529,19 +614,17 @@ class ContinuousEngine:
                     f"= {self.max_seq_len}")
         greedy = temperature <= 0 or key is None
         rng = key if key is not None else jax.random.PRNGKey(0)
-        temp = jnp.asarray(max(temperature, 1e-6), jnp.float32)
-        plan = self.plan
-        seg_len = self.segment_len
         stop_w = max((len(r.stop_tokens) for r in requests), default=0) or 1
 
         # ONE run-scoped reset for every counter, histogram, ring, and the
         # trace buffer (the two hand-maintained last_run_* blocks this
         # replaces had already drifted once; the registry cannot).
         self._cancel_req = set()
+        self._restored = None
         self.telemetry.reset_run()
 
         sched = Scheduler(self.allocator, self.max_batch, self.block_size,
-                          preemptive=self.preemption == "recompute",
+                          preemptive=self.preemption != "off",
                           max_queue=self.max_queue,
                           debug=self.debug_invariants,
                           metrics=self.metrics)
@@ -549,35 +632,191 @@ class ContinuousEngine:
             sched.submit(r)
 
         mb, nbr = self.max_batch, self.max_blocks_per_req
-        tok = np.zeros(mb, np.int32)
-        n_out = np.zeros(mb, np.int32)
-        lens = np.zeros(mb, np.int32)
-        done = np.ones(mb, bool)            # idle rows are 'done'
-        rids = np.zeros(mb, np.int32)
-        max_new = np.zeros(mb, np.int32)
-        stops = np.full((mb, stop_w), -1, np.int32)
-        tables = np.zeros((mb, nbr), np.int32)
-        streams: dict[int, tuple[list, list]] = {}
+        st = _RunState(
+            sched=sched, requests={r.rid: r for r in requests}, rng=rng,
+            temperature=float(temperature), greedy=greedy, stop_w=stop_w,
+            tok=np.zeros(mb, np.int32), n_out=np.zeros(mb, np.int32),
+            lens=np.zeros(mb, np.int32),
+            done=np.ones(mb, bool),         # idle rows are 'done'
+            rids=np.zeros(mb, np.int32), max_new=np.zeros(mb, np.int32),
+            stops=np.full((mb, stop_w), -1, np.int32),
+            tables=np.zeros((mb, nbr), np.int32), streams={})
+        yield from self._drive(st, faults)
 
-        seg_fn = self._segment_fn(plan, greedy, seg_len, stop_w)
-        pad = jnp.asarray(-1, jnp.int32)
-
+    def _drive(self, st: _RunState, faults) -> Iterator[dict]:
+        """Run the serve loop over a (fresh or restored) run state with the
+        end-of-run cleanup both paths share."""
+        self._run_state = st
         try:
-            yield from self._serve_loop(
-                sched, seg_fn, stop_w, pad, rng, temp, plan, greedy,
-                tok, n_out, lens, done, rids, max_new, stops, tables,
-                streams, faults)
+            yield from self._serve_loop(st, faults)
         finally:
             # The generator may be abandoned mid-run (client drops the
-            # stream): release every in-flight request's blocks — running
-            # AND preempted-but-requeued — and return any fault-hidden
-            # blocks, so the shared allocator is exactly full for the
-            # next run.
+            # stream) or killed by a CrashPoint: release every in-flight
+            # request's blocks — running AND preempted-but-requeued —
+            # return any fault-hidden blocks, and drop host spill entries,
+            # so the shared allocator is exactly full for the next run.
+            # (Crash recovery reads the snapshot FILE, never this
+            # in-memory state.)
+            self._run_state = None
+            self._at_boundary = False
+            self._drain_req = None
             self.allocator.unhide_all()
-            for sr in list(sched.running.values()):
-                sched.finish(sr, -1)
-            for sr in list(sched.preempted):
-                sched.finish(sr, -1)
+            for sr in list(st.sched.running.values()):
+                st.sched.finish(sr, -1)
+            for sr in list(st.sched.preempted):
+                st.sched.finish(sr, -1)
+            self.spill.clear()
+
+    # ----------------------------------------------------------- durability
+
+    def snapshot(self, path: str) -> str:
+        """Serialize the active run at its current segment boundary (see
+        serve/snapshot.py for the format).  Valid on a restored-not-yet-
+        resumed engine; DURING a run use ``snapshot_dir`` +
+        ``snapshot_interval`` (periodic checkpoints) or :meth:`drain` — in
+        between events the loop is suspended mid-round and host state is
+        not snapshot-consistent."""
+        st = self._run_state
+        if st is None:
+            raise RuntimeError(
+                "snapshot() requires an active or restored run (nothing to "
+                "serialize on an idle engine)")
+        if not self._at_boundary:
+            raise RuntimeError(
+                "snapshot() is only valid at a segment boundary — use "
+                "snapshot_dir/snapshot_interval for periodic in-run "
+                "checkpoints, or drain() for a final one")
+        return self._write_snapshot(st, path=path)
+
+    def _write_snapshot(self, st: _RunState, path: str | None = None) -> str:
+        if path is None:
+            path = os.path.join(self.snapshot_dir, "serve_snap.npz")
+        t0 = self.tracer.now()
+        path = snapshot_lib.save_snapshot(path, engine=self, state=st)
+        self.last_snapshot_path = path
+        self.metrics.counter("serve_snapshots_total").inc()
+        self.tracer.span("snapshot", t0, self.tracer.now(), cat="durability",
+                         args={"step": st.now, "round": st.n_loops,
+                               "path": str(path)})
+        return path
+
+    def restore(self, path: str) -> "ContinuousEngine":
+        """Load a snapshot into this engine: allocator books, pool pages
+        (live blocks scattered back), spill store, scheduler queues, and
+        the run state — then :meth:`resume` / :meth:`resume_stream`
+        continues every in-flight request bit-identically.  The engine
+        must be idle and built with the snapshot's geometry (checked);
+        pass the same params/cfg/plan — weights are NOT in the file."""
+        if self._run_state is not None and self._restored is None:
+            raise RuntimeError("restore() on an engine with an active run")
+        meta, arrays = snapshot_lib.load_snapshot(path)
+        snapshot_lib.check_geometry(self, meta["geometry"])
+        self.allocator = kv_pool.BlockAllocator.from_state(meta["allocator"])
+        dtype = (jnp.bfloat16 if self.cfg.dtype == "bfloat16"
+                 else jnp.float32)
+        self.pages = kv_pool.init_pages(
+            self.cfg, self.allocator.num_blocks, self.block_size, dtype)
+        live = [int(b) for b in meta["live_blocks"]]
+        if live:
+            pool_kv = {k[len("pool_"):]: v for k, v in arrays.items()
+                       if k.startswith("pool_")}
+            self.pages = kv_pool.insert_blocks(self.pages, pool_kv, live)
+        self.spill = kv_pool.SpillStore()
+        for srid, e in meta["spill"].items():
+            rid = int(srid)
+            self.spill.put(rid, kv_pool.SpillEntry(
+                kv={k: arrays[f"spill_{rid}_{k}"] for k in e["kv_keys"]},
+                n_blocks=int(e["n_blocks"]), ctx_len=int(e["ctx_len"]),
+                n_out=int(e["n_out"]), pending_tok=int(e["pending_tok"])))
+        requests: dict[int, Request] = {}
+        for rm in meta["requests"]:
+            rid = int(rm["rid"])
+            requests[rid] = Request(
+                rid=rid, prompt=arrays[f"prompt_{rid}"],
+                max_new=int(rm["max_new"]),
+                arrival_step=int(rm["arrival_step"]),
+                stop_tokens=tuple(int(t) for t in rm["stop_tokens"]),
+                deadline_steps=rm["deadline_steps"])
+        sched = Scheduler(self.allocator, self.max_batch, self.block_size,
+                          preemptive=self.preemption != "off",
+                          max_queue=self.max_queue,
+                          debug=self.debug_invariants,
+                          metrics=self.metrics)
+        sched.load_state(
+            meta["scheduler"], requests,
+            {int(k[len("resume_"):]): v for k, v in arrays.items()
+             if k.startswith("resume_")})
+        run = meta["run"]
+        streams = {
+            int(rid): ([int(t) for t in arrays[f"stream_tok_{rid}"]],
+                       [float(x) for x in arrays[f"stream_lp_{rid}"]])
+            for rid in meta["streams"]}
+        st = _RunState(
+            sched=sched, requests=requests,
+            rng=jnp.asarray(arrays["rng"]),
+            temperature=float(run["temperature"]),
+            greedy=bool(run["greedy"]), stop_w=int(run["stop_w"]),
+            tok=np.array(arrays["tok"]), n_out=np.array(arrays["n_out"]),
+            lens=np.array(arrays["lens"]), done=np.array(arrays["done"]),
+            rids=np.array(arrays["rids"]),
+            max_new=np.array(arrays["max_new"]),
+            stops=np.array(arrays["stops"]),
+            tables=np.array(arrays["tables"]), streams=streams,
+            now=int(run["now"]), n_loops=int(run["n_loops"]))
+        self._run_state = st
+        self._restored = st
+        self._at_boundary = True
+        self.last_snapshot_path = str(path)
+        return self
+
+    def resume_stream(self, *, faults=None) -> Iterator[dict]:
+        """Continue a :meth:`restore`d run: the event stream picks up at
+        the snapshot's segment boundary, and every request the snapshot
+        holds in flight (running / preempted / spilled / queued) completes
+        with the token stream an uninterrupted run would have produced."""
+        st = self._restored
+        if st is None:
+            raise RuntimeError(
+                "resume_stream() requires a prior restore(path)")
+        self._restored = None
+        self._cancel_req = set()
+        self._at_boundary = False
+        self.telemetry.reset_run()
+        sched = st.sched
+        n_flight = (len(sched.running) + len(sched.preempted)
+                    + len(sched.arrived) + len(sched.pending))
+        self.metrics.counter("serve_recoveries_total").inc(n_flight)
+        self.tracer.instant(
+            "recover", cat="durability",
+            args={"step": st.now, "round": st.n_loops,
+                  "in_flight": n_flight, "spilled": len(self.spill),
+                  "path": self.last_snapshot_path})
+        yield from self._drive(st, faults)
+
+    def resume(self) -> dict[int, RequestResult]:
+        """Blocking form of :meth:`resume_stream`; returns {rid: result}
+        for every request that retires after the restore point."""
+        results: dict[int, RequestResult] = {}
+        for ev in self.resume_stream():
+            if ev["event"] == "finish":
+                results[ev["rid"]] = ev["result"]
+        return results
+
+    def drain(self, deadline_steps: int, path: str | None = None) -> None:
+        """Begin a graceful drain of the active run: admissions stop
+        (queued arrivals are checkpointed as queued), running requests get
+        up to ``deadline_steps`` more sim steps to finish, stragglers are
+        spilled (page_out mode) or checkpointed in place, and a final
+        snapshot lands at ``path`` (default ``snapshot_dir/
+        serve_snap.npz``).  The run then ends with a ``'drain'`` event;
+        a warm restart restores the file and serves the remainder."""
+        if deadline_steps < 0:
+            raise ValueError(f"drain deadline must be >= 0, "
+                             f"got {deadline_steps}")
+        if path is None and self.snapshot_dir is None:
+            raise ValueError("drain() needs an explicit path or an engine "
+                             "snapshot_dir")
+        self._drain_req = (int(deadline_steps), path)
 
     # ------------------------------------------------------------- lifecycle
 
@@ -598,19 +837,19 @@ class ContinuousEngine:
         return {"event": "finish", "rid": req.rid, "step": now,
                 "result": result}
 
-    def _retire_record(self, sched: Scheduler, sr: ScheduledRequest,
-                       status: RequestStatus, now: int, streams, tables,
-                       lens, done) -> dict:
+    def _retire_record(self, st: _RunState, sr: ScheduledRequest,
+                       status: RequestStatus, now: int) -> dict:
         """Retire a scheduled record (running OR detached/preempted) with a
-        non-OK status: blocks returned, row state cleared, partial output
-        surfaced in the finish event."""
+        non-OK status: blocks returned, row state cleared, any host spill
+        entry dropped, partial output surfaced in the finish event."""
         row = sr.row
-        sched.finish(sr, now)
+        st.sched.finish(sr, now)
+        self.spill.discard(sr.rid)
         if row >= 0:
-            tables[row] = kv_pool.NULL_BLOCK
-            lens[row] = 0
-            done[row] = True
-        toks, lps = streams.pop(sr.rid, ([], []))
+            st.tables[row] = kv_pool.NULL_BLOCK
+            st.lens[row] = 0
+            st.done[row] = True
+        toks, lps = st.streams.pop(sr.rid, ([], []))
         result = RequestResult(
             rid=sr.rid, tokens=np.asarray(toks, np.int32),
             logprobs=np.asarray(lps, np.float32),
@@ -630,18 +869,24 @@ class ContinuousEngine:
         return {"event": "finish", "rid": sr.rid, "step": now,
                 "result": result}
 
-    def _preempt_one(self, sched: Scheduler, victim: ScheduledRequest,
-                     now: int, streams, tables, lens,
-                     done) -> Iterator[dict]:
+    def _preempt_one(self, st: _RunState, victim: ScheduledRequest,
+                     now: int) -> Iterator[dict]:
         """Evict one running request, free its blocks, clear its row, and
-        requeue it for recompute.  Two resume flavors, both bit-identical:
+        requeue it.  Three resume flavors, all bit-identical:
 
-        * fp pool — stash original prompt + every token generated so far
-          as ``resume_prompt``; re-admission prefills the grown prompt in
-          one pass and re-samples the pending (never-emitted) token at the
-          same (key, rid, step) RNG triple.  Sound because fp decode and
-          fp prefill read the same K/V values.
-        * int8 pool — full restart: the stream is discarded and the
+        * page_out (``preemption='page_out'``, victim not mid-chunked-
+          prefill) — ``device_get`` the victim's live KV blocks (exact
+          int8 codes+scales or fp bytes) plus its host cursors into the
+          SpillStore; re-admission scatters them into fresh blocks and
+          decode continues as if nothing happened.  No recompute, fp AND
+          int8.  A mid-chunked-prefill victim's prompt is only partially
+          resident, so it falls through to the recompute flavors below.
+        * fp recompute — stash original prompt + every token generated so
+          far as ``resume_prompt``; re-admission prefills the grown prompt
+          in one pass and re-samples the pending (never-emitted) token at
+          the same (key, rid, step) RNG triple.  Sound because fp decode
+          and fp prefill read the same K/V values.
+        * int8 recompute — full restart: the stream is discarded and the
           request re-admits from its original prompt with ``n_out = 0``.
           Decode reads *dequantized* codes, and the codes a prefill would
           write for generated positions come from fp-attention hidden
@@ -652,35 +897,58 @@ class ContinuousEngine:
         Emits the 'preempt' event plus any overload fallout (a shed
         arrival evicted from a full queue, or the victim itself dropped as
         PREEMPTED when the queue holds only preempted peers)."""
+        sched = st.sched
         row = victim.row
-        st = streams.get(victim.rid, ([], []))
-        if not self._int8_pool:
-            victim.resume_prompt = np.concatenate(
-                [np.asarray(victim.req.prompt, np.int32),
-                 np.asarray(st[0], np.int32)])
-        requeued, evicted = sched.preempt(victim, now)
-        tables[row] = kv_pool.NULL_BLOCK
-        lens[row] = 0
-        done[row] = True
+        spill = (self.preemption == "page_out"
+                 and not (self.chunked_prefill
+                          and victim.state is State.PREFILL))
+        if spill:
+            # Spill exactly the blocks that hold written positions; any
+            # growth-preallocated tail blocks past ctx hold no live state.
+            ctx = int(st.lens[row])
+            nb = kv_pool.blocks_for(max(ctx, 1), self.block_size)
+            t0 = self.tracer.now()
+            entry = kv_pool.SpillEntry(
+                kv=kv_pool.extract_blocks(self.pages, victim.blocks[:nb]),
+                n_blocks=nb, ctx_len=ctx, n_out=victim.n_out,
+                pending_tok=int(st.tok[row]))
+            self.spill.put(victim.rid, entry)
+            self.metrics.counter("serve_spills_total").inc()
+            self.metrics.counter("serve_spill_bytes_total").inc(entry.nbytes)
+            self.tracer.span(
+                "spill", t0, self.tracer.now(), cat="durability",
+                args={"step": now, "rid": victim.rid, "blocks": nb,
+                      "bytes": entry.nbytes})
+            victim.resume_prompt = None
+            requeued, evicted = sched.preempt(victim, now, spill_blocks=nb)
+        else:
+            emitted = st.streams.get(victim.rid, ([], []))
+            if not self._int8_pool:
+                victim.resume_prompt = np.concatenate(
+                    [np.asarray(victim.req.prompt, np.int32),
+                     np.asarray(emitted[0], np.int32)])
+            requeued, evicted = sched.preempt(victim, now)
+        st.tables[row] = kv_pool.NULL_BLOCK
+        st.lens[row] = 0
+        st.done[row] = True
         self.metrics.counter("serve_preemptions_total").inc()
         self.tracer.request_point(victim.rid, "preempt", step=now,
-                                  n_out=victim.n_out)
+                                  n_out=victim.n_out, spilled=spill)
         yield {"event": "preempt", "rid": victim.rid, "step": now,
-               "n_out": victim.n_out}
+               "n_out": victim.n_out, "spilled": spill}
         if evicted is not None:
             self.metrics.counter("serve_sheds_total").inc()
             yield self._retire_unadmitted(evicted, RequestStatus.SHED, now)
         if not requeued:
-            yield self._retire_record(sched, victim,
-                                      RequestStatus.PREEMPTED, now,
-                                      streams, tables, lens, done)
-        elif self._int8_pool:
-            streams.pop(victim.rid, None)
+            yield self._retire_record(st, victim,
+                                      RequestStatus.PREEMPTED, now)
+        elif not spill and self._int8_pool:
+            st.streams.pop(victim.rid, None)
             victim.resume_prompt = None
             victim.n_out = 0
 
-    def _grow(self, sched: Scheduler, sr: ScheduledRequest, target: int,
-              now: int, streams, tables, lens, done):
+    def _grow(self, st: _RunState, sr: ScheduledRequest, target: int,
+              now: int):
         """Grow sr's blocks to cover `target` positions, preempting
         newest-admitted victims until the pool yields (generator: preempt /
         shed events stream out; the grown block list is the return value,
@@ -688,22 +956,34 @@ class ContinuousEngine:
         fault-injected pool pressure, since submit() guarantees the oldest
         request's worst case fits a victim-free pool)."""
         while True:
-            got = sched.ensure_capacity(sr, target)
+            got = st.sched.ensure_capacity(sr, target)
             if got is not None:
                 return got
-            victim = sched.pick_victim(exclude_rid=sr.rid) or sr
-            yield from self._preempt_one(sched, victim, now, streams,
-                                         tables, lens, done)
+            victim = st.sched.pick_victim(exclude_rid=sr.rid) or sr
+            yield from self._preempt_one(st, victim, now)
             if victim is sr:
                 return None
 
     # ------------------------------------------------------------ main loop
 
-    def _serve_loop(self, sched, seg_fn, stop_w, pad, rng, temp, plan,
-                    greedy, tok, n_out, lens, done, rids, max_new, stops,
-                    tables, streams, faults) -> Iterator[dict]:
-        now = 0
-        n_loops = 0
+    def _serve_loop(self, st: _RunState, faults) -> Iterator[dict]:
+        sched = st.sched
+        plan = self.plan
+        greedy, stop_w = st.greedy, st.stop_w
+        rng = st.rng
+        temp = jnp.asarray(max(st.temperature, 1e-6), jnp.float32)
+        pad = jnp.asarray(-1, jnp.int32)
+        seg_fn = self._segment_fn(plan, greedy, self.segment_len, stop_w)
+        # Hot locals alias the run-state arrays; the only rebinding sites
+        # (defrag's table rewrite, the post-segment harvest) sync st.*
+        # immediately, so st is always the authoritative view the
+        # preempt/retire helpers and the snapshot writer see.
+        tok, n_out, lens, done = st.tok, st.n_out, st.lens, st.done
+        rids, max_new, stops, tables = (st.rids, st.max_new, st.stops,
+                                        st.tables)
+        streams = st.streams
+        now = st.now
+        n_loops = st.n_loops
         n_stalled = 0
         chunked = self.chunked_prefill
         chunk = self.prefill_chunk
@@ -713,6 +993,43 @@ class ContinuousEngine:
             n_loops += 1
             t_round = time.perf_counter()
             poison_rids: set[int] = set()
+
+            # ---- segment boundary: every device result is harvested and
+            # host state is self-consistent — the ONLY place a snapshot is
+            # sound.  Sync the run state, then (a) checkpoint on the
+            # periodic cadence, (b) finish an elapsed drain.
+            st.tok, st.n_out, st.lens, st.done = tok, n_out, lens, done
+            st.tables = tables
+            st.now, st.n_loops = now, n_loops
+            self._at_boundary = True
+            if self._drain_req is not None and st.drain_at is None:
+                st.drain_at = now + self._drain_req[0]
+                st.drain_path = self._drain_req[1]
+                self._drain_req = None
+                self.tracer.instant(
+                    "drain_start", cat="durability",
+                    args={"step": now, "deadline": st.drain_at})
+            if st.drain_at is not None and (now >= st.drain_at
+                                            or not sched.running):
+                # Deadline hit or the batch quiesced: spill the stragglers
+                # (page_out — their KV rides the snapshot's spill section;
+                # other modes checkpoint them running/queued as-is), write
+                # the final snapshot, and end the run.
+                if self.preemption == "page_out":
+                    while sched.running:
+                        victim = sched.pick_victim()
+                        yield from self._preempt_one(st, victim, now)
+                path = self._write_snapshot(st, path=st.drain_path)
+                self._at_boundary = False
+                yield {"event": "drain", "step": now, "path": path,
+                       "running": len(sched.running),
+                       "spilled": len(self.spill),
+                       "queued": sched.queue_len}
+                return
+            if (self.snapshot_interval
+                    and (n_loops - 1) % self.snapshot_interval == 0):
+                self._write_snapshot(st)
+            self._at_boundary = False
 
             # ---- fault hook: chaos actions ride the real code paths ----
             if faults is not None:
@@ -728,6 +1045,10 @@ class ContinuousEngine:
                 for ev_name, ev_args in faults_lib.describe(acts):
                     self.tracer.instant(ev_name, cat="fault",
                                         args={"step": now, **ev_args})
+                if acts.get("crash"):
+                    # Simulated hard death: no retires, no finish events —
+                    # recovery must come from the last snapshot file.
+                    raise faults_lib.CrashPoint(n_loops - 1, now)
                 if acts.get("unhide"):
                     self.allocator.unhide_all()
                 if acts.get("hide"):
@@ -741,14 +1062,14 @@ class ContinuousEngine:
                         victim = sched.pick_victim()
                         if victim is None:
                             break
-                        yield from self._preempt_one(
-                            sched, victim, now, streams, tables, lens,
-                            done)
+                        yield from self._preempt_one(st, victim, now)
 
             # ---- arrivals, overload shedding, cancels, deadlines -------
-            for req in sched.poll_arrivals(now):
-                self.metrics.counter("serve_sheds_total").inc()
-                yield self._retire_unadmitted(req, RequestStatus.SHED, now)
+            if st.drain_at is None:
+                for req in sched.poll_arrivals(now):
+                    self.metrics.counter("serve_sheds_total").inc()
+                    yield self._retire_unadmitted(req, RequestStatus.SHED,
+                                                  now)
             if self._cancel_req:
                 cancels = self.metrics.counter("serve_cancels_total")
                 for rid in sorted(self._cancel_req):
@@ -757,8 +1078,7 @@ class ContinuousEngine:
                     if sr is not None:
                         cancels.inc()
                         yield self._retire_record(
-                            sched, sr, RequestStatus.CANCELLED, now,
-                            streams, tables, lens, done)
+                            st, sr, RequestStatus.CANCELLED, now)
                         continue
                     obj = sched.remove_queued(rid)
                     if isinstance(obj, Request):
@@ -768,16 +1088,14 @@ class ContinuousEngine:
                     elif obj is not None:      # preempted, holds progress
                         cancels.inc()
                         yield self._retire_record(
-                            sched, obj, RequestStatus.CANCELLED, now,
-                            streams, tables, lens, done)
+                            st, obj, RequestStatus.CANCELLED, now)
                 self._cancel_req.clear()
             for sr in list(sched.running.values()) + list(sched.preempted):
                 dl = sr.req.deadline_steps
                 if dl is not None and now - sr.req.arrival_step >= dl:
                     self.metrics.counter("serve_timeouts_total").inc()
                     yield self._retire_record(
-                        sched, sr, RequestStatus.TIMEOUT, now, streams,
-                        tables, lens, done)
+                        st, sr, RequestStatus.TIMEOUT, now)
             for req in [r for r in sched.arrived
                         if r.deadline_steps is not None
                         and now - r.arrival_step >= r.deadline_steps]:
@@ -804,19 +1122,22 @@ class ContinuousEngine:
             # permutation to relocate a couple of blocks.
             if self.defrag_interval:
                 if n_loops % self.defrag_interval == 0:
-                    tables = self._maybe_defrag(sched, tables, now)
+                    tables = st.tables = self._maybe_defrag(sched, tables,
+                                                            now)
             elif (self.defrag_threshold is not None
                   and self.allocator.hole_blocks >= self.defrag_min_holes
                   and self.allocator.fragmentation()
                   >= self.defrag_threshold):
-                tables = self._maybe_defrag(sched, tables, now)
+                tables = st.tables = self._maybe_defrag(sched, tables, now)
 
-            # ---- admission (fresh arrivals AND recompute re-admits) ----
+            # ---- admission (fresh arrivals, recompute re-admits, AND
+            # page-out restores); frozen while draining ----
             pending_tok0: list[tuple[ScheduledRequest, Any]] = []
             pf_wall = 0.0
-            for sr in sched.admit_ready(now):
+            admits = [] if st.drain_at is not None else \
+                sched.admit_ready(now)
+            for sr in admits:
                 row, req = sr.row, sr.req
-                n_out[row] = sr.n_out       # >0 on a recompute re-admit
                 rids[row] = req.rid
                 max_new[row] = req.max_new
                 stops[row] = -1
@@ -824,6 +1145,39 @@ class ContinuousEngine:
                 tables[row] = kv_pool.NULL_BLOCK
                 tables[row, :len(sr.blocks)] = sr.blocks
                 streams.setdefault(req.rid, ([], []))
+                if sr.spilled:
+                    # Page-out restore: scatter the spilled KV bytes into
+                    # the freshly allocated blocks, restore the host
+                    # cursors (incl. the pending sampled-but-unemitted
+                    # token), and rejoin decode directly — no prefill, no
+                    # recompute, bit-identical by construction.
+                    entry = self.spill.pop(req.rid)
+                    t0r = self.tracer.now()
+                    self.pages = kv_pool.insert_blocks(
+                        self.pages, entry.kv, sr.blocks)
+                    sr.spilled = False
+                    sr.spill_blocks = 0
+                    sr.state = State.DECODE
+                    sr.ctx_len = entry.ctx_len
+                    sr.n_out = entry.n_out
+                    sr.pf_written = 0
+                    n_out[row] = entry.n_out
+                    lens[row] = entry.ctx_len
+                    done[row] = False
+                    tok[row] = entry.pending_tok
+                    self.metrics.counter("serve_restores_total").inc()
+                    self.tracer.span(
+                        "spill_restore", t0r, self.tracer.now(),
+                        cat="durability",
+                        args={"step": now, "rid": req.rid,
+                              "blocks": entry.n_blocks,
+                              "bytes": entry.nbytes})
+                    self.tracer.request_point(req.rid, "restore", step=now,
+                                              row=row, n_out=sr.n_out)
+                    yield {"event": "admit", "rid": req.rid, "step": now,
+                           "recompute": False, "restored": True}
+                    continue
+                n_out[row] = sr.n_out       # >0 on a recompute re-admit
                 if sr.n_preempt > 0:
                     self.metrics.counter("serve_recomputes_total").inc()
                 else:
@@ -952,9 +1306,7 @@ class ContinuousEngine:
                     span = int(lens[sr.row]) + self.segment_len
                     target = sr.ctx_len + self.segment_len
                 if target is not None:
-                    new_blocks = yield from self._grow(
-                        sched, sr, target, now, streams, tables, lens,
-                        done)
+                    new_blocks = yield from self._grow(st, sr, target, now)
                     if new_blocks is None:
                         continue           # self-preempted (fault pressure)
                     if new_blocks:
@@ -1061,6 +1413,10 @@ class ContinuousEngine:
                 np.array(a) for a in jax.device_get(
                     (tok_d, n_out_d, lens_d, done_d, failed_d, out_t,
                      out_lp, i_exec)))
+            # The harvest rebinds the row arrays: re-point the run state at
+            # the fresh copies so retires below (and the next boundary's
+            # snapshot) mutate/see the live ones.
+            st.tok, st.n_out, st.lens, st.done = tok, n_out_new, lens, done
             self.metrics.counter("serve_host_syncs_total").inc()
             t_harvest = time.perf_counter()
             # The segment span covers dispatch -> harvested (device work +
@@ -1124,8 +1480,7 @@ class ContinuousEngine:
                     # peers never saw the NaN.
                     self.metrics.counter("serve_failed_total").inc()
                     yield self._retire_record(
-                        sched, sr, RequestStatus.FAILED, now + cnt,
-                        streams, tables, lens, done)
+                        st, sr, RequestStatus.FAILED, now + cnt)
                 elif done[row]:
                     toks, lps = streams.pop(sr.rid)
                     # Stop wins ties (a stop token emitted ON the last
@@ -1211,6 +1566,11 @@ _RUN_METRIC_ATTRS = {
     "last_run_defrags": "serve_defrags_total",
     "last_run_preemptions": "serve_preemptions_total",
     "last_run_recomputes": "serve_recomputes_total",
+    "last_run_spills": "serve_spills_total",
+    "last_run_spill_bytes": "serve_spill_bytes_total",
+    "last_run_restores": "serve_restores_total",
+    "last_run_snapshots": "serve_snapshots_total",
+    "last_run_recoveries": "serve_recoveries_total",
     "last_run_sheds": "serve_sheds_total",
     "last_run_timeouts": "serve_timeouts_total",
     "last_run_cancels": "serve_cancels_total",

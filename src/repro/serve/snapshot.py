@@ -1,0 +1,153 @@
+"""Engine snapshot format: one ``.npz`` holding a serve run at a segment
+boundary.
+
+The file is self-describing and weight-free: a JSON ``meta`` record
+(version, engine geometry fingerprint, run cursors, scheduler queues,
+allocator free-list order, spill-store index) plus numpy arrays for
+everything with bytes — the host row arrays, the RNG key, every request's
+prompt, every in-flight stream, the *live* pool blocks (gathered via
+:func:`repro.serve.kv_pool.extract_blocks`, so a mostly-empty pool costs
+almost nothing), and each spilled request's KV.  ``bfloat16`` leaves are
+bit-cast to ``uint16`` on the way in (numpy's format cannot carry the
+ml_dtypes descr) and re-viewed on the way out, so the round trip is exact
+to the bit — which is what makes a warm restart's token streams
+bit-identical rather than merely close.
+
+Writes are atomic (tmp file + ``os.replace``): a crash mid-snapshot leaves
+the previous checkpoint intact, never a torn file.
+
+The module deliberately imports only ``kv_pool`` (no engine import): the
+engine passes itself duck-typed, keeping the dependency one-directional.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import ml_dtypes
+import numpy as np
+
+from repro.serve import kv_pool
+
+SNAPSHOT_VERSION = 1
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _geometry(engine) -> dict:
+    """The engine-construction fingerprint a restore must match: pool and
+    batch geometry plus everything that shapes the jitted programs."""
+    cfg = engine.cfg
+    return {
+        "n_layers": int(cfg.n_layers),
+        "n_kv_heads": int(cfg.n_kv_heads),
+        "head_dim": int(cfg.resolved_head_dim),
+        "kv_cache_dtype": getattr(cfg, "kv_cache_dtype", "bf16"),
+        "dtype": cfg.dtype,
+        "max_batch": engine.max_batch,
+        "kv_blocks": engine.allocator.num_blocks,
+        "block_size": engine.block_size,
+        "max_blocks_per_req": engine.max_blocks_per_req,
+        "segment_len": engine.segment_len,
+        "chunked_prefill": engine.chunked_prefill,
+        "prefill_chunk": engine.prefill_chunk,
+        "preemption": engine.preemption,
+    }
+
+
+def check_geometry(engine, saved: dict) -> None:
+    """Raise ValueError listing every mismatch between the snapshot's
+    geometry fingerprint and this engine's."""
+    cur = _geometry(engine)
+    diffs = [f"{k}: snapshot {saved.get(k)!r} != engine {cur[k]!r}"
+             for k in cur if saved.get(k) != cur[k]]
+    if diffs:
+        raise ValueError(
+            "snapshot/engine geometry mismatch — a warm restart needs an "
+            "identically configured engine:\n  " + "\n  ".join(diffs))
+
+
+def save_snapshot(path, *, engine, state) -> str:
+    """Write ``state`` (a server._RunState) + the engine's durable pieces
+    (allocator, live pages, spill store) to ``path`` atomically."""
+    sched = state.sched
+    arrays: dict[str, np.ndarray] = {
+        "rng": np.asarray(state.rng),
+        "tok": state.tok, "n_out": state.n_out, "lens": state.lens,
+        "done": state.done, "rids": state.rids, "max_new": state.max_new,
+        "stops": state.stops, "tables": state.tables,
+    }
+    reqs_meta = []
+    for rid, req in sorted(state.requests.items()):
+        reqs_meta.append({"rid": rid, "max_new": req.max_new,
+                          "arrival_step": req.arrival_step,
+                          "stop_tokens": [int(t) for t in req.stop_tokens],
+                          "deadline_steps": req.deadline_steps})
+        arrays[f"prompt_{rid}"] = np.asarray(req.prompt, np.int32)
+    for sr in list(sched.running.values()) + list(sched.preempted):
+        if sr.resume_prompt is not None:
+            arrays[f"resume_{sr.rid}"] = np.asarray(sr.resume_prompt,
+                                                    np.int32)
+    stream_rids = sorted(state.streams)
+    for rid in stream_rids:
+        toks, lps = state.streams[rid]
+        arrays[f"stream_tok_{rid}"] = np.asarray(toks, np.int32)
+        arrays[f"stream_lp_{rid}"] = np.asarray(lps, np.float32)
+    live = sorted(engine.allocator._live)
+    if live:
+        for k, v in kv_pool.extract_blocks(engine.pages, live).items():
+            arrays[f"pool_{k}"] = v
+    spill_meta: dict[str, dict] = {}
+    for rid in engine.spill.rids():
+        e = engine.spill.get(rid)
+        spill_meta[str(rid)] = {
+            "n_blocks": e.n_blocks, "ctx_len": e.ctx_len,
+            "n_out": e.n_out, "pending_tok": e.pending_tok,
+            "kv_keys": sorted(e.kv)}
+        for k, v in e.kv.items():
+            arrays[f"spill_{rid}_{k}"] = v
+    bf16_names = []
+    for name in list(arrays):
+        if arrays[name].dtype == _BF16:
+            arrays[name] = arrays[name].view(np.uint16)
+            bf16_names.append(name)
+    meta = {
+        "version": SNAPSHOT_VERSION,
+        "geometry": _geometry(engine),
+        "run": {"now": state.now, "n_loops": state.n_loops,
+                "greedy": state.greedy, "temperature": state.temperature,
+                "stop_w": state.stop_w},
+        "scheduler": sched.to_state(),
+        "allocator": engine.allocator.to_state(),
+        "requests": reqs_meta,
+        "streams": stream_rids,
+        "spill": spill_meta,
+        "live_blocks": live,
+        "bf16_arrays": bf16_names,
+    }
+    path = str(path)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f,
+                 meta=np.frombuffer(json.dumps(meta).encode(), np.uint8),
+                 **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def load_snapshot(path) -> tuple[dict, dict[str, np.ndarray]]:
+    """Read a snapshot back; returns ``(meta, arrays)`` with bfloat16
+    leaves re-viewed to their original dtype."""
+    with np.load(str(path)) as z:
+        arrays = {k: np.array(z[k]) for k in z.files if k != "meta"}
+        meta = json.loads(bytes(bytearray(z["meta"])).decode())
+    if int(meta.get("version", -1)) != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"snapshot {path}: version {meta.get('version')!r} != "
+            f"supported {SNAPSHOT_VERSION}")
+    for name in meta.get("bf16_arrays", ()):
+        arrays[name] = arrays[name].view(_BF16)
+    return meta, arrays

@@ -338,6 +338,16 @@ SERVE_METRICS: tuple[tuple[str, str, bool, str], ...] = (
      "Running requests evicted (pool pressure or injected) this run"),
     ("serve_recomputes_total", "counter", True,
      "Preempted requests re-admitted through recompute prefill this run"),
+    ("serve_spills_total", "counter", True,
+     "Requests paged out to the host SpillStore this run"),
+    ("serve_spill_bytes_total", "counter", True,
+     "KV bytes moved device->host by page-out spills this run"),
+    ("serve_restores_total", "counter", True,
+     "Spilled requests scattered back into the pool this run"),
+    ("serve_snapshots_total", "counter", True,
+     "Engine snapshots written this run (periodic + drain)"),
+    ("serve_recoveries_total", "counter", True,
+     "In-flight requests resumed from a restored snapshot this run"),
     ("serve_sheds_total", "counter", True,
      "Arrivals dropped by the bounded admission queue this run"),
     ("serve_timeouts_total", "counter", True,

@@ -228,15 +228,79 @@ def test_allocator_hide_blocks_and_check_invariants():
         alloc.check_invariants()
 
 
+def test_check_invariants_spilled_and_allocator_state_roundtrip():
+    """Spilled requests must hold ZERO device blocks (their KV lives on
+    the host), and to_state/from_state must preserve free-list ORDER —
+    the same block ids in the same order is what makes a restored run's
+    admission bit-replayable."""
+    alloc = kv_pool.BlockAllocator(9)
+    a = alloc.alloc(3)
+    alloc.check_invariants(tables=[a], spilled=[(7, [])])
+    with pytest.raises(RuntimeError):
+        alloc.check_invariants(spilled=[(7, a[:1])])   # spilled holds blocks
+    b = alloc.alloc(2)
+    alloc.free(a)                          # free-list order now non-trivial
+    alloc.hide_blocks(1)
+    state = alloc.to_state()
+    clone = kv_pool.BlockAllocator.from_state(state)
+    assert list(clone._free) == list(alloc._free)      # ORDER, not just set
+    assert clone._live == alloc._live
+    assert clone._hidden == alloc._hidden
+    assert clone.alloc(2) == alloc.alloc(2)            # same replay
+    with pytest.raises(RuntimeError):
+        kv_pool.BlockAllocator.from_state(
+            {**state, "live": state["live"] + state["free"][:1]})
+    del b
+
+
+def test_spill_store_accounting():
+    store = kv_pool.SpillStore()
+    e = kv_pool.SpillEntry(kv={"k": np.zeros((2, 1, 4, 2, 8), np.float32)},
+                           n_blocks=1, ctx_len=3, n_out=2, pending_tok=5)
+    store.put(7, e)
+    assert 7 in store and len(store) == 1
+    assert store.total_bytes() == e.nbytes > 0
+    with pytest.raises(RuntimeError):
+        store.put(7, e)                    # duplicate spill is a leak
+    assert store.pop(7) is e and len(store) == 0
+    store.put(9, e)
+    store.discard(9)
+    store.discard(9)                       # idempotent
+    assert len(store) == 0
+
+
 @hypothesis.given(seed=st.integers(0, 2**16))
 @hypothesis.settings(max_examples=20, deadline=None)
 def test_preemptive_scheduler_random_ops_hold_invariants(seed):
-    """Random submit/admit/grow/preempt/finish/defrag/hide sequences: the
-    allocator books balance and tables stay disjoint after EVERY op."""
+    """Random submit/admit/grow/preempt(recompute OR spill)/finish/defrag/
+    hide sequences: the allocator books balance, tables stay disjoint, and
+    spilled requests hold zero device blocks after EVERY op."""
     rnd = np.random.default_rng(seed)
     alloc, sched = _preemptive(blocks=int(rnd.integers(6, 24)),
                                max_batch=int(rnd.integers(2, 6)))
     now, next_rid = 0, 0
+
+    def preempt_random(victim):
+        # The engine's two eviction flavors: page-out (KV to host, zero
+        # device blocks retained, re-admits on exactly spill_blocks) vs
+        # recompute (resume prompt stapled, re-prefills on re-admission).
+        if rnd.random() < 0.5:
+            sched.preempt(victim, now,
+                          spill_blocks=kv_pool.blocks_for(
+                              max(victim.ctx_len, 1), 4))
+        else:
+            victim.resume_prompt = victim.req.prompt
+            sched.preempt(victim, now)
+
+    def admit():
+        for sr in sched.admit_ready(now):
+            if sr.spilled:
+                # restore never double-allocates: re-admission hands back
+                # exactly the spilled block count, then the engine scatters
+                # the host KV and clears the flag.
+                assert len(sr.blocks) == sr.spill_blocks
+                sr.spilled, sr.spill_blocks = False, 0
+
     for _ in range(60):
         op = rnd.random()
         if op < 0.3 and next_rid < 12:
@@ -247,19 +311,16 @@ def test_preemptive_scheduler_random_ops_hold_invariants(seed):
                 next_rid += 1
         elif op < 0.5:
             sched.poll_arrivals(now)
-            sched.admit_ready(now)
+            admit()
         elif op < 0.65 and sched.running:
             sr = rnd.choice(list(sched.running.values()))
             got = sched.ensure_capacity(sr, sr.ctx_len + 4)
             if got is None:
                 victim = sched.pick_victim(exclude_rid=sr.rid)
                 if victim is not None:
-                    victim.resume_prompt = victim.req.prompt
-                    sched.preempt(victim, now)
+                    preempt_random(victim)
         elif op < 0.75 and sched.running:
-            victim = sched.pick_victim()
-            victim.resume_prompt = victim.req.prompt
-            sched.preempt(victim, now)
+            preempt_random(sched.pick_victim())
         elif op < 0.85 and sched.running:
             sched.finish(rnd.choice(list(sched.running.values())), now)
         elif op < 0.92:
@@ -271,7 +332,9 @@ def test_preemptive_scheduler_random_ops_hold_invariants(seed):
         else:
             alloc.hide_blocks(int(rnd.integers(1, 3)))
         alloc.check_invariants(
-            tables=[sr.blocks for sr in sched.running.values()])
+            tables=[sr.blocks for sr in sched.running.values()],
+            spilled=[(sr.rid, sr.blocks) for sr in sched.preempted
+                     if sr.spilled])
         now += int(rnd.integers(0, 3))
     alloc.unhide_all()
     for sr in list(sched.running.values()) + list(sched.preempted):

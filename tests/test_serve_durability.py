@@ -1,0 +1,252 @@
+"""Durability layer (PR 9): page-out preemption, engine snapshot/restore,
+graceful drain, and crash-point recovery.
+
+The contract under test everywhere is BIT-IDENTITY: a request whose KV was
+paged out to host RAM and scattered back, or that crossed a process death
+through a snapshot file, must emit exactly the token/logprob stream an
+uninterrupted run produces — greedy and sampled, fp and int8 pools,
+blocking and chunked prefill.  (Recompute preemption earns the same
+guarantee from the request-id-folded RNG; page-out earns it the strong
+way, by round-tripping the exact cache bytes.)
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+from repro.models import model as M
+from repro.serve import (ContinuousEngine, CrashPoint, FaultInjector,
+                         Request, RequestStatus)
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=2)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def int8_setup(dense_setup):
+    cfg, _ = dense_setup
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    return cfg8, M.init(jax.random.PRNGKey(0), cfg8)
+
+
+def _reqs(cfg, *, n=4, prompt_len=4, max_new=12, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=10 + i, prompt=rng.integers(0, cfg.vocab, prompt_len),
+                    max_new=max_new, arrival_step=i) for i in range(n)]
+
+
+def _storm_engine(params, cfg, **kw):
+    """The PR 7 preemption-storm recipe: a pool two blocks short of the
+    running set's worst case, so growth failures force evictions."""
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("kv_blocks", 9)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_blocks_per_req", 8)
+    kw.setdefault("segment_len", 4)
+    kw.setdefault("seq_bucket", 8)
+    return ContinuousEngine(params, cfg, **kw)
+
+
+def _assert_identical(got, want, *, logprobs=True):
+    """Full bit-identity (tokens AND logprobs).  Pass logprobs=False for
+    streams that cross a recompute re-prefill: the re-prefill recomputes
+    the resumed position's logprob through a different (prefill) numeric
+    path, so recompute guarantees token-identity only — page-out, which
+    round-trips the exact cache bytes, owes the full contract."""
+    assert set(got) == set(want)
+    for rid in want:
+        assert got[rid].status is RequestStatus.OK, (rid, got[rid].status)
+        np.testing.assert_array_equal(got[rid].tokens, want[rid].tokens)
+        if logprobs:
+            np.testing.assert_array_equal(got[rid].logprobs,
+                                          want[rid].logprobs)
+
+
+# ---------------------------------------------------------------------------
+# Page-out preemption
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("pool", ["fp", "int8"])
+def test_page_out_storm_bit_identity(dense_setup, int8_setup, temperature,
+                                     pool):
+    """A preemption storm under page_out resumes every victim from host
+    KV bytes with ZERO recompute — tokens AND logprobs bit-identical to a
+    storm-free run on a roomy pool (a stronger contract than recompute,
+    whose re-prefill only guarantees token-identity)."""
+    cfg, params = int8_setup if pool == "int8" else dense_setup
+    reqs = _reqs(cfg)
+    ref = _storm_engine(params, cfg, preemption="recompute",
+                        kv_blocks=33).run(
+        reqs, key=KEY, temperature=temperature)
+    ce = _storm_engine(params, cfg, preemption="page_out")
+    res = ce.run(reqs, key=KEY, temperature=temperature)
+    _assert_identical(res, ref)
+    # ... and token-identical to the recompute mode at EQUAL pool size.
+    rc = _storm_engine(params, cfg, preemption="recompute").run(
+        reqs, key=KEY, temperature=temperature)
+    _assert_identical(res, rc, logprobs=False)
+    assert ce.last_run_preemptions >= 1, "storm recipe produced no storm"
+    assert ce.last_run_spills == ce.last_run_preemptions
+    assert ce.last_run_restores == ce.last_run_spills
+    assert ce.last_run_spill_bytes > 0
+    assert ce.last_run_recomputes == 0, "page_out must never recompute"
+    assert len(ce.spill) == 0, "spill store must drain with the run"
+    assert ce.allocator.live_blocks == 0
+
+
+def test_page_out_chunked_prefill_falls_back_for_prefilling_victims(
+        dense_setup):
+    """Chunked-prefill mode: a victim caught mid-prefill has no complete
+    KV to spill and falls back to recompute; decoding victims still spill.
+    Streams stay bit-identical either way."""
+    cfg, params = dense_setup
+    reqs = _reqs(cfg, prompt_len=8)
+    kw = dict(chunked_prefill=True, prefill_chunk=4)
+    ref = _storm_engine(params, cfg, preemption="recompute", **kw).run(
+        reqs, key=KEY, temperature=0.0)
+    ce = _storm_engine(params, cfg, preemption="page_out", **kw)
+    res = ce.run(reqs, key=KEY, temperature=0.0)
+    _assert_identical(res, ref, logprobs=False)
+    assert (ce.last_run_spills + ce.last_run_recomputes
+            == ce.last_run_preemptions)
+    assert len(ce.spill) == 0
+
+
+def test_forced_preempt_spills_and_traces(dense_setup):
+    """A scripted fault-injector eviction in page_out mode goes through
+    the spill path and shows up as spill/spill_restore spans in the
+    trace; the stream is still bit-identical to the fault-free run."""
+    cfg, params = dense_setup
+    reqs = _reqs(cfg, n=3)
+    ce = _storm_engine(params, cfg, preemption="page_out", kv_blocks=17)
+    ref = ce.run(reqs, key=KEY, temperature=0.0)
+    assert ce.last_run_preemptions == 0    # roomy pool: no organic storm
+    fi = FaultInjector.scripted({3: {"preempt": 1}})
+    res = ce.run(reqs, key=KEY, temperature=0.0, faults=fi)
+    _assert_identical(res, ref)
+    assert ce.last_run_spills >= 1 and ce.last_run_restores >= 1
+    names = {e["name"] for e in ce.tracer.to_chrome()["traceEvents"]}
+    assert {"spill", "spill_restore", "fault:preempt"} <= names, names
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore / crash recovery
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature,pool", [(0.0, "fp"), (0.8, "int8")])
+def test_crash_restore_resume_bit_identity(dense_setup, int8_setup,
+                                           tmp_path, temperature, pool):
+    """Kill the loop mid-flight with a CrashPoint; a FRESH engine restores
+    the last periodic snapshot and every request completes bit-identically
+    to the uninterrupted run (rounds after the snapshot are replayed
+    deterministically — the resumed copy is authoritative)."""
+    cfg, params = int8_setup if pool == "int8" else dense_setup
+    reqs = _reqs(cfg)
+
+    def mk(snap=False):
+        return _storm_engine(
+            params, cfg, preemption="page_out",
+            snapshot_dir=str(tmp_path) if snap else None,
+            snapshot_interval=2 if snap else None)
+
+    ref = mk().run(reqs, key=KEY, temperature=temperature)
+    ce = mk(snap=True)
+    crashed = {}
+    with pytest.raises(CrashPoint):
+        for ev in ce.run_stream(reqs, key=KEY, temperature=temperature,
+                                faults=FaultInjector.crash_at(5)):
+            if ev["event"] == "finish":
+                crashed[ev["rid"]] = ev["result"]
+    assert ce.last_snapshot_path is not None
+    assert ce.last_run_snapshots >= 1
+    # The generator's teardown hygiene ran (no in-memory leaks) but NO
+    # finish events were emitted for in-flight requests.
+    assert len(crashed) < len(reqs)
+    assert ce.allocator.live_blocks == 0 and len(ce.spill) == 0
+
+    ce2 = mk(snap=True)
+    ce2.restore(ce.last_snapshot_path)
+    assert ce2.allocator.live_blocks >= 0
+    resumed = ce2.resume()
+    assert ce2.last_run_recoveries >= 1
+    _assert_identical({**crashed, **resumed}, ref)
+    names = {e["name"] for e in ce2.tracer.to_chrome()["traceEvents"]}
+    assert "recover" in names
+
+
+def test_drain_snapshots_and_warm_restart_completes(dense_setup, tmp_path):
+    """drain(deadline) stops admissions, spills the stragglers (page_out),
+    writes a final snapshot, and ends the run with a 'drain' event; a warm
+    restart serves the remainder bit-identically."""
+    cfg, params = dense_setup
+    reqs = _reqs(cfg)
+
+    def mk():
+        return _storm_engine(params, cfg, preemption="page_out",
+                             snapshot_dir=str(tmp_path))
+
+    ref = mk().run(reqs, key=KEY, temperature=0.0)
+    ce = mk()
+    early, drain_ev = {}, None
+    for i, ev in enumerate(ce.run_stream(reqs, key=KEY, temperature=0.0)):
+        if ev["event"] == "finish":
+            early[ev["rid"]] = ev["result"]
+        elif ev["event"] == "drain":
+            drain_ev = ev
+        if i == 4:
+            ce.drain(deadline_steps=4)
+    assert drain_ev is not None, "drain latched but never completed"
+    assert drain_ev["running"] == 0       # page_out: stragglers all spill
+    assert len(early) < len(reqs), "drain test finished too early"
+    ce2 = mk().restore(drain_ev["path"])
+    resumed = ce2.resume()
+    _assert_identical({**early, **resumed}, ref)
+
+
+def test_restore_rejects_geometry_mismatch(dense_setup, tmp_path):
+    """A snapshot only restores into an identically-shaped engine — the
+    jitted programs and block math differ otherwise, silently."""
+    cfg, params = dense_setup
+    ce = _storm_engine(params, cfg, preemption="page_out",
+                       snapshot_dir=str(tmp_path))
+    ce.drain(deadline_steps=0)
+    drain_ev = next(ev for ev in ce.run_stream(_reqs(cfg), key=KEY)
+                    if ev["event"] == "drain")
+    wrong = _storm_engine(params, cfg, preemption="page_out",
+                          kv_blocks=11)
+    with pytest.raises(ValueError, match="geometry"):
+        wrong.restore(drain_ev["path"])
+    # the right geometry restores and serves everything from 'pending'
+    ce2 = _storm_engine(params, cfg, preemption="page_out")
+    res = ce2.restore(drain_ev["path"]).resume()
+    ref = _storm_engine(params, cfg, preemption="page_out").run(
+        _reqs(cfg), key=KEY)
+    _assert_identical(res, ref)
+
+
+def test_snapshot_requires_active_run_at_boundary(dense_setup, tmp_path):
+    cfg, params = dense_setup
+    ce = _storm_engine(params, cfg, preemption="page_out")
+    with pytest.raises(RuntimeError, match="idle"):
+        ce.snapshot(str(tmp_path / "s.npz"))
+    # mid-stream (suspended at a yield, NOT a boundary) is also rejected
+    stream = ce.run_stream(_reqs(cfg), key=KEY)
+    next(stream)
+    with pytest.raises(RuntimeError, match="boundary"):
+        ce.snapshot(str(tmp_path / "s.npz"))
+    stream.close()
+
+
+def test_page_out_requires_spill_capable_config(dense_setup):
+    cfg, params = dense_setup
+    with pytest.raises(ValueError, match="preemption"):
+        _storm_engine(params, cfg, preemption="paged_out")
