@@ -2,7 +2,7 @@
 # ruff runs only when installed (the CI image always installs it).
 PY ?= python
 
-.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim serve-chaos serve-recover serve-validate
+.PHONY: ci test lint bench-smoke bench-paged bench-prefill serve-sim serve-chaos serve-recover serve-prefix serve-validate
 
 ci: lint test
 
@@ -21,6 +21,7 @@ bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/paged_attention.py --smoke --check --out BENCH_PR4.json
 	PYTHONPATH=src $(PY) benchmarks/prefill.py --smoke --check --out BENCH_PR5.json
 	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --overload --smoke --out BENCH_PR9.json
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --prefix-share --smoke --out BENCH_PR10.json
 
 # Paged-attention gate: measures fresh (never trusts a checked-in JSON)
 # and asserts the fused path's decode tok/s >= the gather-dense path at
@@ -68,21 +69,37 @@ serve-recover:
 		--metrics-out serve_recover_metrics.prom \
 		--trace-out serve_recover_trace.json
 
+# Shared-prefix traffic smoke: 80% shared-system-prefix workload through
+# the prefix-cached engine vs an uncached engine at equal pool (strict
+# TTFT p50 win + concurrency >= asserted, BENCH_PR10.json), then a
+# scripted preempt + cache-flush storm on the warm cached engine — every
+# stream must stay bit-identical to the uncached reference.  Exports the
+# storm trace (prefix_hit / cow_copy / fault:flush events) + metrics.
+serve-prefix:
+	PYTHONPATH=src $(PY) benchmarks/serve_traffic.py --prefix-share --smoke \
+		--out BENCH_PR10.json \
+		--metrics-out serve_prefix_metrics.prom \
+		--trace-out serve_prefix_trace.json
+	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
+		bench_out/serve_prefix_trace.json \
+		--require-names segment,retire,prefix_hit,cow_copy,preempt \
+		--require-prefix fault:
+
 # Validate the telemetry artifacts serve-sim / serve-chaos / serve-recover
-# just wrote: traces parse as Chrome trace-event JSON with the required
-# phases (X spans, i instants, C counters, M metadata) and serve events
-# present.
+# just wrote under bench_out/: traces parse as Chrome trace-event JSON
+# with the required phases (X spans, i instants, C counters, M metadata)
+# and serve events present.
 serve-validate:
 	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
-		serve_sim_trace.json --require-names segment,retire
+		bench_out/serve_sim_trace.json --require-names segment,retire
 	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
-		serve_chaos_trace.json --require-names segment,preempt,retire \
-		--require-prefix fault:
+		bench_out/serve_chaos_trace.json \
+		--require-names segment,preempt,retire --require-prefix fault:
 	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
-		serve_recover_trace.json \
+		bench_out/serve_recover_trace.json \
 		--require-names segment,spill,snapshot,preempt --require-prefix fault:
 	PYTHONPATH=src $(PY) -m repro.serve.telemetry validate \
-		serve_recover_trace_resume.json \
+		bench_out/serve_recover_trace_resume.json \
 		--require-names recover,segment,retire
 
 lint:

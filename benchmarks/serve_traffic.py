@@ -44,6 +44,19 @@ Three robustness modes ride on the same harness:
     must complete bit-identically to an uninterrupted reference run.
     Crash + resume traces (spill / snapshot / recover spans) and the
     snapshot directory are the CI artifacts.
+  * --prefix-share (BENCH_PR10.json): 80% shared-system-prefix traffic
+    through the prefix-cached engine vs an uncached engine at equal
+    pool.  Asserts the cached side's TTFT p50 is strictly below the
+    uncached baseline (suffix-only prefill), admitted concurrency is at
+    least the uncached side's, exact-duplicate prompts exercise
+    copy-on-write, and every token stream is bit-identical — then
+    re-runs the warm cached engine under a scripted preempt +
+    cache-flush storm and re-asserts bit-identity.  Reports hit rate,
+    cached tokens, CoW copies, and suffix prefills.
+
+Run artifacts (traces, metrics, snapshot dirs) passed as bare filenames
+land under --out-dir (default bench_out/, gitignored); BENCH_*.json via
+--out stays where you put it.
 
 Usage:
   PYTHONPATH=src python benchmarks/serve_traffic.py --smoke --out BENCH_PR3.json
@@ -51,12 +64,14 @@ Usage:
   PYTHONPATH=src python benchmarks/serve_traffic.py --overload --smoke
   PYTHONPATH=src python benchmarks/serve_traffic.py --chaos --requests 50
   PYTHONPATH=src python benchmarks/serve_traffic.py --recover --smoke
+  PYTHONPATH=src python benchmarks/serve_traffic.py --prefix-share --smoke
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import time
 
 import jax
@@ -100,6 +115,40 @@ def make_workload(n: int, *, vocab: int, mean_interarrival: float,
             prompt=rng.integers(0, vocab, int(rng.integers(prompt_lo,
                                                            prompt_hi + 1))),
             max_new=new,
+            arrival_step=int(t)))
+    return reqs
+
+
+def make_prefix_workload(n: int, *, vocab: int, sys_len: int,
+                         mean_interarrival: float, tail_hi: int,
+                         new_lo: int, new_hi: int,
+                         seed: int) -> list[Request]:
+    """Shared-system-prefix traffic: 80% of requests open with one common
+    `sys_len`-token prefix (the deterministic every-5th request is fully
+    random — the cache-miss control group), and every 5th *sharer* is an
+    exact duplicate of the bare system prompt, which exercises the
+    copy-on-write path (a whole-prompt cache hit maps the final block CoW
+    so decode can append privately).  Arrivals are Poisson; same-round
+    co-arrivals cannot share (the first writer registers its blocks only
+    after its prefill dispatch), so the interarrival gap is what turns
+    the prefix index into actual hits."""
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(0, vocab, sys_len)
+    arrivals = np.cumsum(rng.poisson(mean_interarrival, size=n))
+    arrivals[0] = 0
+    reqs = []
+    for i, t in enumerate(arrivals):
+        tail = int(rng.integers(1, tail_hi + 1))
+        if i % 5 == 4:                       # 20%: no shared prefix
+            prompt = rng.integers(0, vocab, sys_len + tail)
+        elif i % 25 == 10:                   # some exact duplicates: CoW
+            prompt = sys_prefix.copy()
+        else:                                # 80%: shared prefix + tail
+            prompt = np.concatenate(
+                [sys_prefix, rng.integers(0, vocab, tail)])
+        reqs.append(Request(
+            rid=i, prompt=prompt,
+            max_new=int(rng.integers(new_lo, new_hi + 1)),
             arrival_step=int(t)))
     return reqs
 
@@ -475,6 +524,128 @@ def run_recover(args, cfg, params, plan) -> None:
           f"{len(resume_trace['traceEvents'])} resume events) — OK")
 
 
+def run_prefix_share(args, cfg, params, plan) -> None:
+    """Prefix-cache scenario: 80%-shared-system-prefix traffic against the
+    SAME pool, uncached engine vs prefix-cached engine.  The cached side
+    must win strictly on TTFT p50 (suffix-only prefill) and hold at least
+    the uncached admitted concurrency (sharers commit refcounted blocks,
+    not private copies), while every token stream stays bit-identical.
+    A scripted preempt + cache-flush storm then re-runs the cached engine
+    and must STILL be bit-identical.  Writes BENCH_PR10.json."""
+    reqs = make_prefix_workload(
+        args.requests, vocab=cfg.vocab, sys_len=3 * args.block_size,
+        mean_interarrival=2.0, tail_hi=args.block_size,
+        new_lo=6, new_hi=12, seed=args.seed)
+    worst = max(-(-(r.prompt_len + r.max_new + args.seq_bucket)
+                  // args.block_size) for r in reqs)
+    assert worst <= args.kv_blocks - 1, "pool must at least fit one request"
+
+    def mk(prefix: bool) -> ContinuousEngine:
+        return ContinuousEngine(
+            params, cfg, plan=plan, max_batch=args.max_batch,
+            kv_blocks=args.kv_blocks, block_size=args.block_size,
+            max_blocks_per_req=worst, segment_len=args.segment_len,
+            seq_bucket=args.seq_bucket, preemption="recompute",
+            prefix_cache=prefix, debug_invariants=True)
+
+    sides, results, engines = {}, {}, {}
+    for mode, prefix in (("uncached", False), ("cached", True)):
+        ce = mk(prefix)
+        ce.run(reqs)                  # warm: jit + (cached) cold index
+        res = ce.run(reqs)            # measured: warm jit, warm index
+        assert ce.allocator.live_blocks == 0, "KV pool leaked blocks"
+        assert ce.allocator.total_refs == 0, "refcounts leaked"
+        ce.allocator.check_invariants()
+        results[mode], engines[mode] = res, ce
+        ok = [r for r in res.values() if r.status is RequestStatus.OK]
+        hits, misses = ce.last_run_prefix_hits, ce.last_run_prefix_misses
+        sides[mode] = {
+            "max_concurrency": ce.last_run_max_concurrency,
+            "completed_ok": len(ok),
+            "preemptions": ce.last_run_preemptions,
+            "status_counts": _status_counts(res),
+            "ttft_p50_seconds": ce.ttft_percentile(50),
+            "ttft_p99_seconds": ce.ttft_percentile(99),
+            "prefix_hits": hits,
+            "prefix_misses": misses,
+            "prefix_hit_rate": hits / max(hits + misses, 1),
+            "prefix_hit_tokens": ce.last_run_prefix_hit_tokens,
+            "cow_copies": ce.last_run_cow_copies,
+            "suffix_prefills": ce.last_run_suffix_prefills,
+        }
+    # Sharing must be invisible in the streams: same statuses, same tokens.
+    for r in reqs:
+        a, b = results["cached"][r.rid], results["uncached"][r.rid]
+        assert a.status is b.status, (r.rid, a.status, b.status)
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    un, ca = sides["uncached"], sides["cached"]
+    assert ca["prefix_hits"] >= 1, "workload produced no prefix hits"
+    assert ca["cow_copies"] >= 1, \
+        "exact-duplicate prompts must exercise copy-on-write"
+    assert ca["suffix_prefills"] >= 1
+    assert ca["ttft_p50_seconds"] < un["ttft_p50_seconds"], \
+        "prefix-cached TTFT p50 must be strictly below the uncached " \
+        "baseline at equal pool size: " \
+        f"{ca['ttft_p50_seconds']:.4f}s vs {un['ttft_p50_seconds']:.4f}s"
+    assert ca["max_concurrency"] >= un["max_concurrency"], \
+        "sharing must not cost admitted concurrency at equal pool size"
+
+    # Scripted preempt + cache-flush storm on the warm cached engine:
+    # evictions decref shared blocks, flushes drop the whole prefix index
+    # mid-run — the streams must still match the uncached reference.
+    ce = engines["cached"]
+    fi = FaultInjector.scripted({2: {"preempt": 1}, 4: {"flush": True},
+                                 6: {"preempt": 1}, 9: {"flush": True}})
+    storm = ce.run(reqs, faults=fi)
+    assert ce.allocator.live_blocks == 0, "KV pool leaked blocks"
+    assert ce.allocator.total_refs == 0, "refcounts leaked"
+    ce.allocator.check_invariants()
+    assert ce.last_run_preemptions >= 1
+    for r in reqs:
+        got, want = storm[r.rid], results["uncached"][r.rid]
+        assert got.status is RequestStatus.OK, (r.rid, got.status)
+        np.testing.assert_array_equal(got.tokens, want.tokens)
+    trace = validate_chrome_trace(
+        ce.tracer.to_chrome(),
+        require_names={"segment", "retire", "prefix_hit", "cow_copy",
+                       "preempt"})
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert any(n.startswith("fault:") for n in names), \
+        f"no injected-fault events in the storm trace ({sorted(names)})"
+    if args.trace_out:
+        ce.export_trace(args.trace_out)
+    if args.metrics_out:
+        ce.export_metrics(args.metrics_out)
+
+    report = {
+        "bench": "serve_prefix_share",
+        "arch": args.arch,
+        "n_layers": args.layers,
+        "backend": jax.default_backend(),
+        "requests": len(reqs),
+        "max_batch": args.max_batch,
+        "kv_blocks": args.kv_blocks,
+        "block_size": args.block_size,
+        "segment_len": args.segment_len,
+        "sys_prefix_tokens": 3 * args.block_size,
+        "uncached": un,
+        "cached": ca,
+        "ttft_p50_speedup":
+            un["ttft_p50_seconds"] / ca["ttft_p50_seconds"],
+        "storm": {
+            "preemptions": ce.last_run_preemptions,
+            "prefix_hits": ce.last_run_prefix_hits,
+            "cow_copies": ce.last_run_cow_copies,
+            "bit_identical": True,
+            "trace_events": len(trace["traceEvents"]),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-8b")
@@ -514,6 +685,11 @@ def main() -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="seeded fault-injection smoke: survivors must be "
                     "bit-identical to a fault-free run, pool must drain")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="prefix-cache scenario: 80%% shared-system-prefix "
+                    "traffic, prefix-cached vs uncached engine at equal "
+                    "pool, plus a preempt/cache-flush storm "
+                    "-> BENCH_PR10.json")
     ap.add_argument("--recover", action="store_true",
                     help="crash-point chaos: snapshot, scripted mid-flight "
                     "crash, warm restart from the last snapshot, assert "
@@ -531,6 +707,10 @@ def main() -> None:
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bound the admission queue (overload scenario)")
     ap.add_argument("--out", default="BENCH_PR3.json")
+    ap.add_argument("--out-dir", default="bench_out",
+                    help="directory for run artifacts: bare filenames "
+                    "given to --trace-out/--metrics-out/--snapshot-dir "
+                    "land here (BENCH_*.json via --out is unaffected)")
     ap.add_argument("--trace-out", default=None,
                     help="write the (last) run's Chrome trace-event JSON "
                     "here (perfetto / chrome://tracing)")
@@ -542,11 +722,20 @@ def main() -> None:
                     "counters stay live; token streams are identical)")
     args = ap.parse_args()
 
-    if args.overload or args.chaos or args.recover:
+    if args.out_dir:
+        os.makedirs(args.out_dir, exist_ok=True)
+        for attr in ("trace_out", "metrics_out", "snapshot_dir"):
+            v = getattr(args, attr)
+            if v and not os.path.isabs(v) and os.sep not in v:
+                setattr(args, attr, os.path.join(args.out_dir, v))
+
+    if args.overload or args.chaos or args.recover or args.prefix_share:
         if args.smoke:
             args.requests = 16 if args.overload else 50
             if args.recover:
                 args.requests = 12
+            if args.prefix_share:
+                args.requests = 20
         if args.chaos:
             # Small pool: hidden-block pressure and forced preemptions bite.
             args.max_batch, args.kv_blocks = 4, 24
@@ -565,6 +754,13 @@ def main() -> None:
             args.max_batch, args.kv_blocks = 3, 12
             args.block_size = args.segment_len = 4
             args.seq_bucket = 8
+        if args.prefix_share:
+            # A pool too small for everyone's EXCLUSIVE copy: the shared
+            # 3-block system prefix is what buys extra admission slots.
+            args.max_batch, args.kv_blocks = 6, 26
+            args.block_size = args.segment_len = args.seq_bucket = 8
+            if args.out == "BENCH_PR3.json":
+                args.out = "BENCH_PR10.json"
         cfg = cfg_lib.reduced_config(args.arch, n_layers=args.layers)
         plan = backend_lib.load_plan(args.plan)
         params = model_lib.freeze_params(
@@ -574,6 +770,8 @@ def main() -> None:
             run_overload(args, cfg, params, plan)
         elif args.recover:
             run_recover(args, cfg, params, plan)
+        elif args.prefix_share:
+            run_prefix_share(args, cfg, params, plan)
         else:
             run_chaos(args, cfg, params, plan)
         return

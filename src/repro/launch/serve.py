@@ -65,6 +65,13 @@ def main():
                     "re-admission (zero recompute, bit-identical resume); "
                     "'off' reserves worst-case blocks at admission "
                     "(preemption-free baseline)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous: content-addressable KV pool — cached "
+                    "prompt-prefix blocks are shared into new requests at "
+                    "refcount+1 and only the unique suffix is prefilled "
+                    "(requires a preemptive mode); the synthetic stream "
+                    "then gives 80%% of requests a common system prefix "
+                    "so hits actually occur")
     ap.add_argument("--snapshot-dir", default=None,
                     help="continuous: directory for engine checkpoints; "
                     "with --snapshot-interval the run writes serve_snap.npz "
@@ -148,6 +155,7 @@ def main():
             chunked_prefill=args.chunked_prefill,
             prefill_chunk=args.prefill_chunk,
             preemption=args.preemption, max_queue=args.max_queue,
+            prefix_cache=args.prefix_cache,
             snapshot_dir=args.snapshot_dir,
             snapshot_interval=args.snapshot_interval,
             telemetry=not args.no_telemetry,
@@ -162,13 +170,24 @@ def main():
         else:
             rng = np.random.default_rng(0)
             arrivals = np.cumsum(rng.poisson(2.0, size=args.batch))
-            reqs = [
-                Request(rid=i,
-                        prompt=rng.integers(0, cfg.vocab, args.prompt_len),
-                        max_new=args.tokens, arrival_step=int(t),
-                        deadline_steps=args.deadline_steps)
-                for i, t in enumerate(arrivals)
-            ]
+            sys_prefix = None
+            if args.prefix_cache:
+                # Shared system prefix covering ~half the prompt so cache
+                # hits actually occur on 80% of the stream.
+                n_sys = max(args.block_size,
+                            (args.prompt_len // 2) // args.block_size
+                            * args.block_size)
+                sys_prefix = rng.integers(0, cfg.vocab, n_sys)
+            reqs = []
+            for i, t in enumerate(arrivals):
+                prompt = rng.integers(0, cfg.vocab, args.prompt_len)
+                if sys_prefix is not None and rng.random() < 0.8:
+                    prompt = np.concatenate(
+                        [sys_prefix, prompt[len(sys_prefix):]])
+                reqs.append(
+                    Request(rid=i, prompt=prompt, max_new=args.tokens,
+                            arrival_step=int(t),
+                            deadline_steps=args.deadline_steps))
             t0 = time.perf_counter()
             if args.drain_deadline is not None:
                 # Graceful-shutdown demo: latch the drain at the first
@@ -197,6 +216,8 @@ def main():
         attn = "paged-attn" if args.paged_attn else "gather"
         pf = (f"chunked-prefill:{ce.prefill_chunk}" if args.chunked_prefill
               else "blocking-prefill")
+        if args.prefix_cache:
+            pf += "|prefix-cache"
         print(f"[{tag}|continuous|{attn}|{pf}|preemption:{args.preemption}] "
               f"served {len(reqs)} requests "
               f"/ {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl. "
@@ -211,6 +232,11 @@ def main():
               f"{ce.last_run_snapshots} snapshots, "
               f"{ce.last_run_recoveries} RECOVERED, "
               f"{ce.last_run_sheds} shed, {ce.last_run_timeouts} timeout), "
+              f"{ce.last_run_prefix_hits} prefix hits "
+              f"({ce.last_run_prefix_hit_tokens} tok cached, "
+              f"{ce.last_run_prefix_misses} misses, "
+              f"{ce.last_run_cow_copies} CoW, "
+              f"{ce.last_run_suffix_prefills} suffix prefills), "
               f"p50 latency {lat[len(lat)//2]} steps, TTFT p99 "
               f"{ce.ttft_percentile(99)*1e3:.1f}ms, peak pool occupancy "
               f"{max((o for _, o in ce.occupancy_trace), default=0.0):.2f}")

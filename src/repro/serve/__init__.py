@@ -15,7 +15,8 @@
 from repro.serve.engine import Engine, GenerationResult
 from repro.serve.faults import CrashPoint, FaultInjector
 from repro.serve.kv_pool import SpillEntry, SpillStore
-from repro.serve.scheduler import Request, RequestStatus, Scheduler, State
+from repro.serve.scheduler import (PRIORITY_BATCH, PRIORITY_INTERACTIVE,
+                                   Request, RequestStatus, Scheduler, State)
 from repro.serve.server import ContinuousEngine, RequestResult
 from repro.serve.telemetry import (MetricsRegistry, Telemetry, Tracer,
                                    validate_chrome_trace)
@@ -23,6 +24,7 @@ from repro.serve.telemetry import (MetricsRegistry, Telemetry, Tracer,
 __all__ = [
     "Engine", "GenerationResult", "Request", "RequestStatus", "Scheduler",
     "State", "ContinuousEngine", "RequestResult", "FaultInjector",
+    "PRIORITY_BATCH", "PRIORITY_INTERACTIVE",
     "CrashPoint", "SpillEntry", "SpillStore",
     "MetricsRegistry", "Telemetry", "Tracer", "validate_chrome_trace",
 ]

@@ -85,6 +85,8 @@ class FaultInjector:
     ``{"preempt": k}``     force-preempt k newest-admitted requests,
     ``{"poison": [rids]}`` NaN the logits of these requests' rows,
     ``{"cancel": [rids]}`` cancel these requests,
+    ``{"flush": True}``    drop every cached-free prefix-cache entry
+    (``BlockAllocator.drop_cached``) — cache loss must only cost misses,
     ``{"crash": True}``    raise :class:`CrashPoint` — kill the run loop
     mid-flight with no cleanup (recoverable only via snapshot/restore).
 
@@ -101,6 +103,7 @@ class FaultInjector:
     preempt_max: int = 2          # 1..preempt_max victims per burst
     poison_prob: float = 0.0      # P(NaN one running request's logits)
     cancel_prob: float = 0.0      # P(cancel one live/queued request)
+    flush_prob: float = 0.0       # P(drop all cached prefix blocks)
     start_round: int = 0          # first chaotic round
     stop_round: int | None = None   # chaos ends here (hidden blocks freed)
 
@@ -157,6 +160,10 @@ class FaultInjector:
             acts["preempt"] = int(rng.integers(1, self.preempt_max + 1))
         if running_rids and rng.random() < self.poison_prob:
             acts["poison"] = [int(rng.choice(list(running_rids)))]
+        if self.flush_prob > 0 and rng.random() < self.flush_prob:
+            # Gated on the prob so a disabled flush consumes no draw —
+            # legacy seeds keep their exact schedules.
+            acts["flush"] = True
         if self.cancel_prob > 0:
             cands = list(running_rids) + list(queued_rids)
             if cands and rng.random() < self.cancel_prob:

@@ -11,16 +11,33 @@ State machine (one :class:`ScheduledRequest` per admitted request):
 PREFILL->DECODE edge fires when the final chunk samples the first token
 inside a mixed segment instead of at a blocking per-request prefill.)
 
-* **FCFS** — arrivals queue in order; the head is admitted as soon as (a) a
-  batch row is free and (b) the pool can commit its admission need.  A
-  blocked head blocks the queue (no reordering: later short requests never
-  starve an earlier long one).
+* **FCFS within a priority class** — arrivals queue in order; the best
+  queued request (highest :attr:`Request.priority`, then earliest
+  deadline, then submit order) is admitted as soon as (a) a batch row is
+  free and (b) the pool can commit its admission need.  A blocked head
+  blocks the queue (no skipping to a lower class: backpressure never
+  starves the request it is protecting).  With every request at the
+  default priority and no deadlines this is exactly FCFS.
+* **Prefix caching** (``prefix_cache=True``, preemptive mode only) —
+  admission hashes the prompt's full blocks (:func:`~repro.serve.kv_pool.
+  prefix_keys`), maps the longest registered chain into the new table at
+  refcount+1 (reviving cached-free blocks), and commits pool headroom
+  only for the unique suffix.  At most ``prompt_len - 1`` tokens are
+  shared — the suffix prefill must produce the last prompt position's
+  logits to sample the first token.  When the cached chain covers the
+  whole prompt the final shared block is taken copy-on-write
+  (``ScheduledRequest.cow_src``): the engine duplicates the page, the
+  table points at the copy, and the source loses the extra reference —
+  the suffix prefill then recomputes the tail block's logits with its
+  page writes masked (the copied bytes are already exact), never
+  touching the other owners' pages.
 * **Preemptive admission** (``preemptive=True``, the continuous engine's
   default) — admission commits only the request's *actual* prompt blocks,
   not its worst case.  Decode growth (:meth:`ensure_capacity`) can
   therefore fail mid-flight; when it does, the engine preempts a victim —
-  **newest-admitted first**, so the oldest request is never evicted by a
-  younger one and always runs to completion (FCFS-fair, guaranteed
+  **lowest-priority-newest first**: the cheapest class pays for pool
+  pressure, and within a class the oldest admission is never evicted by
+  a younger one and always runs to completion (FCFS-fair, guaranteed
   progress: after evicting every younger request the oldest's worst case
   fits by the :meth:`submit`-time capacity check).  :meth:`preempt` frees
   the victim's blocks and requeues it ahead of every never-admitted
@@ -61,7 +78,12 @@ import enum
 
 import numpy as np
 
-from repro.serve.kv_pool import BlockAllocator, blocks_for
+from repro.serve.kv_pool import BlockAllocator, blocks_for, prefix_keys
+
+# Priority classes (Request.priority is an open int scale — higher wins;
+# these two names cover the common split).
+PRIORITY_BATCH = 0
+PRIORITY_INTERACTIVE = 1
 
 
 class State(enum.Enum):
@@ -106,6 +128,8 @@ class Request:
     stop_tokens: tuple[int, ...] = ()
     deadline_steps: int | None = None   # retire as TIMEOUT after this many
     #                                     sim steps past arrival (None: never)
+    priority: int = PRIORITY_BATCH      # higher = admitted first / evicted
+    #                                     last (PRIORITY_INTERACTIVE > batch)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -116,6 +140,7 @@ class Request:
         if self.deadline_steps is not None and self.deadline_steps < 1:
             raise ValueError(
                 f"request {self.rid}: deadline_steps must be >= 1")
+        self.priority = int(self.priority)
 
     @property
     def prompt_len(self) -> int:
@@ -142,6 +167,17 @@ class ScheduledRequest:
     resume_prompt: np.ndarray | None = None   # prompt + generated-so-far
     spilled: bool = False         # page-out: KV lives in the host SpillStore
     spill_blocks: int = 0         # blocks the spilled KV needs at re-admission
+    shared_tokens: int = 0        # prompt tokens served from cached prefix
+    #                               blocks at the last admission (cache hit)
+    pf_start: int = 0             # block-aligned prefill start: positions
+    #                               [0, pf_start) are already in the pool via
+    #                               shared blocks; prefill covers the rest
+    cow_src: int = -1             # pending copy-on-write: the engine must
+    #                               copy this page into the table's last
+    #                               shared slot before any prefill dispatch
+    cow_skip: bool = False        # chunked exact-hit: the next chunk spans
+    #                               only the CoW-copied (byte-exact) block,
+    #                               so its page writes are masked
 
     @property
     def rid(self) -> int:
@@ -163,12 +199,18 @@ class ScheduledRequest:
 class Scheduler:
     def __init__(self, allocator: BlockAllocator, max_batch: int,
                  block_size: int, *, preemptive: bool = False,
+                 prefix_cache: bool = False,
                  max_queue: int | None = None, debug: bool = False,
                  metrics=None):
+        if prefix_cache and not preemptive:
+            raise ValueError("prefix_cache requires preemptive scheduling "
+                             "(reservation-mode worst-case accounting "
+                             "cannot express shared blocks)")
         self.allocator = allocator
         self.max_batch = max_batch
         self.block_size = block_size
         self.preemptive = preemptive
+        self.prefix_cache = prefix_cache
         self.max_queue = max_queue
         self.debug = debug
         # Optional telemetry.MetricsRegistry: the scheduler reports its own
@@ -253,40 +295,111 @@ class Scheduler:
 
     # ------------------------------------------------------------ admission
 
-    def admit_ready(self, now: int) -> list[ScheduledRequest]:
-        """Admit FCFS while a batch row is free and the pool can commit the
-        head's admission need: preempted requeues first (they arrived — and
-        were admitted — before anything still waiting), then arrivals.
+    def _class_key(self, r) -> tuple:
+        """Admission order within the queues: priority class first (higher
+        admitted sooner); within an ELEVATED class, earliest absolute
+        deadline (SLO-aware: ``deadline_steps`` composes — an undeadlined
+        peer sorts last in its class); submit order breaks ties.  The
+        default class (priority 0, every legacy request) stays strict
+        FCFS regardless of deadlines."""
+        req = r.req if isinstance(r, ScheduledRequest) else r
+        dl = (req.arrival_step + req.deadline_steps
+              if req.priority > 0 and req.deadline_steps is not None
+              else float("inf"))
+        return (-req.priority, dl, self._submit_seq[req.rid])
 
-        Preemptive mode commits the *actual* current-prompt blocks; the
-        reservation baseline commits the worst case and books the growth
-        remainder in ``outstanding``.  Returns the records in PREFILL state
-        (a re-admitted record has ``n_preempt > 0`` and resumes from
-        ``cur_prompt`` / ``n_out``)."""
+    def _prefix_plan(self, prompt) -> tuple[list[int], int, bool]:
+        """(matched blocks, shareable tokens, cow) for admitting `prompt`.
+
+        Shareable tokens are capped at ``prompt_len - 1``: the suffix
+        prefill must recompute at least the final prompt position to
+        produce the logits the first sampled token comes from.  ``cow``
+        is True when the cached chain covers the WHOLE prompt — the last
+        matched block then still carries that final position, so it is
+        mapped copy-on-write rather than referenced in place."""
+        if not self.prefix_cache:
+            return [], 0, False
+        s = int(len(prompt))
+        matched = self.allocator.match_prefix(
+            prefix_keys(prompt, self.block_size))
+        t_s = min(len(matched) * self.block_size, s - 1)
+        n_sh = blocks_for(t_s, self.block_size)
+        return matched[:n_sh], t_s, n_sh * self.block_size > t_s
+
+    def _acquire_for_prompt(self, prompt,
+                            n_total: int) -> tuple | None:
+        """Commit `n_total` table blocks for `prompt`: the longest cached
+        prefix chain at refcount+1 (cached-free matches revived) plus
+        fresh blocks for the unique suffix.  All-or-nothing — returns
+        ``(blocks, shared_tokens, cow_src)`` or None (backpressure, books
+        untouched)."""
+        matched, t_s, cow = self._prefix_plan(prompt)
+        fresh = n_total - len(matched) + (1 if cow else 0)
+        n_revive = sum(1 for b in matched
+                       if self.allocator.refcount(b) == 0)
+        if self.allocator.free_blocks - n_revive < fresh:
+            return None
+        self.allocator.acquire_cached(matched)
+        got = self.allocator.alloc(fresh)
+        assert got is not None             # headroom just checked
+        if cow:
+            # Exact-full-prompt hit: swap the fresh block into the last
+            # shared slot and drop our reference on the source — the
+            # engine's page copy is dispatched before any later prefill
+            # could reuse the source page, so decref-now is safe.
+            src = matched[-1]
+            blocks = matched[:-1] + [got[0]] + got[1:]
+            self.allocator.free([src])
+            return blocks, t_s, src
+        return matched + got, t_s, -1
+
+    def admit_ready(self, now: int) -> list[ScheduledRequest]:
+        """Admit while a batch row is free and the pool can commit the
+        best queued request's admission need: preempted requeues first
+        (they hold progress — and arrived before anything still waiting),
+        then arrivals; both ordered by :meth:`_class_key`.
+
+        Preemptive mode commits the *actual* current-prompt blocks (minus
+        whatever a cached prefix supplies — see :meth:`_acquire_for_prompt`);
+        the reservation baseline commits the worst case and books the
+        growth remainder in ``outstanding``.  Returns the records in
+        PREFILL state (a re-admitted record has ``n_preempt > 0`` and
+        resumes from ``cur_prompt`` / ``n_out``; a cache-hit record has
+        ``shared_tokens > 0`` and prefills from ``pf_start``)."""
         admitted = []
         while self._free_rows:
             if self.preempted:
                 sr = self.preempted[0]
-                # A spilled record re-admits onto exactly the blocks its
-                # host-side KV needs (scatter, no recompute); a recompute
-                # record re-admits onto its grown-prompt prefill need.
-                need = (sr.spill_blocks if sr.spilled
-                        else blocks_for(sr.cur_prompt_len, self.block_size))
-                got = None
-                if self.allocator.free_blocks >= need:
-                    got = self.allocator.alloc(need)
-                if got is None:
-                    break                  # backpressure: head waits (FCFS)
+                if sr.spilled:
+                    # A spilled record re-admits onto exactly the blocks
+                    # its host-side KV needs (scatter, no recompute) —
+                    # always exclusive pages, sharing would alias the
+                    # incoming bytes.
+                    got = None
+                    if self.allocator.free_blocks >= sr.spill_blocks:
+                        got = self.allocator.alloc(sr.spill_blocks)
+                    if got is None:
+                        break              # backpressure: head waits
+                    sr.blocks = got
+                    sr.shared_tokens, sr.pf_start, sr.cow_src = 0, 0, -1
+                else:
+                    # Recompute path: the re-prefill rebuilds ctx from
+                    # the grown prompt — and can itself ride cached
+                    # prefix blocks (including its own, freed at
+                    # preemption and still registered).
+                    res = self._acquire_for_prompt(
+                        sr.cur_prompt,
+                        blocks_for(sr.cur_prompt_len, self.block_size))
+                    if res is None:
+                        break              # backpressure: head waits
+                    sr.blocks, sr.shared_tokens, sr.cow_src = res
+                    sr.pf_start = (sr.shared_tokens // self.block_size
+                                   ) * self.block_size
+                    sr.ctx_len = sr.cur_prompt_len
+                    sr.pf_written = 0
                 self.preempted.pop(0)
                 sr.state = State.PREFILL
                 sr.row = self._free_rows.pop()
-                sr.blocks = got
-                if not sr.spilled:
-                    # Recompute path: the re-prefill rebuilds ctx from the
-                    # grown prompt.  Spilled records keep their cursors —
-                    # the engine restores ctx_len/n_out from the SpillEntry.
-                    sr.ctx_len = sr.cur_prompt_len
-                    sr.pf_written = 0
                 sr.admit_seq = self._admit_seq
                 self._admit_seq += 1
                 self.running[sr.row] = sr
@@ -294,26 +407,34 @@ class Scheduler:
                 continue
             if not self.arrived:
                 break
-            req = self.arrived[0]
+            idx = min(range(len(self.arrived)),
+                      key=lambda i: self._class_key(self.arrived[i]))
+            req = self.arrived[idx]
             total = self.total_blocks_for(req)
             init = blocks_for(req.prompt_len, self.block_size)
             if self.preemptive:
-                ok = self.allocator.free_blocks >= init
+                res = self._acquire_for_prompt(req.prompt, init)
+                if res is None:
+                    break                  # backpressure: head waits
+                blocks, t_s, cow_src = res
             else:
-                ok = self.allocator.free_blocks - self.outstanding >= total
-            if not ok:
-                break                      # backpressure: head waits (FCFS)
-            blocks = self.allocator.alloc(init)
-            assert blocks is not None      # free >= init just checked
+                if self.allocator.free_blocks - self.outstanding < total:
+                    break                  # backpressure: head waits
+                blocks = self.allocator.alloc(init)
+                assert blocks is not None  # free - outstanding >= total
+                t_s, cow_src = 0, -1
             sr = ScheduledRequest(
                 req=req, state=State.PREFILL, row=self._free_rows.pop(),
                 blocks=blocks, total_blocks=total, ctx_len=req.prompt_len,
-                admitted_step=now, admit_seq=self._admit_seq)
+                admitted_step=now, admit_seq=self._admit_seq,
+                shared_tokens=t_s,
+                pf_start=(t_s // self.block_size) * self.block_size,
+                cow_src=cow_src)
             self._admit_seq += 1
             if not self.preemptive:
                 self.outstanding += total - init
             self.running[sr.row] = sr
-            self.arrived.popleft()
+            del self.arrived[idx]
             admitted.append(sr)
         if self.metrics is not None:
             if admitted:
@@ -352,14 +473,16 @@ class Scheduler:
 
     def pick_victim(self,
                     exclude_rid: int | None = None) -> ScheduledRequest | None:
-        """The newest-admitted running request (FCFS-fair: the oldest
-        admission is never evicted by a younger one, so the head of the
-        line always makes progress)."""
+        """The lowest-priority-newest running request: the cheapest class
+        pays for pool pressure first, and within a class the newest
+        admission is evicted (FCFS-fair — the oldest admission is never
+        evicted by a younger peer, so the head of the line always makes
+        progress)."""
         cands = [sr for sr in self.running.values()
                  if sr.rid != exclude_rid]
         if not cands:
             return None
-        return max(cands, key=lambda s: s.admit_seq)
+        return max(cands, key=lambda s: (-s.req.priority, s.admit_seq))
 
     def preempt(self, sr: ScheduledRequest, now: int, *,
                 spill_blocks: int | None = None
@@ -389,6 +512,10 @@ class Scheduler:
         sr.state = State.WAITING
         sr.pf_written = 0
         sr.n_preempt += 1
+        sr.shared_tokens = 0
+        sr.pf_start = 0
+        sr.cow_src = -1
+        sr.cow_skip = False
         if spill_blocks is not None:
             sr.spilled = True
             sr.spill_blocks = spill_blocks
@@ -402,7 +529,7 @@ class Scheduler:
             else:
                 return False, None             # only preempted peers queued
         self.preempted.append(sr)
-        self.preempted.sort(key=lambda s: self._submit_seq[s.rid])
+        self.preempted.sort(key=self._class_key)
         return True, evicted
 
     # -------------------------------------------------------------- retire
@@ -446,6 +573,9 @@ class Scheduler:
                     "first_token_step": sr.first_token_step,
                     "admit_seq": sr.admit_seq, "n_preempt": sr.n_preempt,
                     "spilled": sr.spilled, "spill_blocks": sr.spill_blocks,
+                    "shared_tokens": sr.shared_tokens,
+                    "pf_start": sr.pf_start, "cow_src": sr.cow_src,
+                    "cow_skip": sr.cow_skip,
                     "has_resume": sr.resume_prompt is not None}
         return {"pending": [r.rid for r in self.pending],
                 "arrived": [r.rid for r in self.arrived],
@@ -478,7 +608,11 @@ class Scheduler:
                 first_token_step=int(d["first_token_step"]),
                 admit_seq=int(d["admit_seq"]),
                 n_preempt=int(d["n_preempt"]), spilled=bool(d["spilled"]),
-                spill_blocks=int(d["spill_blocks"]))
+                spill_blocks=int(d["spill_blocks"]),
+                shared_tokens=int(d.get("shared_tokens", 0)),
+                pf_start=int(d.get("pf_start", 0)),
+                cow_src=int(d.get("cow_src", -1)),
+                cow_skip=bool(d.get("cow_skip", False)))
             if d["has_resume"]:
                 sr.resume_prompt = np.asarray(
                     resume_prompts[d["rid"]], np.int32)

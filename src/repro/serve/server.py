@@ -202,6 +202,14 @@ class ContinuousEngine:
     blocks of ``block_size`` tokens.  Dense-attention archs only (same
     restriction as bucketed prefill; the int8 KV pool follows
     ``cfg.kv_cache_dtype``).
+
+    With ``prefix_cache=True`` (requires a preemptive mode) the pool is
+    content-addressable: full prompt blocks are indexed by a chained
+    token hash, admissions map the longest cached prefix at refcount+1
+    and prefill only the unique suffix, an exact-full-prompt hit
+    copy-on-writes the shared tail block, and ``Request.priority``
+    classes steer both admission order and victim selection.  Token
+    streams are bit-identical to the uncached engine.
     """
 
     def __init__(self, params, cfg, *, plan=None, mode=None,
@@ -215,6 +223,7 @@ class ContinuousEngine:
                  chunked_prefill: bool = False,
                  prefill_chunk: int | None = None,
                  preemption: str = "recompute",
+                 prefix_cache: bool = False,
                  max_queue: int | None = None,
                  debug_invariants: bool = False,
                  telemetry=None,
@@ -261,6 +270,13 @@ class ContinuousEngine:
         self.segment_len = segment_len
         self.chunked_prefill = chunked_prefill
         self.preemption = preemption
+        if prefix_cache and preemption == "off":
+            raise ValueError(
+                "prefix_cache requires a preemptive mode ('recompute' or "
+                "'page_out'): reservation admission sizes every request "
+                "for its worst case, so shared blocks would break the "
+                "free-list accounting")
+        self.prefix_cache = bool(prefix_cache)
         self.max_queue = max_queue
         self.debug_invariants = debug_invariants
         self._int8_pool = getattr(cfg, "kv_cache_dtype", "bf16") == "int8"
@@ -414,6 +430,42 @@ class ContinuousEngine:
         self._fn_cache[key] = fn
         return fn
 
+    def _suffix_prefill_fn(self, plan, greedy: bool, chunk: int,
+                           table_w: int, skip_write: bool):
+        """Jitted B=1 suffix prefill + first-sample for a prefix-cache hit
+        on the blocking path: the shared prompt blocks are already mapped
+        into the row's table, so only the unique suffix (block-aligned
+        start ``pos``, ``n_tok`` real tokens inside a pow2-bucketed
+        ``chunk``) runs through ``prefill_chunk`` with past-page reads
+        enabled.  First-token sampling folds the same (key, rid, step)
+        triple as a full prefill.
+
+        ``skip_write`` (exact-full-prompt hit): the CoW page copy already
+        placed byte-exact K/V for every suffix position in the dst block,
+        so the chunk computes logits from its in-flight K/V but masks the
+        page writes — rewriting would replace exact bytes with
+        reduction-order-noisy ones, which the int8 quantizer amplifies
+        into token flips."""
+        key = ("cb_suffix", plan, greedy, chunk, table_w, skip_write)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        cfg = self.cfg
+        sample = self.engine.make_sample(plan, greedy)
+
+        def f(params, pages, tokens, pos, n_tok, block_table, rid, rng, t0,
+              temperature):
+            wm = jnp.asarray([not skip_write])
+            logits0, pages = model_lib.prefill_chunk(
+                params, tokens, cfg, pages=pages, block_tables=block_table,
+                pos=pos, n_tok=n_tok, write_mask=wm, has_past=True,
+                mode=plan)
+            tok0 = sample(logits0, rng, rid, t0, temperature)
+            return tok0, pages
+
+        fn = jax.jit(f)
+        self._fn_cache[key] = fn
+        return fn
+
     def _decode_loop(self, step, seg_len: int):
         """Shared decode-segment body: up to `seg_len` fused decode+sample
         steps over the whole batch, early-exiting when every row is done.
@@ -527,11 +579,14 @@ class ContinuousEngine:
                                  seg_len)
 
         def seg(params, pages, tables, pf_rows, pf_tables, pf_tok, pf_pos,
-                pf_cnt, pf_on, pf_fin, pf_t0, tok, n_out, lens, done, rids,
-                max_new, stops, poison, rng, temperature, pad_token):
+                pf_cnt, pf_on, pf_nw, pf_fin, pf_t0, tok, n_out, lens,
+                done, rids, max_new, stops, poison, rng, temperature,
+                pad_token):
+            # pf_nw: rows whose chunk span is a CoW-copied block holding
+            # byte-exact K/V already — compute logits, mask the write.
             logits0, pages = model_lib.prefill_chunk(
                 params, pf_tok, cfg, pages=pages, block_tables=pf_tables,
-                pos=pf_pos, n_tok=pf_cnt, write_mask=pf_on,
+                pos=pf_pos, n_tok=pf_cnt, write_mask=pf_on & ~pf_nw,
                 has_past=has_past, mode=plan)
             logits0 = jnp.where(poison[pf_rows][:, None], jnp.nan, logits0)
             ok0 = jnp.all(jnp.isfinite(logits0.astype(jnp.float32)),
@@ -625,6 +680,7 @@ class ContinuousEngine:
 
         sched = Scheduler(self.allocator, self.max_batch, self.block_size,
                           preemptive=self.preemption != "off",
+                          prefix_cache=self.prefix_cache,
                           max_queue=self.max_queue,
                           debug=self.debug_invariants,
                           metrics=self.metrics)
@@ -736,9 +792,11 @@ class ContinuousEngine:
                 max_new=int(rm["max_new"]),
                 arrival_step=int(rm["arrival_step"]),
                 stop_tokens=tuple(int(t) for t in rm["stop_tokens"]),
-                deadline_steps=rm["deadline_steps"])
+                deadline_steps=rm["deadline_steps"],
+                priority=int(rm.get("priority", 0)))
         sched = Scheduler(self.allocator, self.max_batch, self.block_size,
                           preemptive=self.preemption != "off",
+                          prefix_cache=self.prefix_cache,
                           max_queue=self.max_queue,
                           debug=self.debug_invariants,
                           metrics=self.metrics)
@@ -964,6 +1022,44 @@ class ContinuousEngine:
             if victim is sr:
                 return None
 
+    def _cow_writes(self, st: _RunState, sr: ScheduledRequest, start: int,
+                    end: int, now: int, tables: np.ndarray) -> Iterator[dict]:
+        """Copy-on-write guard for a segment's upcoming writes: any block
+        in sr's write span [start, end) still referenced elsewhere (a
+        sharer's table or the prefix index holding it live) gets a private
+        copy — alloc, device page copy, table swap, decref — BEFORE the
+        dispatch that would scribble on it.  Admission already un-shares
+        the only organically shared write target (the exact-hit tail), so
+        this normally never fires; it is what turns 'decode never corrupts
+        a sharer' from an argument into a checked property."""
+        bs = self.block_size
+        for i in range(start // bs,
+                       min(kv_pool.blocks_for(end, bs), len(sr.blocks))):
+            src = sr.blocks[i]
+            if self.allocator.refcount(src) <= 1:
+                continue
+            while True:
+                got = self.allocator.alloc(1)
+                if got is not None:
+                    break
+                victim = st.sched.pick_victim(exclude_rid=sr.rid)
+                if victim is None:
+                    raise RuntimeError(
+                        "copy-on-write guard: pool exhausted with no "
+                        f"victim (rid={sr.rid}, block={src})")
+                yield from self._preempt_one(st, victim, now)
+            dst = got[0]
+            tc = self.tracer.now()
+            self.pages = self._dispatch(
+                kv_pool.copy_block, self.pages, src, dst, name="cow_copy")
+            sr.blocks[i] = dst
+            tables[sr.row, i] = dst
+            self.allocator.free([src])
+            self.metrics.counter("serve_cow_copies_total").inc()
+            self.tracer.span(
+                "cow_copy", tc, self.tracer.now(), cat="pool",
+                args={"step": now, "rid": sr.rid, "src": src, "dst": dst})
+
     # ------------------------------------------------------------ main loop
 
     def _serve_loop(self, st: _RunState, faults) -> Iterator[dict]:
@@ -1053,6 +1149,11 @@ class ContinuousEngine:
                     self.allocator.unhide_all()
                 if acts.get("hide"):
                     self.allocator.hide_blocks(int(acts["hide"]))
+                if acts.get("flush"):
+                    # Drop every cached-free prefix entry: cache loss is
+                    # always correctness-neutral (future admissions just
+                    # miss), which is exactly what chaos should verify.
+                    self.allocator.drop_cached()
                 for rid in acts.get("cancel", ()):
                     self._cancel_req.add(rid)
                 poison_rids = set(acts.get("poison", ()))
@@ -1145,6 +1246,38 @@ class ContinuousEngine:
                 tables[row] = kv_pool.NULL_BLOCK
                 tables[row, :len(sr.blocks)] = sr.blocks
                 streams.setdefault(req.rid, ([], []))
+                had_cow = sr.cow_src >= 0
+                if had_cow:
+                    # Exact-hit copy-on-write: the scheduler mapped a fresh
+                    # dst block into the shared tail slot and decref'd the
+                    # src; copy the cached page NOW — dispatch order puts
+                    # this device copy ahead of any later prefill that
+                    # could recycle the src page.
+                    dst = sr.blocks[sr.pf_start // self.block_size]
+                    tc = self.tracer.now()
+                    self.pages = self._dispatch(
+                        kv_pool.copy_block, self.pages, sr.cow_src, dst,
+                        name="cow_copy")
+                    self.metrics.counter("serve_cow_copies_total").inc()
+                    self.tracer.span(
+                        "cow_copy", tc, self.tracer.now(), cat="pool",
+                        args={"step": now, "rid": req.rid,
+                              "src": sr.cow_src, "dst": dst})
+                    sr.cow_src = -1
+                if self.prefix_cache and not sr.spilled:
+                    if sr.shared_tokens > 0:
+                        self.metrics.counter(
+                            "serve_prefix_hits_total").inc()
+                        self.metrics.counter(
+                            "serve_prefix_hit_tokens_total").inc(
+                                sr.pf_start)
+                        self.tracer.request_point(
+                            req.rid, "prefix_hit", step=now,
+                            shared_tokens=sr.shared_tokens,
+                            suffix_start=sr.pf_start)
+                    else:
+                        self.metrics.counter(
+                            "serve_prefix_misses_total").inc()
                 if sr.spilled:
                     # Page-out restore: scatter the spilled KV bytes into
                     # the freshly allocated blocks, restore the host
@@ -1174,6 +1307,9 @@ class ContinuousEngine:
                               "bytes": entry.nbytes})
                     self.tracer.request_point(req.rid, "restore", step=now,
                                               row=row, n_out=sr.n_out)
+                    # The restored bytes are the original prefill's bytes:
+                    # re-index the prompt blocks for future sharers.
+                    self._register_prefix(sr, entry.ctx_len)
                     yield {"event": "admit", "rid": req.rid, "step": now,
                            "recompute": False, "restored": True}
                     continue
@@ -1192,9 +1328,12 @@ class ContinuousEngine:
                     # chunk by chunk inside the mixed segments; the row
                     # idles in the decode loop (done) until its final
                     # chunk samples the pending token.  Admission itself
-                    # dispatches nothing.
-                    sr.pf_written = 0
-                    sr.ctx_len = 0
+                    # dispatches nothing.  A prefix-cache hit seeds the
+                    # chunk cursor past the shared blocks (block-aligned),
+                    # so chunking starts at the unique suffix.
+                    sr.pf_written = sr.pf_start
+                    sr.ctx_len = sr.pf_start
+                    sr.cow_skip = had_cow
                     lens[row] = 0
                     done[row] = True
                     tok[row] = 0
@@ -1204,11 +1343,13 @@ class ContinuousEngine:
                     t0 = time.perf_counter()
                     ta = self.tracer.now()
                     pending_tok0.append(
-                        (sr, self._admit(sr, plan, greedy, rng, temp)))
+                        (sr, self._admit(sr, plan, greedy, rng, temp,
+                                         skip_write=had_cow)))
                     pf_wall += time.perf_counter() - t0
                     self.tracer.span(
                         "admit_prefill", ta, self.tracer.now(),
                         cat="prefill", args={"step": now, "rid": req.rid})
+                    self._register_prefix(sr, sr.cur_prompt_len)
                 yield {"event": "admit", "rid": req.rid, "step": now,
                        "recompute": sr.n_preempt > 0}
             if pending_tok0:
@@ -1240,6 +1381,12 @@ class ContinuousEngine:
                 stats["occupancy"])
             self.metrics.gauge("serve_pool_fragmentation").set(
                 stats["fragmentation"])
+            self.metrics.gauge("serve_pool_shared_blocks").set(
+                stats["shared"])
+            self.metrics.gauge("serve_pool_owned_blocks").set(
+                stats["owned"])
+            self.metrics.gauge("serve_pool_cached_blocks").set(
+                stats["cached"])
             self.metrics.gauge("serve_running").set(len(sched.running))
             if self.telemetry.enabled:
                 self.telemetry.occupancy_trace.append(
@@ -1250,7 +1397,9 @@ class ContinuousEngine:
                 self.tracer.counter(
                     "pool blocks", {"live": stats["live"],
                                     "free": stats["free"],
-                                    "hidden": stats["hidden"]},
+                                    "hidden": stats["hidden"],
+                                    "shared": stats["shared"],
+                                    "cached": stats["cached"]},
                     ts=ts_round)
                 self.tracer.counter(
                     "requests", {"running": len(sched.running),
@@ -1314,6 +1463,14 @@ class ContinuousEngine:
                         tables[sr.row,
                                n_have - len(new_blocks):n_have] = \
                             new_blocks
+                if self.prefix_cache:
+                    ws = (sr.pf_written
+                          if chunked and sr.state is State.PREFILL
+                          else int(lens[sr.row]))
+                    yield from self._cow_writes(st, sr, ws, span, now,
+                                                tables)
+                    if sched.running.get(sr.row) is not sr:
+                        continue           # self-preempted under pressure
                 w_need = max(w_need,
                              kv_pool.blocks_for(span, self.block_size))
 
@@ -1364,6 +1521,7 @@ class ContinuousEngine:
                 pf_pos = np.zeros(pb, np.int32)
                 pf_cnt = np.zeros(pb, np.int32)
                 pf_on = np.zeros(pb, bool)
+                pf_nw = np.zeros(pb, bool)
                 pf_fin = np.zeros(pb, bool)
                 pf_t0 = np.zeros(pb, np.int32)
                 for i, (row, sr, cnt, fin) in enumerate(pf_rows):
@@ -1373,6 +1531,7 @@ class ContinuousEngine:
                     pf_pos[i] = start
                     pf_cnt[i] = cnt
                     pf_on[i] = True
+                    pf_nw[i] = sr.cow_skip  # CoW dst already byte-exact
                     pf_fin[i] = fin
                     pf_t0[i] = sr.n_out     # >0: recompute re-admission
                 # The prologue's tables at their own tight width: just the
@@ -1391,9 +1550,9 @@ class ContinuousEngine:
                 t_seg = self.tracer.now()
                 outs = self._dispatch(
                     mixed_fn, self.params, self.pages, seg_tables, pf_idx,
-                    pf_tables, pf_tok, pf_pos, pf_cnt, pf_on, pf_fin,
-                    pf_t0, tok, n_out, lens, done, rids, max_new, stops,
-                    poison_v, rng, temp, pad, name="mixed_segment")
+                    pf_tables, pf_tok, pf_pos, pf_cnt, pf_on, pf_nw,
+                    pf_fin, pf_t0, tok, n_out, lens, done, rids, max_new,
+                    stops, poison_v, rng, temp, pad, name="mixed_segment")
                 self.metrics.counter("serve_prefill_chunks_total").inc(
                     len(pf_rows))
             else:
@@ -1437,9 +1596,15 @@ class ContinuousEngine:
             for row, sr, cnt, fin in pf_rows:
                 sr.pf_written += cnt
                 sr.ctx_len = sr.pf_written
+                sr.cow_skip = False        # write-skip covers one chunk
                 self.tracer.request_point(
                     sr.rid, "prefill_chunk", step=now, n_tok=cnt,
                     written=sr.pf_written, final=fin)
+                if fin and not failed[row]:
+                    # Index the prompt blocks only once the whole prompt
+                    # landed cleanly (a poisoned/NaN final chunk must not
+                    # publish pages future sharers would read).
+                    self._register_prefix(sr, sr.pf_written)
 
             for row, sr in list(sched.running.items()):
                 if chunked and sr.state is State.PREFILL \
@@ -1522,7 +1687,8 @@ class ContinuousEngine:
 
     # ---------------------------------------------------------------- admit
 
-    def _admit(self, sr: ScheduledRequest, plan, greedy, rng, temp):
+    def _admit(self, sr: ScheduledRequest, plan, greedy, rng, temp,
+               skip_write: bool = False):
         """Blocking-prefill admission: bucketed prompt forward packed into
         the pool + first-token sample (one jitted dispatch, cached per
         bucket).  A recompute re-admission prefills ``sr.cur_prompt``
@@ -1533,6 +1699,36 @@ class ContinuousEngine:
         a per-request ``int(tok0[0])`` sync."""
         req = sr.req
         prompt = sr.cur_prompt
+        if sr.pf_start > 0:
+            # Prefix-cache hit: the mapped shared blocks already hold
+            # positions [0, pf_start) (block-aligned), so only the unique
+            # suffix runs through prefill_chunk — TTFT scales with the
+            # suffix, not the prompt.  Same sampler fold as a full
+            # prefill: bit-identical first token.
+            s_len = sr.cur_prompt_len - sr.pf_start
+            cw = autotune.next_pow2(
+                kv_pool.blocks_for(s_len, self.block_size)) \
+                * self.block_size
+            tw_need = max(kv_pool.blocks_for(sr.cur_prompt_len,
+                                             self.block_size),
+                          len(sr.blocks))
+            tw = min(self.max_blocks_per_req,
+                     autotune.next_pow2(tw_need))
+            toks = np.zeros((1, cw), np.int32)
+            toks[0, :s_len] = prompt[sr.pf_start:]
+            table = np.zeros((1, tw), np.int32)
+            table[0, :len(sr.blocks)] = sr.blocks
+            fn = self._suffix_prefill_fn(plan, greedy, cw, tw, skip_write)
+            tok0, self.pages = self._dispatch(
+                fn, self.params, self.pages, jnp.asarray(toks),
+                jnp.asarray([sr.pf_start], jnp.int32),
+                jnp.asarray([s_len], jnp.int32), jnp.asarray(table),
+                jnp.asarray([req.rid], jnp.int32), rng,
+                jnp.asarray([sr.n_out], jnp.int32), temp,
+                name="suffix_prefill")
+            self.metrics.counter("serve_prefills_total").inc()
+            self.metrics.counter("serve_suffix_prefills_total").inc()
+            return tok0
         batch = self.engine.bucket(
             {"tokens": jnp.asarray(prompt[None, :])})
         bucket_len = int(batch["tokens"].shape[1])
@@ -1548,6 +1744,24 @@ class ContinuousEngine:
             jnp.asarray(sr.n_out, jnp.int32), temp, name="prefill")
         self.metrics.counter("serve_prefills_total").inc()
         return tok0
+
+    def _register_prefix(self, sr: ScheduledRequest, covered: int) -> None:
+        """Publish sr's fully-written ORIGINAL-prompt blocks in the
+        allocator's prefix index so later admissions can map them.  Caps
+        at the original prompt: a recompute re-admission's regenerated
+        suffix blocks hold this request's sampled history, not shareable
+        prompt content (and in int8 mode decode-written pages would not
+        be byte-identical to a prefill of the same tokens).  Existing
+        keys are left in place — first writer wins, sharers no-op."""
+        if not self.prefix_cache:
+            return
+        bs = self.block_size
+        n = min(int(covered), sr.req.prompt_len) // bs
+        if n <= 0:
+            return
+        prompt = np.asarray(sr.req.prompt)
+        for i, key in enumerate(kv_pool.prefix_keys(prompt[:n * bs], bs)):
+            self.allocator.register_prefix(sr.blocks[i], key)
 
 
 # ---------------------------------------------------------------------------
@@ -1577,6 +1791,11 @@ _RUN_METRIC_ATTRS = {
     "last_run_failed": "serve_failed_total",
     "last_run_max_concurrency": "serve_max_concurrency",
     "last_run_prefill_seconds": "serve_prefill_seconds_total",
+    "last_run_prefix_hits": "serve_prefix_hits_total",
+    "last_run_prefix_misses": "serve_prefix_misses_total",
+    "last_run_prefix_hit_tokens": "serve_prefix_hit_tokens_total",
+    "last_run_cow_copies": "serve_cow_copies_total",
+    "last_run_suffix_prefills": "serve_suffix_prefills_total",
 }
 
 

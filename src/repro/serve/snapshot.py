@@ -52,6 +52,7 @@ def _geometry(engine) -> dict:
         "chunked_prefill": engine.chunked_prefill,
         "prefill_chunk": engine.prefill_chunk,
         "preemption": engine.preemption,
+        "prefix_cache": getattr(engine, "prefix_cache", False),
     }
 
 
@@ -82,7 +83,8 @@ def save_snapshot(path, *, engine, state) -> str:
         reqs_meta.append({"rid": rid, "max_new": req.max_new,
                           "arrival_step": req.arrival_step,
                           "stop_tokens": [int(t) for t in req.stop_tokens],
-                          "deadline_steps": req.deadline_steps})
+                          "deadline_steps": req.deadline_steps,
+                          "priority": int(req.priority)})
         arrays[f"prompt_{rid}"] = np.asarray(req.prompt, np.int32)
     for sr in list(sched.running.values()) + list(sched.preempted):
         if sr.resume_prompt is not None:

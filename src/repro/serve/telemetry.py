@@ -362,6 +362,16 @@ SERVE_METRICS: tuple[tuple[str, str, bool, str], ...] = (
      "Scheduler admissions this run (fresh + recompute re-admits)"),
     ("serve_prefill_seconds_total", "counter", True,
      "Wall seconds spent in blocking admission prefill this run"),
+    ("serve_prefix_hits_total", "counter", True,
+     "Admissions that mapped >=1 cached prefix block this run"),
+    ("serve_prefix_misses_total", "counter", True,
+     "Admissions that found no cached prefix this run (prefix_cache on)"),
+    ("serve_prefix_hit_tokens_total", "counter", True,
+     "Prompt tokens served from cached blocks instead of prefill this run"),
+    ("serve_cow_copies_total", "counter", True,
+     "Shared blocks privatized by copy-on-write page copies this run"),
+    ("serve_suffix_prefills_total", "counter", True,
+     "Blocking admissions that prefilled only the unique suffix this run"),
     ("serve_max_concurrency", "gauge", True,
      "High-water mark of simultaneously running requests this run"),
     ("serve_queue_depth", "gauge", True,
@@ -372,6 +382,12 @@ SERVE_METRICS: tuple[tuple[str, str, bool, str], ...] = (
      "Live-block fraction of the KV pool (last scheduler round)"),
     ("serve_pool_fragmentation", "gauge", True,
      "Hole fraction of the KV pool live span (last scheduler round)"),
+    ("serve_pool_shared_blocks", "gauge", True,
+     "Pool blocks referenced by more than one table (last round)"),
+    ("serve_pool_owned_blocks", "gauge", True,
+     "Pool blocks exclusively owned, refcount == 1 (last round)"),
+    ("serve_pool_cached_blocks", "gauge", True,
+     "Free blocks whose prefix bytes remain revivable (last round)"),
     ("serve_ttft_seconds", "histogram", True,
      "Wall time-to-first-token: eligible for admission -> first sampled "
      "token harvested"),

@@ -1,5 +1,7 @@
 """Paged KV pool: allocator invariants, backpressure, defrag, and
 paged-vs-dense attention bit-exactness (fp and int8 pools)."""
+import dataclasses
+
 import hypothesis
 import hypothesis.strategies as st
 import jax
@@ -341,6 +343,274 @@ def test_preemptive_scheduler_random_ops_hold_invariants(seed):
         sched.finish(sr, now)
     alloc.check_invariants()
     assert alloc.free_blocks == alloc.capacity
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching: refcounts, content index, copy-on-write bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_prefix_keys_chain_properties():
+    """Chain keys cover the whole prefix: equal prompts give equal keys,
+    a divergence at block i changes keys i.. (and only those), and the
+    partial tail block never gets a key."""
+    bs = 4
+    a = np.arange(10, dtype=np.int64)            # 2 full blocks + tail of 2
+    b = a.copy()
+    ka, kb = kv_pool.prefix_keys(a, bs), kv_pool.prefix_keys(b, bs)
+    assert len(ka) == 2 and ka == kb             # deterministic, tail-free
+    c = a.copy()
+    c[5] = 999                                   # diverge inside block 1
+    kc = kv_pool.prefix_keys(c, bs)
+    assert kc[0] == ka[0] and kc[1] != ka[1]
+    d = a.copy()
+    d[0] = 999                                   # diverge inside block 0
+    kd = kv_pool.prefix_keys(d, bs)
+    assert kd[0] != ka[0] and kd[1] != ka[1]     # chaining: child differs too
+    assert kv_pool.prefix_keys(a[:3], bs) == []  # no full block, no keys
+
+
+def test_allocator_share_revive_and_cow_lifecycle():
+    """The full sharing arc: register -> match -> incref'd reuse ->
+    cached-free survival -> revival -> copy-on-write un-share, with the
+    refcount partition proven by check_invariants at each stage."""
+    alloc = kv_pool.BlockAllocator(9)
+    prompt = np.arange(8)
+    keys = kv_pool.prefix_keys(prompt, 4)        # 2 full blocks
+    t0 = alloc.alloc(2)
+    for b, k in zip(t0, keys):
+        assert alloc.register_prefix(b, k)
+    assert not alloc.register_prefix(t0[0], keys[0])   # first writer wins
+    # a second identical prompt shares both blocks at refcount 2
+    matched = alloc.match_prefix(keys)
+    assert matched == t0
+    alloc.acquire_cached(matched)                # incref path (live)
+    t1 = list(matched)
+    assert alloc.is_shared(t0[0]) and alloc.refcount(t0[1]) == 2
+    assert alloc.live_blocks == 2 and alloc.total_refs == 4
+    alloc.check_invariants(tables=[t0, t1])
+    # CoW: t1 wants to write into its tail block -> private copy
+    dst = alloc.alloc(1)[0]
+    t1[1] = dst                                  # engine: copy_block + swap
+    alloc.free([t0[1]])                          # decref the shared source
+    assert alloc.refcount(t0[1]) == 1 and alloc.refcount(dst) == 1
+    alloc.check_invariants(tables=[t0, t1])
+    # retire t0: its registered blocks go cached-free, still matchable
+    # (the CoW source kept the original prefix bytes — dst holds t1's copy)
+    alloc.free(t0)
+    assert alloc.match_prefix(keys) == t0        # block 0 live via t1
+    assert alloc.cached_blocks == 1              # block t0[1] free + indexed
+    alloc.check_invariants(tables=[t1])
+    # revival: a third identical prompt pulls the chain back — block 0 is
+    # an incref (t1 holds it), block 1 comes off the free list at ref 1
+    alloc.acquire_cached(t0)
+    assert alloc.refcount(t0[0]) == 2 and alloc.refcount(t0[1]) == 1
+    alloc.check_invariants(tables=[t1, t0])
+    alloc.free(t0)
+    alloc.free(t1)
+    alloc.check_invariants()
+    assert alloc.free_blocks == alloc.capacity
+
+
+def test_allocator_cache_invalidation_paths():
+    """Every way a cached-free entry can die: reallocation, hide_blocks,
+    drop_cached, and defrag — and that live entries survive defrag with
+    remapped ids."""
+    alloc = kv_pool.BlockAllocator(9)
+    keys = kv_pool.prefix_keys(np.arange(12), 4)
+    blocks = alloc.alloc(3)
+    for b, k in zip(blocks, keys):
+        alloc.register_prefix(b, k)
+    alloc.free(blocks)                           # all cached-free
+    assert alloc.cached_blocks == 3
+    # reallocation forgets: freed blocks append to the free tail, so draw
+    # down to the cached ids — the bytes belong to the new owner now
+    got = alloc.alloc(6)
+    assert blocks[0] in got and blocks[1] not in got
+    assert alloc.match_prefix(keys) == []        # chain broken at block 0
+    alloc.free(got)
+    # deeper keys can outlive shallower ones; match stops at first miss
+    assert alloc._hash_index.get(keys[1]) is not None
+    # drop_cached flushes what's left
+    assert alloc.drop_cached() == 2
+    assert alloc.cached_blocks == 0
+    alloc.check_invariants()
+    # hide_blocks forgets hidden cached-free bytes
+    blocks = alloc.alloc(1)
+    alloc.register_prefix(blocks[0], "k-hide")
+    alloc.free(blocks)
+    while alloc.cached_blocks:                   # hide until it's gone
+        assert alloc.hide_blocks(1) == 1
+        alloc.check_invariants()
+    assert alloc.match_prefix(["k-hide"]) == []
+    alloc.unhide_all()
+    # defrag: live registered blocks follow the remap, cached-free die
+    hole = alloc.alloc(2)
+    live = alloc.alloc(2)
+    alloc.register_prefix(live[0], "k-live")
+    alloc.register_prefix(hole[0], "k-cached")
+    alloc.free(hole)
+    remap = alloc.defrag()
+    new_id = remap.get(live[0], live[0])
+    assert alloc.match_prefix(["k-live"]) == [new_id]
+    assert alloc.match_prefix(["k-cached"]) == []
+    alloc.check_invariants(tables=[[remap.get(b, b) for b in live]])
+    alloc.free([remap.get(b, b) for b in live])
+
+
+def test_allocator_stats_and_state_roundtrip_with_sharing():
+    """stats() splits live into shared/owned and counts cached/refs; the
+    to_state/from_state round trip preserves refcounts and the prefix
+    index (and pre-refcount states load as all-exclusive)."""
+    alloc = kv_pool.BlockAllocator(9)
+    t0 = alloc.alloc(2)
+    alloc.register_prefix(t0[0], "s0")
+    alloc.register_prefix(t0[1], "s1")
+    alloc.incref(t0[0])                          # shared
+    extra = alloc.alloc(1)
+    alloc.register_prefix(extra[0], "s2")
+    alloc.free(extra)                            # cached-free
+    st = alloc.stats()
+    assert st["shared"] == 1 and st["owned"] == 1
+    assert st["cached"] == 1 and st["refs"] == 3
+    clone = kv_pool.BlockAllocator.from_state(alloc.to_state())
+    assert clone.refcount(t0[0]) == 2
+    assert clone.match_prefix(["s0", "s1"]) == t0
+    assert clone.match_prefix(["s2"]) == extra
+    assert list(clone._free) == list(alloc._free)
+    # legacy state: no refs/hashes -> exclusive ownership, empty index
+    legacy = {k: v for k, v in alloc.to_state().items()
+              if k not in ("refs", "hashes")}
+    old = kv_pool.BlockAllocator.from_state(legacy)
+    assert old.total_refs == old.live_blocks == 2
+    assert old.match_prefix(["s0"]) == []
+    with pytest.raises(ValueError):
+        alloc.incref(8)                          # non-live
+    with pytest.raises(ValueError):
+        alloc.register_prefix(8, "x")
+    with pytest.raises(ValueError):
+        alloc.acquire_cached([8])                # unregistered free block
+
+
+def test_check_invariants_catches_refcount_drift():
+    """The refcount partition check is loud: a table occurrence count
+    above OR below a block's refcount raises, as does a stray refcount."""
+    alloc = kv_pool.BlockAllocator(9)
+    t = alloc.alloc(2)
+    with pytest.raises(RuntimeError):            # 2 tables, refcount 1
+        alloc.check_invariants(tables=[t, t[:1]])
+    alloc.incref(t[0])
+    with pytest.raises(RuntimeError):            # refcount 2, 1 table
+        alloc.check_invariants(tables=[t])
+    alloc.check_invariants(tables=[t, t[:1]])    # balanced again
+    alloc._ref[7] = 1                            # ref without a live page
+    with pytest.raises(RuntimeError):
+        alloc.check_invariants()
+    del alloc._ref[7]
+    alloc._hash_index["ghost"] = 5               # one-way index entry
+    with pytest.raises(RuntimeError):
+        alloc.check_invariants()
+
+
+@hypothesis.given(seed=st.integers(0, 2**16))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_prefix_sharing_random_ops_hold_invariants(seed):
+    """Random admit-with-sharing / fork / CoW / decref / flush / hide /
+    defrag sequences against a small set of colliding prompts: the
+    refcount partition (table occurrences == refcount for every block)
+    holds after EVERY op, and the pool drains to full capacity."""
+    rnd = np.random.default_rng(seed)
+    bs = 4
+    alloc = kv_pool.BlockAllocator(int(rnd.integers(8, 24)))
+    # a handful of prompts sharing prefixes at various depths
+    base = rnd.integers(0, 1000, 16)
+    prompts = [base[:int(rnd.integers(4, 17))].copy() for _ in range(4)]
+    for p in prompts[2:]:
+        p[len(p) // 2:] = rnd.integers(0, 1000, len(p) - len(p) // 2)
+    tables: dict[int, list[int]] = {}
+    next_tid = 0
+
+    def admit():
+        nonlocal next_tid
+        prompt = prompts[int(rnd.integers(0, len(prompts)))]
+        keys = kv_pool.prefix_keys(prompt, bs)
+        need_total = kv_pool.blocks_for(len(prompt), bs)
+        matched = alloc.match_prefix(keys)[:need_total]
+        revive = sum(1 for b in matched if b not in alloc._live)
+        fresh_n = need_total - len(matched)
+        if alloc.free_blocks - revive < fresh_n:
+            return                               # honest backpressure
+        alloc.acquire_cached(matched)
+        fresh = alloc.alloc(fresh_n)
+        assert fresh is not None
+        table = list(matched) + fresh
+        for i, b in enumerate(fresh, start=len(matched)):
+            if i < len(keys):                    # full block: register
+                alloc.register_prefix(b, keys[i])
+        tables[next_tid] = table
+        next_tid += 1
+
+    for _ in range(60):
+        op = rnd.random()
+        if op < 0.35:
+            admit()
+        elif op < 0.5 and tables:                # decref/finish
+            alloc.free(tables.pop(int(rnd.choice(list(tables)))))
+        elif op < 0.6 and tables:                # fork: pure share
+            src = tables[int(rnd.choice(list(tables)))]
+            for b in src:
+                alloc.incref(b)
+            tables[next_tid] = list(src)
+            next_tid += 1
+        elif op < 0.7 and tables:                # CoW a shared block
+            tid = int(rnd.choice(list(tables)))
+            shared = [i for i, b in enumerate(tables[tid])
+                      if alloc.is_shared(b)]
+            if shared and alloc.free_blocks >= 1:
+                i = shared[int(rnd.integers(0, len(shared)))]
+                src = tables[tid][i]
+                dst = alloc.alloc(1)[0]          # engine: copy_block + swap
+                tables[tid][i] = dst
+                alloc.free([src])
+        elif op < 0.78:
+            alloc.drop_cached()
+        elif op < 0.86:
+            remap = alloc.defrag()
+            for t in tables.values():
+                t[:] = [remap.get(b, b) for b in t]
+        elif alloc.hidden_blocks:
+            alloc.unhide_all()
+        else:
+            alloc.hide_blocks(int(rnd.integers(1, 3)))
+        alloc.check_invariants(tables=list(tables.values()))
+        assert alloc.total_refs == sum(len(t) for t in tables.values())
+    alloc.unhide_all()
+    for t in tables.values():
+        alloc.free(t)
+    alloc.check_invariants()
+    assert alloc.free_blocks == alloc.capacity
+
+
+def test_copy_block_moves_exact_bytes_fp_and_int8():
+    """kv_pool.copy_block duplicates one pool page across every layer and
+    leaf — int8 pools copy codes AND scales byte-exactly."""
+    cfg = cfg_lib.reduced_config("qwen3-8b", n_layers=2)
+    for kv_dtype in ("bf16", "int8"):
+        c = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype) \
+            if hasattr(cfg, "kv_cache_dtype") else cfg
+        pages = kv_pool.init_pages(c, 6, 4, jnp.float32)
+        rnd = np.random.default_rng(0)
+
+        def fill(leaf):
+            return jnp.asarray(
+                rnd.integers(-100, 100, leaf.shape).astype(leaf.dtype)
+                if leaf.dtype == jnp.int8 else
+                rnd.normal(size=leaf.shape).astype(leaf.dtype))
+
+        pages = jax.tree.map(fill, pages)
+        before = jax.tree.map(lambda p: np.asarray(p[:, 2]), pages)
+        pages = kv_pool.copy_block(pages, 2, 4)
+        after_dst = jax.tree.map(lambda p: np.asarray(p[:, 4]), pages)
+        jax.tree.map(np.testing.assert_array_equal, before, after_dst)
 
 
 # ---------------------------------------------------------------------------
